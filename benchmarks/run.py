@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's metric:
+FID-proxy, reduction factor, acceleration, dominant-roofline seconds).
+Markdown reports land in benchmarks/artifacts/.
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        fig3_pretrained_init,
+        fig4_threshold,
+        roofline,
+        table1_monolithic_vs_ddm,
+        table2_resources,
+        table3_conversion,
+        table4_homo_vs_hetero,
+    )
+
+    modules = [
+        ("table2", table2_resources),
+        ("roofline", roofline),
+        ("table1", table1_monolithic_vs_ddm),
+        ("table3", table3_conversion),
+        ("table4", table4_homo_vs_hetero),
+        ("fig3", fig3_pretrained_init),
+        ("fig4", fig4_threshold),
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                print(",".join(str(x) for x in row))
+                sys.stdout.flush()
+        except Exception as e:  # keep the harness going
+            print(f"{name}_ERROR,0,{type(e).__name__}")
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

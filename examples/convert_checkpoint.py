@@ -1,0 +1,71 @@
+"""Checkpoint + objective conversion walkthrough (paper §2.6 / §8).
+
+Demonstrates the three conversion mechanisms:
+
+1. **Eq. 20** — pretrained ImageNet-DDPM DiT → text-conditioned FM expert
+   (transfer blocks/embeddings, re-init final layer, fresh text stack).
+2. **Eq. 21** — runtime timestep mapping round(999·t) into the pretrained
+   discrete embedding table.
+3. **Eqs. 22–25 + §8.3** — inference-time ε→velocity conversion with the
+   numerical safeguards, verified against the analytic identity on the
+   linear path (v = ε − x̂0).
+
+  PYTHONPATH=src python examples/convert_checkpoint.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ConversionConfig,
+    convert_checkpoint,
+    eps_to_velocity,
+    get_schedule,
+    to_ddpm_timestep,
+)
+from repro.models import dit as D
+from repro.models.config import dit_b2
+
+key = jax.random.PRNGKey(0)
+
+# --- 1) Eq. 20: architecture-level checkpoint conversion --------------------
+print("=== Eq. 20: ImageNet-DDPM checkpoint -> text-conditioned FM expert")
+src_cfg = dit_b2(use_text=False).reduced(latent_size=8)   # "ImageNet DiT"
+dst_cfg = dit_b2().reduced(latent_size=8)                 # text-conditioned
+pretrained = D.init(src_cfg, key)
+template = D.init(dst_cfg, jax.random.PRNGKey(1))
+params, report = convert_checkpoint(pretrained, template,
+                                    rng=jax.random.PRNGKey(2))
+for group, action in sorted(report.items()):
+    print(f"  {group:18s} -> {action}")
+x = jax.random.normal(key, (2, 8, 8, 4))
+out = D.apply(dst_cfg, params, x, jnp.array([0.3, 0.8]))
+print(f"  converted expert forward OK: {out.shape}, "
+      f"finite={bool(jnp.isfinite(out).all())}")
+
+# --- 2) Eq. 21: runtime timestep compatibility -------------------------------
+print("\n=== Eq. 21: continuous FM time -> discrete DiT table index")
+for t in (0.0, 0.123, 0.5, 1.0):
+    print(f"  t={t:5.3f} -> t_DiT={int(to_ddpm_timestep(jnp.array([t]))[0])}")
+
+# --- 3) ε→v conversion with safeguards ---------------------------------------
+print("\n=== Eqs. 22–25: schedule-aware ε→velocity conversion")
+lin, cos = get_schedule("linear"), get_schedule("cosine")
+x0 = jnp.clip(jax.random.normal(key, (4, 8, 8, 4)), -3, 3)
+eps = jax.random.normal(jax.random.PRNGKey(3), x0.shape)
+t = jnp.array([0.2, 0.5, 0.8, 0.99])
+for sch, name in ((lin, "linear"), (cos, "cosine")):
+    xt = sch.perturb(x0, eps, t)
+    v = eps_to_velocity(xt, eps, sch, t,
+                        ConversionConfig(velocity_scaling="none"))
+    if name == "linear":
+        err = float(jnp.max(jnp.abs(v - (eps - x0))[:3]))
+        print(f"  {name}: |v - (eps - x0)| = {err:.2e}  (Eq. 25 identity)")
+    else:
+        da, ds = sch.derivs(t)
+        print(f"  {name}: velocity norms per t: "
+              f"{[float(jnp.linalg.norm(v[i])) for i in range(4)]}")
+print("  safeguards: alpha_safe=max(alpha,0.01), x0 clamp ±20, "
+      "Eq. 31 dampening at t>0.85 (enable with velocity_scaling="
+      "'piecewise')")

@@ -1,0 +1,74 @@
+"""Quickstart: heterogeneous decentralized diffusion in ~60 lines.
+
+Trains TWO experts in complete isolation — one DDPM (ε-prediction, cosine
+schedule), one Flow Matching (velocity, linear path) — on disjoint semantic
+clusters, then samples with router-weighted fusion where the DDPM expert's
+predictions are unified into velocity space by the schedule-aware
+conversion (paper Fig. 2).  Runs in ~2 minutes on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import ExpertSpec, SamplerConfig, sample_ensemble
+from repro.data import SyntheticSpec, fit_clusters, sample_fid
+from repro.data.pipeline import ExpertDataStream, RouterDataStream
+from repro.models import dit as D
+from repro.models.config import dit_b2, router_b2
+from repro.training import AdamWConfig, ExpertTrainer, RouterTrainer
+
+STEPS, BATCH, K = 40, 32, 2
+
+# 1) cluster the corpus (stub-DINOv2 features + hierarchical k-means, §6.1)
+spec = SyntheticSpec(num_categories=K, latent_size=8, separation=3.0)
+clusters, _ = fit_clusters(spec, corpus_size=512, num_clusters=K, num_fine=64)
+
+# 2) train experts with HETEROGENEOUS objectives, in complete isolation
+cfg = dit_b2().reduced(latent_size=8)
+apply_fn = D.make_expert_apply(cfg)
+expert_params = []
+for cid, (objective, schedule) in enumerate([("ddpm", "cosine"),
+                                             ("fm", "linear")]):
+    trainer = ExpertTrainer(
+        apply_fn=apply_fn, objective=objective, schedule_name=schedule,
+        opt=AdamWConfig(learning_rate=3e-4, warmup_steps=5), ema_decay=0.8,
+    )
+    state = trainer.init_state(D.init(cfg, jax.random.PRNGKey(cid)))
+    stream = ExpertDataStream(spec, clusters, cluster_id=cid,
+                              batch_size=BATCH, seed=cid)
+    for i in range(STEPS):
+        state, m = trainer.train_step(
+            state, jax.random.fold_in(jax.random.PRNGKey(42), i),
+            stream.next_batch(i),
+        )
+    print(f"expert {cid} ({objective}/{schedule}) final loss "
+          f"{m['loss']:.4f}")
+    expert_params.append(state.ema)
+
+# 3) train the router (independently, on all clusters, §6.3)
+rcfg = router_b2(num_clusters=K).reduced(latent_size=8)
+rtrainer = RouterTrainer(apply_fn=lambda p, x, t: D.apply(rcfg, p, x, t),
+                         num_clusters=K)
+rstate = rtrainer.init_state(D.init(rcfg, jax.random.PRNGKey(9)))
+rstream = RouterDataStream(spec, clusters, batch_size=BATCH)
+for i in range(STEPS):
+    rstate, rm = rtrainer.train_step(
+        rstate, jax.random.fold_in(jax.random.PRNGKey(7), i),
+        rstream.next_batch(i),
+    )
+print(f"router acc {rm['acc']:.2f}")
+
+# 4) heterogeneous fusion sampling: ε→v conversion happens inside
+experts = [ExpertSpec("ddpm-expert", "ddpm", "cosine", apply_fn, 0),
+           ExpertSpec("fm-expert", "fm", "linear", apply_fn, 1)]
+samples = sample_ensemble(
+    jax.random.PRNGKey(0), experts, expert_params,
+    D.make_router_fn(rcfg, rstate.params), (64, 8, 8, 4),
+    config=SamplerConfig(num_steps=12, cfg_scale=1.0, strategy="topk",
+                         top_k=2),
+)
+print(f"samples {samples.shape}, "
+      f"FID-proxy {sample_fid(spec, np.asarray(samples)):.3f}, "
+      f"finite={bool(np.isfinite(np.asarray(samples)).all())}")

@@ -1,0 +1,56 @@
+"""Architecture config registry (``--arch <id>``).
+
+10 assigned architectures from the public pool + the paper's own DiT
+experts.  Every assigned config cites its source in ``CONFIG.source``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import DiTConfig, LMConfig, dit_b2, dit_xl2, router_b2
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+
+_ARCH_MODULES = {
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "mamba2-2.7b": "repro.configs.mamba2_2p7b",
+    "stablelm-1.6b": "repro.configs.stablelm_1p6b",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "internlm2-1.8b": "repro.configs.internlm2_1p8b",
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(_ARCH_MODULES)
+
+# Paper's own diffusion-expert architectures.
+DIT_CONFIGS = {
+    "dit-xl2": dit_xl2,
+    "dit-b2": dit_b2,
+    "router-b2": router_b2,
+}
+
+
+def get_config(arch: str) -> LMConfig:
+    if arch not in _ARCH_MODULES:
+        raise ValueError(
+            f"unknown arch {arch!r}; available: {sorted(_ARCH_MODULES)}"
+        )
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_dit_config(name: str, **kw) -> DiTConfig:
+    return DIT_CONFIGS[name](**kw)
+
+
+def all_configs() -> dict[str, LMConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "InputShape", "get_shape",
+    "get_config", "get_dit_config", "all_configs",
+]

@@ -1,0 +1,27 @@
+"""deepseek-coder-33b — dense llama-arch, GQA [arXiv:2401.14196]."""
+
+import jax.numpy as jnp
+
+from repro.models.config import LMConfig
+
+CONFIG = LMConfig(
+    name="deepseek-coder-33b",
+    arch_type="dense",
+    num_layers=62,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=19200,
+    vocab_size=32256,
+    rope_theta=100000.0,
+    # long_500k runs only under the documented sliding-window decode
+    # variant (DESIGN.md §Arch-applicability); window-less otherwise.
+    decode_window=8192,
+    param_dtype=jnp.bfloat16,
+    activation_dtype=jnp.bfloat16,
+    remat=True,
+    fsdp_params=True,
+    logits_chunk=512,
+    source="arXiv:2401.14196",
+)

@@ -1,0 +1,23 @@
+"""internlm2-1.8b — dense, GQA [arXiv:2403.17297]."""
+
+import jax.numpy as jnp
+
+from repro.models.config import LMConfig
+
+CONFIG = LMConfig(
+    name="internlm2-1.8b",
+    arch_type="dense",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92544,
+    decode_window=8192,        # long_500k SWA decode variant only
+    remat=True,
+    param_dtype=jnp.bfloat16,
+    activation_dtype=jnp.bfloat16,
+    logits_chunk=512,
+    source="arXiv:2403.17297",
+)

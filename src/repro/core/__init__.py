@@ -1,0 +1,63 @@
+"""Core library — the paper's primary contribution.
+
+Heterogeneous Decentralized Diffusion: isolated experts with mixed DDPM /
+Flow-Matching objectives, unified at inference via schedule-aware ε→v
+conversion and fused with a learned router.
+"""
+
+from repro.core.schedules import (
+    Schedule,
+    cosine_schedule,
+    get_schedule,
+    linear_schedule,
+    snr_matched_time,
+    to_ddpm_timestep,
+    from_ddpm_timestep,
+)
+from repro.core.objectives import (
+    DDPM,
+    FLOW_MATCHING,
+    Objective,
+    diffusion_loss,
+    get_objective,
+    sample_timesteps,
+    target_for,
+    w_eps,
+    w_v,
+    weight_ratio,
+)
+from repro.core.conversion import (
+    ConversionConfig,
+    convert_checkpoint,
+    eps_to_velocity,
+    predict_x0_from_eps,
+    unify_prediction,
+    velocity_scale,
+    velocity_to_x0,
+)
+from repro.core.fusion import (
+    ExpertSpec,
+    fuse_predictions,
+    prediction_conflict,
+    routing_weights,
+    select_topk,
+    threshold_router_weights,
+    unified_expert_velocities,
+)
+from repro.core.sampling import (
+    SamplerConfig,
+    cfg_combine,
+    sample_ddpm_ancestral,
+    sample_ensemble,
+    sample_single_expert,
+)
+from repro.core.clustering import (
+    ClusterModel,
+    cluster_balance,
+    cosine_assign,
+    hierarchical_kmeans,
+    kmeans,
+    partition_indices,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

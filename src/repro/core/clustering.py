@@ -1,0 +1,115 @@
+"""Two-stage hierarchical k-means on semantic features (paper §6.1).
+
+The paper extracts 1024-d DINOv2 [CLS] features and clusters in two stages:
+first into 1024 fine-grained groups with standard k-means, then groups the
+fine centroids into K=8 coarse clusters; every image is assigned to its
+nearest coarse cluster by cosine distance.
+
+Implemented in pure JAX so it runs on-device and shards over the data axis;
+on CPU the same code is the test/reference path.  The DINOv2 extractor is a
+stub (frozen random projection network) per the modality-frontend carve-out —
+see ``repro/data/features.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _normalize(x: Array, eps: float = 1e-8) -> Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+def cosine_assign(feats: Array, centroids: Array) -> Array:
+    """Nearest-centroid assignment under cosine distance."""
+    sims = _normalize(feats) @ _normalize(centroids).T
+    return jnp.argmax(sims, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_clusters", "iters"))
+def kmeans(
+    key: jax.Array, feats: Array, *, num_clusters: int, iters: int = 25
+) -> tuple[Array, Array]:
+    """Spherical (cosine) k-means.  Returns ``(centroids, assignment)``."""
+    n = feats.shape[0]
+    feats_n = _normalize(feats.astype(jnp.float32))
+    init_idx = jax.random.choice(key, n, (num_clusters,), replace=False)
+    centroids = feats_n[init_idx]
+
+    def step(centroids, _):
+        assign = cosine_assign(feats_n, centroids)
+        onehot = jax.nn.one_hot(assign, num_clusters, dtype=jnp.float32)
+        sums = onehot.T @ feats_n                        # (K, D)
+        counts = onehot.sum(axis=0)[:, None]
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centroids)
+        return _normalize(new), None
+
+    centroids, _ = jax.lax.scan(step, centroids, None, length=iters)
+    return centroids, cosine_assign(feats_n, centroids)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterModel:
+    """Fitted two-stage clustering: fine centroids + fine->coarse map."""
+
+    fine_centroids: np.ndarray      # (F, D)
+    coarse_centroids: np.ndarray    # (K, D)
+    fine_to_coarse: np.ndarray      # (F,)
+
+    @property
+    def num_clusters(self) -> int:
+        return self.coarse_centroids.shape[0]
+
+    def assign(self, feats: Array) -> Array:
+        """Assign features to coarse clusters via their nearest fine centroid."""
+        fine = cosine_assign(feats, jnp.asarray(self.fine_centroids))
+        return jnp.asarray(self.fine_to_coarse)[fine]
+
+    def assign_direct(self, feats: Array) -> Array:
+        """Direct nearest-coarse-centroid assignment (paper §6.1 last step)."""
+        return cosine_assign(feats, jnp.asarray(self.coarse_centroids))
+
+
+def hierarchical_kmeans(
+    key: jax.Array,
+    feats: Array,
+    *,
+    num_coarse: int = 8,
+    num_fine: int = 1024,
+    fine_iters: int = 25,
+    coarse_iters: int = 50,
+) -> ClusterModel:
+    """Paper §6.1 two-stage clustering.
+
+    ``num_fine`` is clipped to the dataset size for small (test) corpora.
+    """
+    n = feats.shape[0]
+    num_fine = int(min(num_fine, max(num_coarse, n // 4), n))
+    k1, k2 = jax.random.split(key)
+    fine_centroids, _ = kmeans(k1, feats, num_clusters=num_fine, iters=fine_iters)
+    coarse_centroids, fine_to_coarse = kmeans(
+        k2, fine_centroids, num_clusters=num_coarse, iters=coarse_iters
+    )
+    return ClusterModel(
+        fine_centroids=np.asarray(fine_centroids),
+        coarse_centroids=np.asarray(coarse_centroids),
+        fine_to_coarse=np.asarray(fine_to_coarse),
+    )
+
+
+def partition_indices(assignment: np.ndarray, num_clusters: int) -> list[np.ndarray]:
+    """Disjoint per-cluster index lists ``S_1..S_K`` (Fig. 6 data partition)."""
+    assignment = np.asarray(assignment)
+    return [np.nonzero(assignment == k)[0] for k in range(num_clusters)]
+
+
+def cluster_balance(assignment: np.ndarray, num_clusters: int) -> np.ndarray:
+    counts = np.bincount(np.asarray(assignment), minlength=num_clusters)
+    return counts / max(counts.sum(), 1)

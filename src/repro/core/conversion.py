@@ -1,0 +1,301 @@
+"""Schedule-aware ε→velocity conversion (paper §2.3, §8) and checkpoint
+conversion (paper §2.6).
+
+The inference-time conversion is the paper's central mechanism: it lets DDPM
+(ε-prediction) experts participate in a Flow-Matching-style ODE sampler
+without any retraining.
+
+Pipeline (Eqs. 22–25):
+
+1. ``x̂0 = (x_t - sigma_t * eps_theta) / alpha_safe``           (Eq. 23 + Eq. 29)
+2. clamp ``x̂0`` to a data-space-dependent range                 (Eq. 28)
+3. ``v = dalpha/dt * x̂0 + dsigma/dt * eps_theta``               (Eq. 24)
+4. adaptive velocity scaling at elevated noise levels            (Eq. 31)
+
+For the linear path (``alpha=1-t, sigma=t``) step 3 reduces to
+``v = eps - x̂0`` (Eq. 25), matching the FM target ``eps - x0``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import Schedule, _left_broadcast
+
+Array = jax.Array
+
+#: Eq. 28 — adaptive clamping ranges per representation space.
+CLAMP_RANGE = {"latent": 20.0, "pixel": 5.0}
+
+#: Eq. 29 — safe-division floor for alpha_t.
+ALPHA_SAFE_MIN = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ConversionConfig:
+    """Numerical-stability knobs from §8.3 / §6.2."""
+
+    data_space: Literal["latent", "pixel"] = "latent"
+    alpha_min: float = ALPHA_SAFE_MIN
+    #: 'analytic' uses closed-form schedule derivatives; 'fd' uses §8.3.3
+    #: central finite differences with h=1e-4.
+    derivative_mode: Literal["analytic", "fd"] = "analytic"
+    #: Eq. 31-style adaptive dampening. 'piecewise' is the §8.3.4 table,
+    #: 'sigmoid' is the §6.2 smooth variant, 'none' disables.
+    velocity_scaling: Literal["piecewise", "sigmoid", "none"] = "piecewise"
+
+    @property
+    def clamp(self) -> float:
+        return CLAMP_RANGE[self.data_space]
+
+
+def predict_x0_from_eps(
+    x_t: Array,
+    eps: Array,
+    schedule: Schedule,
+    t: Array,
+    cfg: ConversionConfig = ConversionConfig(),
+) -> Array:
+    """Eq. 23 with Eq. 28/29 safeguards."""
+    a, s = schedule.coeffs(t)
+    a_safe = jnp.maximum(a, cfg.alpha_min)
+    a_safe = _left_broadcast(a_safe, x_t.ndim)
+    s = _left_broadcast(s, x_t.ndim)
+    x0_hat = (x_t - s * eps) / a_safe
+    return jnp.clip(x0_hat, -cfg.clamp, cfg.clamp)
+
+
+def velocity_scale(t: Array, mode: str) -> Array:
+    """Eq. 31 (piecewise) or the §6.2 sigmoid dampening ``s(t)``."""
+    t = jnp.asarray(t, jnp.float32)
+    if mode == "none":
+        return jnp.ones_like(t)
+    if mode == "piecewise":
+        return jnp.where(t > 0.85, 0.88, jnp.where(t > 0.6, 0.93, 0.96))
+    if mode == "sigmoid":
+        # §6.2: s(t) = min(1, 15 / (1 + e^{10 (t - 0.85)})) applied for t>0.85.
+        s = jnp.minimum(1.0, 15.0 / (1.0 + jnp.exp(10.0 * (t - 0.85))))
+        return jnp.where(t > 0.85, s, jnp.ones_like(t))
+    raise ValueError(f"unknown velocity_scaling mode {mode!r}")
+
+
+def eps_to_velocity(
+    x_t: Array,
+    eps: Array,
+    schedule: Schedule,
+    t: Array,
+    cfg: ConversionConfig = ConversionConfig(),
+) -> Array:
+    """Full schedule-aware deterministic conversion (Eqs. 22–25 + §8.3).
+
+    Returns the data-to-noise velocity; sampling integrates
+    ``x_{t-dt} = x_t - v * dt`` from t=1 to t=0.
+    """
+    x0_hat = predict_x0_from_eps(x_t, eps, schedule, t, cfg)
+    if cfg.derivative_mode == "fd":
+        da, ds = schedule.fd_derivs(t)
+    else:
+        da, ds = schedule.derivs(t)
+    da = _left_broadcast(da, x_t.ndim)
+    ds = _left_broadcast(ds, x_t.ndim)
+    v = da * x0_hat + ds * eps
+    scale = _left_broadcast(velocity_scale(t, cfg.velocity_scaling), x_t.ndim)
+    return scale * v
+
+
+def velocity_to_x0(
+    x_t: Array, v: Array, schedule: Schedule, t: Array,
+    cfg: ConversionConfig = ConversionConfig(),
+) -> Array:
+    """Invert the velocity parameterization to an x0 estimate.
+
+    From ``x_t = a x0 + s eps`` and ``v = a' x0 + s' eps``:
+    ``x0 = (s' x_t - s v) / (s' a - s a')``.  For the linear path this is
+    ``x0 = x_t - t v``.  Used by the sampler's optional x0-clamping step and
+    by the diversity/FID proxies.
+    """
+    a, s = schedule.coeffs(t)
+    da, ds = schedule.derivs(t)
+    denom = ds * a - s * da
+    denom = jnp.where(jnp.abs(denom) < 1e-6, jnp.sign(denom) * 1e-6 + (denom == 0) * 1e-6, denom)
+    a, s, da, ds, denom = (
+        _left_broadcast(c, x_t.ndim) for c in (a, s, da, ds, denom)
+    )
+    x0 = (ds * x_t - s * v) / denom
+    return jnp.clip(x0, -cfg.clamp, cfg.clamp)
+
+
+def unify_prediction(
+    pred: Array,
+    x_t: Array,
+    t: Array,
+    *,
+    objective: str,
+    schedule: Schedule,
+    cfg: ConversionConfig = ConversionConfig(),
+) -> Array:
+    """Map an expert's native prediction into the common velocity space.
+
+    FM experts pass through (they already predict velocity); DDPM experts go
+    through :func:`eps_to_velocity`.  This is the per-expert arm of Fig. 2.
+    """
+    if objective == "fm":
+        return pred
+    if objective == "ddpm":
+        return eps_to_velocity(x_t, pred, schedule, t, cfg)
+    raise ValueError(f"unknown objective {objective!r}")
+
+
+def snr_rebased_velocity(
+    apply_fn,
+    params,
+    x_t: Array,
+    t: Array,
+    *,
+    objective: str,
+    expert_schedule: Schedule,
+    path_schedule: Schedule,
+    cond: dict | None = None,
+    cfg: ConversionConfig = ConversionConfig(),
+) -> Array:
+    """Beyond-paper (§5.ii): SNR-matched cross-schedule conversion.
+
+    The paper queries heterogeneous experts at the *same* native time
+    (identity time map) and stabilizes with clamps/dampening.  Matching
+    the noise level instead is exact for a perfect predictor:
+
+    1. solve ``t_e`` with ``SNR_expert(t_e) = SNR_path(t)``;
+    2. rescale ``x_in = x_t · s_e(t_e)/s_p(t)`` — by the SNR match this
+       equals ``a_e x0 + s_e ε`` with the *same* (x0, ε) decomposition;
+    3. query the expert at ``(x_in, t_e)`` in its native parameterization;
+    4. recover ``(x̂0, ε̂)`` in the expert frame and rebuild the velocity
+       along the sampling path: ``v = a'_p(t) x̂0 + s'_p(t) ε̂``.
+
+    No dampening heuristics needed away from the α→0 endpoint.
+    """
+    from repro.core.schedules import snr_matched_time
+
+    cond = cond or {}
+    t_e = snr_matched_time(path_schedule, expert_schedule, t)
+    s_p = jnp.maximum(path_schedule.sigma(t), 1e-6)
+    s_e = expert_schedule.sigma(t_e)
+    scale = _left_broadcast(s_e / s_p, x_t.ndim)
+    x_in = x_t * scale
+    pred = apply_fn(params, x_in, t_e, **cond)
+
+    a_e, s_e_b = (
+        _left_broadcast(c, x_t.ndim) for c in expert_schedule.coeffs(t_e)
+    )
+    if objective == "ddpm":
+        eps_hat = pred
+        x0_hat = jnp.clip(
+            (x_in - s_e_b * eps_hat) / jnp.maximum(a_e, cfg.alpha_min),
+            -cfg.clamp, cfg.clamp,
+        )
+    else:  # velocity in the expert frame -> invert to (x0, eps)
+        x0_hat = velocity_to_x0(x_in, pred, expert_schedule, t_e, cfg)
+        eps_hat = (x_in - a_e * x0_hat) / jnp.maximum(s_e_b, 1e-6)
+
+    da_p, ds_p = path_schedule.derivs(t)
+    da_p = _left_broadcast(da_p, x_t.ndim)
+    ds_p = _left_broadcast(ds_p, x_t.ndim)
+    return da_p * x0_hat + ds_p * eps_hat
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint conversion (paper §2.6, Eq. 20) — pretrained ImageNet-DDPM DiT
+# checkpoints initialize heterogeneous text-conditioned experts.
+# ---------------------------------------------------------------------------
+
+#: Eq. 20 transfer policy by top-level parameter group.
+TRANSFER = "transfer"          # copy pretrained weights
+REINIT = "reinit"              # N(0, 0.02)
+DROP = "drop"                  # remove (class embeddings)
+NEW = "new"                    # not in source checkpoint (text stack)
+
+CHECKPOINT_POLICY: dict[str, str] = {
+    "patch_embed": TRANSFER,
+    "pos_embed": TRANSFER,
+    "blocks": TRANSFER,
+    "t_embed": TRANSFER,          # timestep MLP kept (Eq. 21 runtime mapping)
+    "adaln_single": TRANSFER,
+    "final_layer": REINIT,
+    "text_proj": NEW,
+    "cross_attn": NEW,            # zero-init output proj handled by model init
+    "class_embed": DROP,
+    "null_text_embed": NEW,
+}
+
+REINIT_STD = 0.02
+
+
+def convert_checkpoint(
+    pretrained: dict,
+    target_template: dict,
+    *,
+    rng: jax.Array,
+    policy: dict[str, str] | None = None,
+) -> tuple[dict, dict[str, str]]:
+    """Apply the Eq. 20 conversion to a parameter pytree.
+
+    ``pretrained`` / ``target_template`` are dicts keyed by top-level group
+    (``patch_embed``, ``blocks``, ...) of arbitrary pytrees.  Groups present
+    in the template but absent from the policy default to:
+    transfer when shapes match, otherwise keep the template's fresh init.
+
+    Returns ``(params, report)`` where ``report`` maps group -> action taken.
+    """
+    policy = dict(CHECKPOINT_POLICY if policy is None else policy)
+    out: dict = {}
+    report: dict[str, str] = {}
+    keys = jax.random.split(rng, max(len(target_template), 1))
+    for i, (group, template) in enumerate(sorted(target_template.items())):
+        action = policy.get(group)
+        if action is None:
+            same = group in pretrained and _shapes_match(
+                pretrained[group], template
+            )
+            action = TRANSFER if same else NEW
+        if action == TRANSFER and group in pretrained and _shapes_match(
+            pretrained[group], template
+        ):
+            out[group] = jax.tree.map(
+                lambda src, dst: src.astype(dst.dtype),
+                pretrained[group],
+                template,
+            )
+            report[group] = TRANSFER
+        elif action == REINIT:
+            leaves, treedef = jax.tree.flatten(template)
+            sub = jax.random.split(keys[i], max(len(leaves), 1))
+            out[group] = jax.tree.unflatten(
+                treedef,
+                [
+                    (REINIT_STD * jax.random.normal(k, l.shape)).astype(l.dtype)
+                    for k, l in zip(sub, leaves)
+                ],
+            )
+            report[group] = REINIT
+        elif action == DROP:
+            report[group] = DROP
+            continue
+        else:
+            # NEW (or transfer-miss): keep the freshly initialized template.
+            out[group] = template
+            report[group] = NEW
+    # groups only in the source (e.g. class_embed) are dropped implicitly.
+    for group in pretrained:
+        if group not in target_template:
+            report.setdefault(group, DROP)
+    return out, report
+
+
+def _shapes_match(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(x.shape == y.shape for x, y in zip(la, lb))

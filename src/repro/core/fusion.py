@@ -1,0 +1,170 @@
+"""Heterogeneous expert fusion (paper Fig. 2, Eq. 1, §3.1 strategies).
+
+Given K experts with mixed objectives, fusion at a sampling step is:
+
+1. query each (selected) expert at ``(x_t, t, c)`` in its native
+   parameterization and timestep domain (Eq. 21),
+2. unify every prediction into velocity space (``conversion.unify_prediction``),
+3. combine with router weights ``p(k | x_t, t)`` (Eq. 1):
+   ``u_t(x_t) = sum_k p_t(k|x_t) v^(k)(x_t)``.
+
+Selection strategies (§3.1): ``top1`` routes to the argmax expert, ``topk``
+renormalizes over the K highest-probability experts, ``full`` uses all.
+The §3.3 two-expert *threshold* router deterministically switches experts at
+a native-time threshold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conversion import ConversionConfig, unify_prediction
+from repro.core.schedules import Schedule, get_schedule
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertSpec:
+    """Static description of one decentralized expert."""
+
+    name: str
+    objective: str                      # 'ddpm' | 'fm'
+    schedule: str                       # 'cosine' | 'linear'
+    apply_fn: Callable[..., Array]      # (params, x_t, t, **cond) -> pred
+    cluster_id: int = -1
+
+    def get_schedule(self) -> Schedule:
+        return get_schedule(self.schedule)
+
+
+def select_topk(probs: Array, k: int) -> tuple[Array, Array]:
+    """Top-K routing weights.
+
+    Args:
+      probs: ``(B, K)`` router posterior.
+      k: number of experts to keep.
+
+    Returns:
+      ``(weights, mask)`` both ``(B, K)``; weights renormalized over the
+      selected set (zero elsewhere).
+    """
+    B, K = probs.shape
+    k = min(k, K)
+    thresh = jax.lax.top_k(probs, k)[0][:, -1:]
+    mask = probs >= thresh
+    w = probs * mask
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-12)
+    return w, mask
+
+
+def routing_weights(probs: Array, strategy: str, k: int = 2) -> Array:
+    """Map the router posterior to fusion weights per §3.1."""
+    if strategy == "top1":
+        w, _ = select_topk(probs, 1)
+    elif strategy == "topk":
+        w, _ = select_topk(probs, k)
+    elif strategy == "full":
+        w = probs / jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-12)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return w
+
+
+def fuse_predictions(
+    preds: Array,
+    weights: Array,
+) -> Array:
+    """Eq. 1 — router-weighted combination of unified velocities.
+
+    Args:
+      preds: ``(K, B, ...)`` stacked per-expert velocity predictions.
+      weights: ``(B, K)`` fusion weights (rows sum to 1 over selected set).
+    """
+    K, B = preds.shape[0], preds.shape[1]
+    w = jnp.moveaxis(weights, -1, 0)                 # (K, B)
+    w = w.reshape((K, B) + (1,) * (preds.ndim - 2))
+    return jnp.sum(w * preds, axis=0)
+
+
+def unified_expert_velocities(
+    experts: Sequence[ExpertSpec],
+    params: Sequence,
+    x_t: Array,
+    t: Array,
+    cond: dict | None = None,
+    *,
+    conv_cfg: ConversionConfig = ConversionConfig(),
+    time_map: str = "identity",
+    path_schedule: Schedule | None = None,
+) -> Array:
+    """Query every expert and unify into velocity space -> ``(K, B, ...)``.
+
+    ``time_map='identity'`` is the paper's scheme (all experts queried at
+    the sampling path's native time, Fig. 2).  ``'snr_match'`` rebases
+    experts whose training schedule differs from the sampling path via the
+    SNR-matched conversion (beyond-paper, §5.ii).
+
+    All experts stay resident (decentralized serving); compute savings for
+    Top-K are realized by the serving engine batching only routed requests.
+    """
+    cond = cond or {}
+    path = path_schedule or get_schedule("linear")
+    outs = []
+    for spec, p in zip(experts, params):
+        sched = spec.get_schedule()
+        if time_map == "snr_match" and sched.name != path.name:
+            from repro.core.conversion import snr_rebased_velocity
+
+            v = snr_rebased_velocity(
+                spec.apply_fn, p, x_t, t,
+                objective=spec.objective,
+                expert_schedule=sched, path_schedule=path,
+                cond=cond, cfg=conv_cfg,
+            )
+        else:
+            pred = spec.apply_fn(p, x_t, t, **cond)
+            v = unify_prediction(
+                pred, x_t, t,
+                objective=spec.objective,
+                schedule=sched,
+                cfg=conv_cfg,
+            )
+        outs.append(v)
+    return jnp.stack(outs, axis=0)
+
+
+def threshold_router_weights(
+    t: Array, num_experts: int, *, threshold: float = 0.5,
+    low_noise_expert: int = 0, high_noise_expert: int = 1,
+) -> Array:
+    """§3.3.1 deterministic two-expert threshold router.
+
+    For native time ``t' <= threshold`` (low noise) use ``low_noise_expert``
+    (the converted-DDPM expert in the paper's study); for ``t' > threshold``
+    use ``high_noise_expert`` (FM).  Returns one-hot weights ``(B, K)``.
+    """
+    t = jnp.asarray(t)
+    b = t.shape[0] if t.ndim else 1
+    pick = jnp.where(t <= threshold, low_noise_expert, high_noise_expert)
+    pick = jnp.broadcast_to(pick, (b,))
+    return jax.nn.one_hot(pick, num_experts)
+
+
+def prediction_conflict(preds: Array, weights: Array) -> Array:
+    """Diagnostic from §7.5 — weighted variance of expert velocities.
+
+    High conflict explains the Full-ensemble FID regression (Table 1): when
+    experts disagree, averaging blurs.  Returns a scalar per batch element.
+    """
+    mean = fuse_predictions(preds, weights)
+    diff = preds - mean[None]
+    w = jnp.moveaxis(weights, -1, 0).reshape(
+        (preds.shape[0], preds.shape[1]) + (1,) * (preds.ndim - 2)
+    )
+    var = jnp.sum(w * diff * diff, axis=0)
+    return jnp.mean(var.reshape(var.shape[0], -1), axis=-1)

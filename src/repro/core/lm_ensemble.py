@@ -1,0 +1,156 @@
+"""Decentralized expert ensembling for the assigned LM architectures.
+
+DESIGN.md §4: the paper's ε/v objective heterogeneity has no analogue for
+autoregressive training, but its *decentralized-expert* half (the DDM part
+— cluster-partitioned isolated training + router-weighted fusion, Eq. 1)
+is backbone-agnostic.  This module applies it to the model zoo:
+
+* K LM experts of any ``--arch`` train in complete isolation on disjoint
+  corpus clusters (zero gradient/parameter/activation synchronization —
+  same invariant as the diffusion experts);
+* a lightweight prototype router assigns sequences to clusters from
+  bag-of-tokens statistics (the text-domain stand-in for DINOv2 k-means);
+* at inference, expert next-token *log-probabilities* are fused with
+  router weights — the Eq. 1 mixture, exact for a mixture-of-corpora
+  generative model:  p(x_{t+1} | x) = Σ_k p(k | x) p_k(x_{t+1} | x).
+
+Supports the same Top-1 / Top-K / Full strategies as the diffusion
+sampler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fusion import routing_weights
+from repro.models import zoo
+from repro.models.config import LMConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Prototype router over token statistics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPrototypeRouter:
+    """Nearest-prototype routing on normalized token histograms.
+
+    Fitted from per-cluster corpora; `posterior` returns softmax(-dist/τ),
+    a calibrated stand-in for the paper's learned DiT router.
+    """
+
+    prototypes: np.ndarray          # (K, V) normalized token frequencies
+    temperature: float = 0.05
+
+    @staticmethod
+    def _histogram(tokens: Array, vocab: int) -> Array:
+        onehot_counts = jnp.zeros((tokens.shape[0], vocab))
+        b = jnp.arange(tokens.shape[0])[:, None]
+        onehot_counts = onehot_counts.at[
+            jnp.broadcast_to(b, tokens.shape), tokens
+        ].add(1.0)
+        h = onehot_counts / jnp.maximum(
+            onehot_counts.sum(-1, keepdims=True), 1.0
+        )
+        return h / jnp.maximum(
+            jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-8
+        )
+
+    @classmethod
+    def fit(cls, corpora: Sequence[Array], vocab: int,
+            temperature: float = 0.05) -> "TokenPrototypeRouter":
+        protos = []
+        for tokens in corpora:
+            h = cls._histogram(tokens.reshape(1, -1), vocab)[0]
+            protos.append(np.asarray(h))
+        return cls(prototypes=np.stack(protos), temperature=temperature)
+
+    def posterior(self, tokens: Array) -> Array:
+        """(B, S) int tokens -> (B, K) routing posterior."""
+        vocab = self.prototypes.shape[1]
+        h = self._histogram(tokens, vocab)                   # (B, V)
+        sims = h @ jnp.asarray(self.prototypes).T            # (B, K)
+        return jax.nn.softmax(sims / self.temperature, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Ensemble
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LMExpertEnsemble:
+    """K isolated LM experts + router, fused in log-probability space."""
+
+    cfg: LMConfig
+    expert_params: list
+    router: TokenPrototypeRouter
+    strategy: str = "topk"
+    top_k: int = 2
+
+    def fused_logprobs(self, tokens: Array) -> Array:
+        """(B, S) -> (B, S, V) mixture log-probabilities (Eq. 1 in
+        probability space: log Σ_k w_k softmax(logits_k))."""
+        probs = self.router.posterior(tokens)                # (B, K)
+        w = routing_weights(probs, self.strategy, self.top_k)
+        logps = []
+        for p in self.expert_params:
+            logits, _ = zoo.forward_train(self.cfg, p, {"tokens": tokens})
+            logps.append(jax.nn.log_softmax(
+                logits.astype(jnp.float32), axis=-1))
+        stacked = jnp.stack(logps)                           # (K, B, S, V)
+        logw = jnp.log(jnp.maximum(w, 1e-12))                # (B, K)
+        logw = jnp.moveaxis(logw, -1, 0)[:, :, None, None]
+        return jax.nn.logsumexp(stacked + logw, axis=0)
+
+    def perplexity(self, tokens: Array, labels: Array) -> float:
+        lp = self.fused_logprobs(tokens)
+        picked = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+        return float(jnp.exp(-jnp.mean(picked)))
+
+    def decode_greedy(self, prompt: Array, steps: int) -> Array:
+        """Greedy continuation with router weights fixed from the prompt."""
+        probs = self.router.posterior(prompt)
+        w = routing_weights(probs, self.strategy, self.top_k)
+        logw = jnp.log(jnp.maximum(w, 1e-12))
+        b = prompt.shape[0]
+        caches = [zoo.make_cache(self.cfg, b, prompt.shape[1] + steps)
+                  for _ in self.expert_params]
+        # prefill each expert by replaying the prompt token-by-token
+        out = prompt
+        tok = prompt[:, :1]
+        for i in range(prompt.shape[1] + steps - 1):
+            pos = jnp.full((b,), i, jnp.int32)
+            logps = []
+            for e, p in enumerate(self.expert_params):
+                lg, caches[e] = zoo.decode_step(self.cfg, p, caches[e],
+                                                tok, pos)
+                logps.append(jax.nn.log_softmax(
+                    lg.astype(jnp.float32), -1))
+            fused = jax.nn.logsumexp(
+                jnp.stack(logps) + jnp.moveaxis(logw, -1, 0)[:, :, None],
+                axis=0,
+            )
+            if i + 1 < prompt.shape[1]:
+                tok = prompt[:, i + 1:i + 2]       # teacher-forced prefix
+            else:
+                tok = jnp.argmax(fused, -1).astype(jnp.int32)[:, None]
+                out = jnp.concatenate([out, tok], axis=1)
+        return out
+
+
+def expert_perplexity(cfg: LMConfig, params, tokens: Array,
+                      labels: Array) -> float:
+    """Single-expert perplexity (baseline for the ensemble comparison)."""
+    logits, _ = zoo.forward_train(cfg, params, {"tokens": tokens})
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    picked = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return float(jnp.exp(-jnp.mean(picked)))

@@ -1,0 +1,155 @@
+"""Training objectives for heterogeneous experts (paper §2.3, §2.4).
+
+Two objective families:
+
+* ``ddpm`` — ε-prediction (Eq. 3) under a cosine schedule,
+* ``fm``   — velocity prediction (Eq. 4) under the linear interpolation path,
+
+plus the Prop.-1 implicit timestep weights ``w_eps = alpha^2/sigma^2`` and
+``w_v = 1/sigma^2`` used by the analysis benchmarks, and the diffusion
+v-parameterization of Salimans & Ho (``v = alpha eps - sigma x0``) referenced
+in §2.4's notation remark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import Schedule, get_schedule, _left_broadcast
+
+Array = jax.Array
+
+# Objective identifiers (also used in configs / checkpoints metadata).
+DDPM = "ddpm"
+FLOW_MATCHING = "fm"
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """A diffusion objective = (prediction target, default schedule)."""
+
+    name: str
+    default_schedule: str
+
+    @property
+    def predicts(self) -> str:
+        return {"ddpm": "epsilon", "fm": "velocity"}[self.name]
+
+
+def get_objective(name: str) -> Objective:
+    if name == DDPM:
+        return Objective(name=DDPM, default_schedule="cosine")
+    if name == FLOW_MATCHING:
+        return Objective(name=FLOW_MATCHING, default_schedule="linear")
+    raise ValueError(f"unknown objective {name!r}")
+
+
+def target_for(
+    objective: str, schedule: Schedule, x0: Array, eps: Array, t: Array
+) -> Array:
+    """Regression target for the given objective.
+
+    * DDPM (Eq. 3): target is ``eps``.
+    * FM (Eq. 4): target is the path velocity.  For the linear path this is
+      ``eps - x0``; in general ``dalpha/dt * x0 + dsigma/dt * eps`` (the same
+      formula the §8.1 conversion uses, evaluated with the *true* x0/eps).
+    """
+    if objective == DDPM:
+        return eps
+    if objective == FLOW_MATCHING:
+        da, ds = schedule.derivs(t)
+        da = _left_broadcast(da, x0.ndim)
+        ds = _left_broadcast(ds, x0.ndim)
+        return da * x0 + ds * eps
+    raise ValueError(f"unknown objective {objective!r}")
+
+
+def mse_loss(pred: Array, target: Array) -> Array:
+    """Mean squared error over all non-batch axes, then batch mean."""
+    sq = jnp.square(pred.astype(jnp.float32) - target.astype(jnp.float32))
+    return jnp.mean(sq)
+
+
+def diffusion_loss(
+    apply_fn: Callable[..., Array],
+    params,
+    x0: Array,
+    eps: Array,
+    t: Array,
+    *,
+    objective: str,
+    schedule: Schedule,
+    cond: dict | None = None,
+) -> Array:
+    """Per-expert isolated loss (Eq. 3 / Eq. 4).
+
+    ``apply_fn(params, x_t, t, **cond)`` is the expert network; there is no
+    cross-expert term anywhere — decentralization is structural.
+    """
+    x_t = schedule.perturb(x0, eps, t)
+    pred = apply_fn(params, x_t, t, **(cond or {}))
+    target = target_for(objective, schedule, x0, eps, t)
+    return mse_loss(pred, target)
+
+
+# ---------------------------------------------------------------------------
+# Prop. 1 — implicit timestep weighting (paper §2.4).
+# ---------------------------------------------------------------------------
+
+
+def w_eps(schedule: Schedule, t: Array) -> Array:
+    """Eq. 9 — ε-prediction weight ``alpha^2 / sigma^2`` (== SNR)."""
+    a, s = schedule.coeffs(t)
+    return (a * a) / jnp.maximum(s * s, 1e-12)
+
+
+def w_v(schedule: Schedule, t: Array) -> Array:
+    """Eq. 10 — velocity-prediction weight ``1 / sigma^2``."""
+    _, s = schedule.coeffs(t)
+    return 1.0 / jnp.maximum(s * s, 1e-12)
+
+
+def weight_ratio(schedule: Schedule, t: Array) -> Array:
+    """Eq. 11 — ``w_v / w_eps = 1 / alpha^2`` (>= 1, diverges as t→1)."""
+    a, _ = schedule.coeffs(t)
+    return 1.0 / jnp.maximum(a * a, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Salimans–Ho v-parameterization (§2.4 notation remark; limitation iii).
+# ---------------------------------------------------------------------------
+
+
+def sh_v_target(schedule: Schedule, x0: Array, eps: Array, t: Array) -> Array:
+    """Diffusion v-param target ``v = alpha_t eps - sigma_t x0`` (VP only)."""
+    a, s = schedule.coeffs(t)
+    a = _left_broadcast(a, x0.ndim)
+    s = _left_broadcast(s, x0.ndim)
+    return a * eps - s * x0
+
+
+def sh_v_to_x0(schedule: Schedule, x_t: Array, v: Array, t: Array) -> Array:
+    """Under VP (``alpha^2+sigma^2=1``): ``x0 = alpha x_t - sigma v``."""
+    a, s = schedule.coeffs(t)
+    a = _left_broadcast(a, x_t.ndim)
+    s = _left_broadcast(s, x_t.ndim)
+    return a * x_t - s * v
+
+
+def sample_timesteps(
+    key: jax.Array, batch: int, *, objective: str, dtype=jnp.float32
+) -> Array:
+    """Uniform timestep sampling in each objective's native domain (§6.3).
+
+    DDPM experts: discrete ``t ~ U{0..999}``; FM experts ``t ~ U(0,1)``.
+    Both returned as *continuous* native time in [0, 1] plus the discrete
+    index for the embedding table (Eq. 21) is recovered downstream.
+    """
+    if objective == DDPM:
+        idx = jax.random.randint(key, (batch,), 0, 1000)
+        return idx.astype(dtype) / 999.0
+    return jax.random.uniform(key, (batch,), dtype=dtype)

@@ -1,0 +1,212 @@
+"""ODE sampling with heterogeneous expert fusion (paper Fig. 2, §3, §7).
+
+The unified sampler integrates the data-to-noise velocity *backwards*
+(t = 1 → 0) with Euler steps: ``x_{t-Δt} = x_t − v · Δt`` (Eq. 8 remark).
+All experts — DDPM or FM — contribute through the common velocity space.
+
+Also provided: classifier-free guidance (train-time drop prob 0.1, learned
+null embeddings — §2.5), the native DDPM ancestral sampler (Table 3 "Native
+DDPM" row), and the deterministic two-expert threshold sampler (§3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conversion import ConversionConfig
+from repro.core.fusion import (
+    ExpertSpec,
+    fuse_predictions,
+    routing_weights,
+    threshold_router_weights,
+    unified_expert_velocities,
+)
+from repro.core.schedules import get_schedule
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """Inference settings.  Paper defaults: aligned = (7.5, 50); conversion
+    study = (6.0, 75)."""
+
+    num_steps: int = 50
+    cfg_scale: float = 7.5
+    strategy: str = "topk"          # 'top1' | 'topk' | 'full' | 'threshold'
+    top_k: int = 2
+    threshold: float = 0.5          # for strategy='threshold'
+    conversion: ConversionConfig = ConversionConfig()
+    #: identity (paper) or snr_match (beyond-paper time alignment)
+    time_map: str = "identity"
+    #: §7.3 finding: ε→v conversion is only stable at low noise.  If > 0,
+    #: DDPM experts' routing weights are zeroed for t above this value
+    #: (renormalized over the remaining experts).
+    ddpm_low_noise_only: float = 0.0
+
+
+def cfg_combine(cond_pred: Array, uncond_pred: Array, scale: float) -> Array:
+    """Classifier-free guidance: ``u + s (c - u)``."""
+    return uncond_pred + scale * (cond_pred - uncond_pred)
+
+
+def _expert_velocities_with_cfg(
+    experts: Sequence[ExpertSpec],
+    params: Sequence,
+    x_t: Array,
+    t: Array,
+    cond: dict,
+    null_cond: dict | None,
+    cfg: SamplerConfig,
+) -> Array:
+    v_c = unified_expert_velocities(
+        experts, params, x_t, t, cond, conv_cfg=cfg.conversion,
+        time_map=cfg.time_map,
+    )
+    if null_cond is None or cfg.cfg_scale == 1.0:
+        return v_c
+    v_u = unified_expert_velocities(
+        experts, params, x_t, t, null_cond, conv_cfg=cfg.conversion,
+        time_map=cfg.time_map,
+    )
+    return cfg_combine(v_c, v_u, cfg.cfg_scale)
+
+
+def sample_ensemble(
+    key: jax.Array,
+    experts: Sequence[ExpertSpec],
+    params: Sequence,
+    router_fn: Callable[[Array, Array], Array] | None,
+    shape: tuple[int, ...],
+    *,
+    cond: dict | None = None,
+    null_cond: dict | None = None,
+    config: SamplerConfig = SamplerConfig(),
+) -> Array:
+    """Euler-ODE sampling with router-weighted heterogeneous fusion.
+
+    Args:
+      router_fn: ``(x_t, t) -> (B, K) posterior``; may be None only for
+        single-expert sampling or the threshold strategy.
+      shape: sample shape ``(B, ...)`` in latent space.
+
+    Returns samples at t=0 (clean latents).
+    """
+    cond = cond or {}
+    K = len(experts)
+    x = jax.random.normal(key, shape, dtype=jnp.float32)
+    ts = jnp.linspace(1.0, 0.0, config.num_steps + 1)
+
+    def step(x, i):
+        t_hi, t_lo = ts[i], ts[i + 1]
+        dt = t_hi - t_lo
+        tb = jnp.full((shape[0],), t_hi)
+        v = _expert_velocities_with_cfg(
+            experts, params, x, tb, cond, null_cond, config
+        )
+        if config.strategy == "threshold":
+            w = threshold_router_weights(tb, K, threshold=config.threshold)
+        else:
+            if router_fn is None:
+                if K != 1:
+                    raise ValueError("router_fn required for multi-expert fusion")
+                w = jnp.ones((shape[0], 1))
+            else:
+                probs = router_fn(x, tb)          # (B, num_clusters)
+                # Map cluster posterior -> per-expert probs via each
+                # expert's owned cluster (Eq. 1: p(k | x_t)).
+                cluster_ids = jnp.array(
+                    [max(e.cluster_id, 0) for e in experts]
+                )
+                if probs.shape[-1] != K or any(
+                    e.cluster_id not in (-1, i)
+                    for i, e in enumerate(experts)
+                ):
+                    probs = probs[:, cluster_ids]
+                    probs = probs / jnp.maximum(
+                        probs.sum(-1, keepdims=True), 1e-12
+                    )
+                w = routing_weights(probs, config.strategy, config.top_k)
+        if config.ddpm_low_noise_only > 0.0:
+            # §7.3: restrict converted-DDPM experts to low-noise steps.
+            is_ddpm = jnp.array([e.objective == "ddpm" for e in experts])
+            high_noise = tb > config.ddpm_low_noise_only        # (B,)
+            gate = jnp.where(
+                high_noise[:, None] & is_ddpm[None, :], 0.0, 1.0
+            )
+            w = w * gate
+            w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-12)
+        u = fuse_predictions(v, w)
+        return x - u * dt, None
+
+    x, _ = jax.lax.scan(step, x, jnp.arange(config.num_steps))
+    return x
+
+
+def sample_single_expert(
+    key: jax.Array,
+    expert: ExpertSpec,
+    params,
+    shape: tuple[int, ...],
+    *,
+    cond: dict | None = None,
+    null_cond: dict | None = None,
+    config: SamplerConfig = SamplerConfig(),
+) -> Array:
+    """Single-expert ODE sampling (Table 3 'FM' and 'DDPM→FM' rows)."""
+    return sample_ensemble(
+        key, [expert], [params], None, shape,
+        cond=cond, null_cond=null_cond,
+        config=dataclasses.replace(config, strategy="full"),
+    )
+
+
+def sample_ddpm_ancestral(
+    key: jax.Array,
+    apply_fn: Callable[..., Array],
+    params,
+    shape: tuple[int, ...],
+    *,
+    cond: dict | None = None,
+    null_cond: dict | None = None,
+    num_steps: int = 75,
+    cfg_scale: float = 6.0,
+    schedule_name: str = "cosine",
+) -> Array:
+    """Native DDPM ancestral sampler (Table 3 baseline row).
+
+    DDIM-style deterministic-σ=... we use the stochastic ancestral update
+    with the VP cosine schedule, operating on the discrete grid.
+    """
+    cond = cond or {}
+    sched = get_schedule(schedule_name)
+    ts = jnp.linspace(1.0, 0.0, num_steps + 1)
+    x = jax.random.normal(key, shape, dtype=jnp.float32)
+
+    def pred_eps(x, tb):
+        e_c = apply_fn(params, x, tb, **cond)
+        if null_cond is None or cfg_scale == 1.0:
+            return e_c
+        e_u = apply_fn(params, x, tb, **null_cond)
+        return cfg_combine(e_c, e_u, cfg_scale)
+
+    def step(carry, i):
+        x, key = carry
+        key, nk = jax.random.split(key)
+        t_hi, t_lo = ts[i], ts[i + 1]
+        tb = jnp.full((shape[0],), t_hi)
+        eps = pred_eps(x, tb)
+        a_hi, s_hi = sched.coeffs(t_hi)
+        a_lo, s_lo = sched.coeffs(t_lo)
+        x0 = (x - s_hi * eps) / jnp.maximum(a_hi, 0.01)
+        x0 = jnp.clip(x0, -20.0, 20.0)
+        # DDIM (eta=0) update on the continuous grid.
+        x_next = a_lo * x0 + s_lo * eps
+        return (x_next, key), None
+
+    (x, _), _ = jax.lax.scan(step, (x, key), jnp.arange(num_steps))
+    return x

@@ -1,0 +1,173 @@
+"""Noise schedules for diffusion / flow-matching experts.
+
+The paper (§2.3, §8.1) uses two schedule families:
+
+* **linear** (rectified-flow interpolation): ``alpha_t = 1 - t``,
+  ``sigma_t = t`` with continuous ``t in [0, 1]`` — used by Flow Matching
+  experts (Eq. 4).
+* **cosine**: ``alpha_t = cos(pi t / 2)``, ``sigma_t = sin(pi t / 2)`` —
+  used by DDPM experts (Eq. 26).  This is variance preserving
+  (``alpha^2 + sigma^2 = 1``).
+
+Every schedule exposes ``alpha/sigma`` and their *analytic* time
+derivatives, plus the paper's §8.3.3 central finite-difference fallback
+(``h = 1e-4``) used when a schedule has no closed-form derivative.
+
+Conventions (paper §2.3): ``t = 0`` is data, ``t = 1`` is noise, for both
+families.  Discrete DDPM timesteps are mapped through Eq. 21:
+``t_DiT = round(999 t)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: §8.3.3 — derivative epsilon for finite differences.
+FD_EPS = 1e-4
+
+#: Eq. 21 — size of the pretrained DiT timestep-embedding table.
+NUM_DDPM_TIMESTEPS = 1000
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A forward-process schedule ``x_t = alpha_t x0 + sigma_t eps``."""
+
+    name: str
+    alpha: Callable[[Array], Array]
+    sigma: Callable[[Array], Array]
+    dalpha: Callable[[Array], Array]
+    dsigma: Callable[[Array], Array]
+    #: True when ``alpha^2 + sigma^2 == 1`` for all t.
+    variance_preserving: bool = False
+
+    def coeffs(self, t: Array) -> tuple[Array, Array]:
+        return self.alpha(t), self.sigma(t)
+
+    def derivs(self, t: Array) -> tuple[Array, Array]:
+        return self.dalpha(t), self.dsigma(t)
+
+    def fd_derivs(self, t: Array, h: float = FD_EPS) -> tuple[Array, Array]:
+        """§8.3.3 central finite differences of the schedule coefficients."""
+        da = (self.alpha(t + h) - self.alpha(t - h)) / (2.0 * h)
+        ds = (self.sigma(t + h) - self.sigma(t - h)) / (2.0 * h)
+        return da, ds
+
+    def snr(self, t: Array) -> Array:
+        """Signal-to-noise ratio ``alpha^2 / sigma^2``."""
+        a, s = self.coeffs(t)
+        return (a * a) / jnp.maximum(s * s, 1e-12)
+
+    def perturb(self, x0: Array, eps: Array, t: Array) -> Array:
+        """Forward process ``x_t = alpha_t x0 + sigma_t eps`` (Eq. 22).
+
+        ``t`` broadcasts against leading axes of ``x0``.
+        """
+        a, s = self.coeffs(t)
+        a = _left_broadcast(a, x0.ndim)
+        s = _left_broadcast(s, x0.ndim)
+        return a * x0 + s * eps
+
+
+def _left_broadcast(c: Array, ndim: int) -> Array:
+    """Reshape a per-sample coefficient ``(B,)`` to ``(B, 1, ..., 1)``."""
+    c = jnp.asarray(c)
+    return c.reshape(c.shape + (1,) * (ndim - c.ndim))
+
+
+def linear_schedule() -> Schedule:
+    """Rectified-flow linear interpolation: ``x_t = (1-t) x0 + t eps``."""
+    return Schedule(
+        name="linear",
+        alpha=lambda t: 1.0 - t,
+        sigma=lambda t: jnp.asarray(t, jnp.result_type(t, 0.0)),
+        dalpha=lambda t: jnp.full_like(jnp.asarray(t, jnp.float32), -1.0),
+        dsigma=lambda t: jnp.full_like(jnp.asarray(t, jnp.float32), 1.0),
+        variance_preserving=False,
+    )
+
+
+def cosine_schedule() -> Schedule:
+    """Cosine VP schedule (Eq. 26/27)."""
+    half_pi = jnp.pi / 2.0
+    return Schedule(
+        name="cosine",
+        alpha=lambda t: jnp.cos(half_pi * t),
+        sigma=lambda t: jnp.sin(half_pi * t),
+        dalpha=lambda t: -half_pi * jnp.sin(half_pi * t),
+        dsigma=lambda t: half_pi * jnp.cos(half_pi * t),
+        variance_preserving=True,
+    )
+
+
+_REGISTRY: dict[str, Callable[[], Schedule]] = {
+    "linear": linear_schedule,
+    "cosine": cosine_schedule,
+}
+
+
+def get_schedule(name: str) -> Schedule:
+    try:
+        return _REGISTRY[name]()
+    except KeyError as e:  # pragma: no cover - config error
+        raise ValueError(
+            f"unknown schedule {name!r}; available: {sorted(_REGISTRY)}"
+        ) from e
+
+
+def register_schedule(name: str, factory: Callable[[], Schedule]) -> None:
+    """Extension hook (paper §5 limitation iii — more objective families)."""
+    _REGISTRY[name] = factory
+
+
+def to_ddpm_timestep(t: Array, num_timesteps: int = NUM_DDPM_TIMESTEPS) -> Array:
+    """Eq. 21 — map continuous ``t in [0,1]`` to the discrete DiT table index.
+
+    ``t_DiT = round(999 t)`` clipped to ``[0, 999]``.  Integer inputs are
+    assumed to already be table indices (DDPM experts) and pass through.
+    """
+    t = jnp.asarray(t)
+    if jnp.issubdtype(t.dtype, jnp.integer):
+        return jnp.clip(t, 0, num_timesteps - 1)
+    idx = jnp.round((num_timesteps - 1) * t)
+    return jnp.clip(idx, 0, num_timesteps - 1).astype(jnp.int32)
+
+
+def from_ddpm_timestep(idx: Array, num_timesteps: int = NUM_DDPM_TIMESTEPS) -> Array:
+    """Inverse of :func:`to_ddpm_timestep` (continuous grid point)."""
+    return jnp.asarray(idx, jnp.float32) / float(num_timesteps - 1)
+
+
+def snr_matched_time(
+    source: Schedule, target: Schedule, t: Array, *, iters: int = 40
+) -> Array:
+    """Find ``t'`` such that ``target.snr(t') == source.snr(t)``.
+
+    Beyond-paper utility: the paper queries heterogeneous experts at the
+    *same* native time (identity time map).  Matching the noise level
+    (log-SNR) between the sampling path's schedule and the expert's training
+    schedule is a more principled alignment; we expose it as an optional
+    ``time_map='snr_match'`` in the ensemble sampler.  Solved by bisection
+    (both families have monotone SNR in t).
+    """
+    want = jnp.log(source.snr(t) + 1e-20)
+
+    lo = jnp.zeros_like(jnp.asarray(t, jnp.float32))
+    hi = jnp.ones_like(lo)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        got = jnp.log(target.snr(mid) + 1e-20)
+        # SNR decreases with t: got > want -> need larger t.
+        go_right = got > want
+        return jnp.where(go_right, mid, lo), jnp.where(go_right, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)

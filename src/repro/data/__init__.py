@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    SyntheticSpec, sample_batch, category_stats, frechet_distance,
+    fit_gaussian, sample_fid, pairwise_diversity,
+)
+from repro.data.features import extract_features, FEATURE_DIM
+from repro.data.pipeline import (
+    ExpertDataStream, RouterDataStream, fit_clusters, lm_batch,
+)

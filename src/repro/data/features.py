@@ -1,0 +1,38 @@
+"""Stub DINOv2 feature extractor (modality-frontend carve-out).
+
+The paper extracts 1024-d [CLS] features from DINOv2-ViT-L/14.  Here the
+extractor is a frozen, deterministic 2-layer random-projection network over
+latents — it preserves the property that matters for the pipeline: images
+from the same semantic category land near each other in feature space, so
+hierarchical k-means recovers meaningful partitions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+FEATURE_DIM = 1024
+
+
+@functools.lru_cache(maxsize=4)
+def _frozen_weights(in_dim: int, seed: int = 7):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    hidden = 512
+    w1 = jax.random.normal(k1, (in_dim, hidden)) / jnp.sqrt(in_dim)
+    w2 = jax.random.normal(k2, (hidden, FEATURE_DIM)) / jnp.sqrt(hidden)
+    return w1, w2
+
+
+def extract_features(latents: Array, *, seed: int = 7) -> Array:
+    """(B, H, W, C) latents -> (B, 1024) unit-norm 'DINOv2' features."""
+    b = latents.shape[0]
+    x = latents.reshape(b, -1).astype(jnp.float32)
+    w1, w2 = _frozen_weights(x.shape[1], seed)
+    h = jnp.tanh(x @ w1)
+    f = h @ w2
+    return f / jnp.maximum(jnp.linalg.norm(f, axis=-1, keepdims=True), 1e-8)

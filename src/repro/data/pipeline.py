@@ -1,0 +1,120 @@
+"""Data pipeline: clustering-driven partitions + per-expert iterators.
+
+Mirrors the paper's Fig. 6 training pipeline:
+
+  corpus -> (stub) DINOv2 features -> hierarchical k-means -> K disjoint
+  partitions S_1..S_K -> one isolated iterator per expert.
+
+Expert iterators are *rejection-sampled* streams over the synthetic corpus
+conditioned on the expert's cluster — each expert only ever sees its own
+partition, structurally enforcing the zero-synchronization property.  The
+router iterator streams all clusters with ground-truth labels.
+
+Also provides token-LM batches for the assigned architectures (synthetic
+text corpus with a Zipfian unigram model — enough structure for loss-drop
+smoke training).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import ClusterModel, hierarchical_kmeans
+from repro.data.features import extract_features
+from repro.data.synthetic import SyntheticSpec, sample_batch
+
+Array = jax.Array
+
+
+def fit_clusters(
+    spec: SyntheticSpec, *, corpus_size: int = 4096, num_clusters: int = 8,
+    num_fine: int = 256, seed: int = 0,
+) -> tuple[ClusterModel, np.ndarray]:
+    """Fit the two-stage clustering on a corpus sample (paper §6.1)."""
+    key = jax.random.PRNGKey(seed)
+    batch = sample_batch(spec, key, corpus_size)
+    feats = extract_features(batch["latents"])
+    model = hierarchical_kmeans(
+        jax.random.PRNGKey(seed + 1), feats,
+        num_coarse=num_clusters, num_fine=num_fine,
+    )
+    assignment = np.asarray(model.assign(feats))
+    return model, assignment
+
+
+@dataclasses.dataclass
+class ExpertDataStream:
+    """Isolated per-expert stream: only samples assigned to cluster_id."""
+
+    spec: SyntheticSpec
+    cluster_model: ClusterModel
+    cluster_id: int
+    batch_size: int
+    seed: int = 0
+    oversample: int = 4
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.next_batch(step)
+            step += 1
+
+    def next_batch(self, step: int) -> dict:
+        """Rejection-sample a batch belonging to this expert's cluster."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        need = self.batch_size
+        pool = sample_batch(self.spec, key, need * self.oversample)
+        feats = extract_features(pool["latents"])
+        assign = np.asarray(self.cluster_model.assign(feats))
+        idx = np.nonzero(assign == self.cluster_id)[0]
+        if len(idx) < need:  # top up with wraparound (rare, tiny clusters)
+            idx = np.concatenate([idx, np.arange(need)])[:need]
+        else:
+            idx = idx[:need]
+        return {
+            "latents": pool["latents"][idx],
+            "text_emb": pool["text_emb"][idx],
+            "category": pool["category"][idx],
+        }
+
+
+@dataclasses.dataclass
+class RouterDataStream:
+    """Full-corpus stream with cluster labels (router trains on all data)."""
+
+    spec: SyntheticSpec
+    cluster_model: ClusterModel
+    batch_size: int
+    seed: int = 100
+
+    def next_batch(self, step: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        batch = sample_batch(self.spec, key, self.batch_size)
+        feats = extract_features(batch["latents"])
+        labels = self.cluster_model.assign(feats)
+        return {**batch, "cluster": jnp.asarray(labels)}
+
+
+# ---------------------------------------------------------------------------
+# Token batches for the assigned LM architectures
+# ---------------------------------------------------------------------------
+
+
+def lm_batch(
+    key: jax.Array, batch: int, seq_len: int, vocab: int
+) -> dict:
+    """Zipf-ish synthetic token batch with next-token labels."""
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, (batch, seq_len + 1), minval=1e-6)
+    # inverse-CDF of a truncated zipf(1.1)
+    ranks = jnp.floor(jnp.exp(u * jnp.log(float(vocab)))) - 1.0
+    tokens = jnp.clip(ranks.astype(jnp.int32), 0, vocab - 1)
+    mix = jax.random.randint(k2, tokens.shape, 0, vocab)
+    tokens = jnp.where(jax.random.bernoulli(k2, 0.1, tokens.shape),
+                       mix, tokens)
+    return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}

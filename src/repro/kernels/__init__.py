@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), oracle in
+ref.py, jit'd public wrapper + backend dispatch in ops.py.
+"""

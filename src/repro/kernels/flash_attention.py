@@ -1,0 +1,131 @@
+"""Flash attention Pallas TPU kernel.
+
+TPU adaptation of the attention hot-spot: online-softmax tiling with
+MXU-aligned blocks (q-block × kv-block, both multiples of 128 at full
+scale), fp32 accumulators in VMEM scratch, causal/sliding-window masking
+computed from block indices (whole kv-blocks beyond the causal frontier are
+skipped by masking; the grid itself stays rectangular for simplicity).
+
+Grid: (batch*heads, num_q_blocks, num_kv_blocks) with the kv axis
+innermost ('arbitrary' semantics — the carry lives in scratch).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, causal: bool, window: int, scale: float,
+    block_q: int, block_k: int, num_kv_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                     # (bk, d)
+    logits = q @ k.T * scale                             # (bq, bk)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window:
+        mask = mask & (qpos - kpos < window)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret",
+                     "softmax_scale"),
+)
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softmax_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """q/k/v: (B, H, S, D) -> (B, H, S, D).  MHA layout (GQA callers expand
+    kv heads before the call; the serving engine dedups via the wrapper in
+    ops.py)."""
+    b, h, s, d = q.shape
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq = s // block_q
+    nk = s // block_k
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

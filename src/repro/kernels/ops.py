@@ -1,0 +1,128 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU backends the compiled Pallas kernels run natively;
+elsewhere (this CPU container, unit tests) the same kernel bodies execute
+under ``interpret=True``, and callers that need speed on CPU use the
+pure-jnp reference paths in the model code.  ``use_pallas()`` is the single
+switch, overridable via REPRO_FORCE_PALLAS=0/1.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conversion import ConversionConfig, velocity_scale
+from repro.core.schedules import Schedule
+from repro.kernels import ref as _ref
+from repro.kernels.adaln_fuse import adaln_fuse as _adaln_fuse
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.hetero_fuse import hetero_fuse as _hetero_fuse
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+Array = jax.Array
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_pallas() -> bool:
+    env = os.environ.get("REPRO_FORCE_PALLAS")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return on_tpu()
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+# --- flash attention -------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, **kw):
+    """(B, H, S, D) attention.  Pallas on TPU, interpret elsewhere."""
+    if use_pallas():
+        return _flash(q, k, v, causal=causal, window=window,
+                      interpret=_interpret(), **kw)
+    return _ref.ref_flash_attention(q, k, v, causal=causal, window=window)
+
+
+def flash_attention_gqa(q, k, v, *, causal=True, window=0, **kw):
+    """GQA front-end: q (B, Hq, S, D), k/v (B, Hkv, S, D)."""
+    hq, hkv = q.shape[1], k.shape[1]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    return flash_attention(q, k, v, causal=causal, window=window, **kw)
+
+
+# --- SSD scan ---------------------------------------------------------------
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk=128, **kw):
+    """(B, H, S, P) Mamba2 scan.  Pallas on TPU, interpret elsewhere."""
+    if use_pallas():
+        return _ssd_scan(x, dt, A, B, C, chunk=chunk,
+                         interpret=_interpret(), **kw)
+    return _ref.ref_ssd_scan(
+        jnp.swapaxes(x, 1, 2), jnp.swapaxes(dt, 1, 2), A, B, C
+    )[0].swapaxes(1, 2), None
+
+
+# --- AdaLN fuse --------------------------------------------------------------
+
+
+def adaln_modulate(x, gamma, beta, *, eps=1e-6, **kw):
+    if use_pallas():
+        return _adaln_fuse(x, gamma, beta, eps=eps,
+                           interpret=_interpret(), **kw)
+    return _ref.ref_adaln_fuse(x, gamma, beta, eps=eps)
+
+
+# --- hetero fuse -------------------------------------------------------------
+
+
+def fused_convert_and_fuse(
+    preds: Array,             # (K, B, *latent) native predictions
+    x_t: Array,               # (B, *latent)
+    weights: Array,           # (B, K)
+    objectives: list[str],    # per-expert 'ddpm' | 'fm'
+    schedules: list[Schedule],
+    t: Array,                 # (B,) native time
+    conv: ConversionConfig = ConversionConfig(),
+) -> Array:
+    """High-level entry: computes per-expert schedule coefficients on host
+    trace, then runs the fused kernel (or its oracle) over flattened
+    latents.  This is the per-step fusion op of Fig. 2."""
+    k, b = preds.shape[0], preds.shape[1]
+    latent_shape = preds.shape[2:]
+    tsize = 1
+    for s in latent_shape:
+        tsize *= s
+
+    alpha = jnp.stack([s.alpha(t) for s in schedules])        # (K, B)
+    sigma = jnp.stack([s.sigma(t) for s in schedules])
+    if conv.derivative_mode == "fd":
+        d = [s.fd_derivs(t) for s in schedules]
+    else:
+        d = [s.derivs(t) for s in schedules]
+    dalpha = jnp.stack([x[0] for x in d])
+    dsigma = jnp.stack([x[1] for x in d])
+    is_ddpm = jnp.array([o == "ddpm" for o in objectives])
+    vs = velocity_scale(t, conv.velocity_scaling)             # (B,)
+    vscale = jnp.where(is_ddpm[:, None], vs[None], 1.0)
+
+    pf = preds.reshape(k, b, tsize)
+    xf = x_t.reshape(b, tsize)
+    args = (pf, xf, weights, is_ddpm, alpha, sigma, dalpha, dsigma, vscale)
+    kwargs = dict(clamp=conv.clamp, alpha_min=conv.alpha_min)
+    if use_pallas():
+        out = _hetero_fuse(*args, interpret=_interpret(), **kwargs)
+    else:
+        out = _ref.ref_hetero_fuse(*args, **kwargs)
+    return out.reshape((b,) + latent_shape)

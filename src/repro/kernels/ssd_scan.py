@@ -1,0 +1,132 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the Mamba2 GPU kernel: instead of a warp-level scan, the
+chunk recurrence is phrased as MXU matmuls (intra-chunk (q×q) masked
+score matmul + inter-chunk state carry), with the running state held in a
+VMEM scratch across the chunk axis of the grid (innermost, 'arbitrary'
+semantics).
+
+Grid: (batch, head_blocks, num_chunks).
+Blocks: x (1, hb, q, P), dt (1, hb, q), B/C (1, q, N) shared across heads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref,
+    y_ref, state_out_ref,
+    state_scr,
+    *, chunk: int, num_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)           # (hb, q, P)
+    dt = dt_ref[0].astype(jnp.float32)         # (hb, q)
+    A = a_ref[...].astype(jnp.float32)         # (hb,)
+    B = b_ref[0].astype(jnp.float32)           # (q, N)
+    C = c_ref[0].astype(jnp.float32)           # (q, N)
+    state = state_scr[...]                     # (hb, P, N)
+
+    a = dt * A[:, None]                        # (hb, q) log-decay
+    cum = jnp.cumsum(a, axis=1)
+    seg = cum[:, :, None] - cum[:, None, :]    # (hb, q, q)
+    tril = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tril[None], jnp.exp(seg), 0.0)
+
+    CB = C @ B.T                               # (q, q)
+    scores = CB[None] * L                      # (hb, q, q)
+    xdt = x * dt[..., None]                    # (hb, q, P)
+    y_intra = jax.lax.dot_general(
+        scores, xdt,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+    )                                          # (hb, q, P)
+
+    # inter-chunk: y[h,i,p] += exp(cum[h,i]) * sum_n C[i,n] state[h,p,n]
+    cs = jax.lax.dot_general(
+        state, C,
+        dimension_numbers=(((2,), (1,)), ((), ())),
+    )                                          # (hb, P, q)
+    y_inter = jnp.swapaxes(cs, 1, 2) * jnp.exp(cum)[..., None]
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: S <- exp(sum a) S + sum_j decay_end_j dt_j x_j ⊗ B_j
+    decay_end = jnp.exp(cum[:, -1:] - cum)     # (hb, q)
+    w = dt * decay_end                         # (hb, q)
+    upd = jax.lax.dot_general(
+        jnp.swapaxes(x * w[..., None], 1, 2),  # (hb, P, q)
+        B,                                     # (q, N)
+        dimension_numbers=(((2,), (0,)), ((), ())),
+    )                                          # (hb, P, N)
+    state_scr[...] = jnp.exp(cum[:, -1])[:, None, None] * state + upd
+
+    @pl.when(ci == num_chunks - 1)
+    def _finalize():
+        state_out_ref[0] = state_scr[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "head_block", "interpret")
+)
+def ssd_scan(
+    x: Array,       # (B, H, S, P)
+    dt: Array,      # (B, H, S)
+    A: Array,       # (H,)
+    B: Array,       # (B, S, N)
+    C: Array,       # (B, S, N)
+    *,
+    chunk: int = 128,
+    head_block: int = 8,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Returns (y (B, H, S, P), final_state (B, H, P, N))."""
+    b, h, s, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    head_block = min(head_block, h)
+    assert s % chunk == 0 and h % head_block == 0
+    nc = s // chunk
+    nh = h // head_block
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, head_block, chunk, p),
+                         lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, head_block, chunk),
+                         lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((head_block,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, head_block, chunk, p),
+                         lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, head_block, p, n),
+                         lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((head_block, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, state

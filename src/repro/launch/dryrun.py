@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+The two lines above MUST stay first (before any jax-importing module):
+jax locks the device count at first init, and only the dry-run wants 512
+placeholder host devices.
+
+For each (arch, shape, mesh):
+  * build the step fn (train_step / prefill / serve_step),
+  * jit with explicit in/out shardings from launch.sharding,
+  * .lower(**ShapeDtypeStruct specs)  — no allocation,
+  * .compile()                        — proves the distribution config,
+  * record memory_analysis / cost_analysis / collective schedule,
+  * derive the §Roofline terms.
+
+Results are written to benchmarks/artifacts/dryrun/*.json and summarized
+into EXPERIMENTS.md by benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 pairs
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, InputShape
+from repro.launch import steps as S
+from repro.launch.hlo_analysis import (
+    Roofline,
+    collective_bytes,
+    model_flops,
+)
+from repro.launch.hlo_cost import HloCostModel
+from repro.launch import fsdp
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    data_axes,
+    make_production_mesh,
+    mesh_devices,
+)
+from repro.launch.sharding import (
+    batch_specs,
+    cache_specs,
+    param_shardings,
+    param_specs,
+    to_shardings,
+)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+ART_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts",
+    "dryrun",
+)
+
+
+def _active_params(cfg, total: int) -> int:
+    """Active params per token (MoE uses top-k of E experts)."""
+    if not cfg.num_experts:
+        return total
+    expert = 3 * cfg.d_model * cfg.d_ff * cfg.num_layers
+    inactive = expert * (cfg.num_experts - cfg.num_experts_per_tok)
+    return total - inactive
+
+
+def dryrun_one(
+    arch: str, shape_name: str, *, multi_pod: bool = False,
+    save: bool = True, cfg_override=None, tag: str = "",
+) -> dict:
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = mesh_devices(mesh)
+    t0 = time.time()
+
+    p_shapes = S.param_shapes(cfg)
+    fsdp_on = bool(getattr(cfg, "fsdp_params", False))
+    p_shard = param_shardings(p_shapes, mesh, fsdp=fsdp_on)
+    if fsdp_on:
+        fsdp.install(mesh, param_specs(p_shapes, mesh, fsdp=True),
+                     data_axes(mesh))
+    else:
+        fsdp.clear()
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p_shapes))
+    specs = S.input_specs(cfg, shape)
+
+    with mesh:
+        if shape.kind == "train":
+            o_shapes = S.opt_shapes(cfg)
+            # optimizer state shards exactly like params (mu/nu), step repl.
+            ps = param_specs(p_shapes, mesh, fsdp=fsdp_on)
+            o_spec = type(o_shapes)(step=P(), mu=ps, nu=ps)
+            o_shard = to_shardings(mesh, o_spec)
+            b_spec = batch_specs(cfg, mesh, specs["batch"])
+            b_shard = to_shardings(mesh, b_spec)
+            step = S.make_train_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard,
+                               NamedSharding(mesh, P())),
+            )
+            lowered = jitted.lower(p_shapes, o_shapes, specs["batch"])
+        elif shape.kind == "prefill":
+            b_spec = batch_specs(cfg, mesh, specs["batch"])
+            b_shard = to_shardings(mesh, b_spec)
+            step = S.make_prefill_step(cfg)
+            jitted = jax.jit(
+                step, in_shardings=(p_shard, b_shard),
+            )
+            lowered = jitted.lower(p_shapes, specs["batch"])
+        else:
+            rcfg, cache_len = S.cfg_for_shape(cfg, shape)
+            c_spec = cache_specs(rcfg, mesh, specs["cache"],
+                                 shape.global_batch)
+            c_shard = to_shardings(mesh, c_spec)
+            tok_spec = batch_specs(cfg, mesh,
+                                   {"token": specs["token"],
+                                    "pos": specs["pos"]})
+            tok_shard = to_shardings(mesh, tok_spec)
+            step = S.make_serve_step(cfg, shape)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, tok_shard["token"],
+                              tok_shard["pos"]),
+            )
+            lowered = jitted.lower(
+                p_shapes, specs["cache"], specs["token"], specs["pos"]
+            )
+
+        compiled = lowered.compile()
+
+    fsdp.clear()
+    compile_s = time.time() - t0
+
+    # --- analyses ---
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception:  # CPU backend may not implement it
+        mem_info = {}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)          # flat (no trip counts) — raw log
+    model = HloCostModel(hlo)
+    totals = model.totals()               # trip-count-aware static model
+
+    flops_dev = totals.flops
+    bytes_dev = totals.hbm_bytes
+    roof = Roofline(
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collective_bytes_per_device=totals.collective_bytes,
+        peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW,
+    )
+    active = _active_params(cfg, n_params)
+    mflops = model_flops(cfg, shape, n_params, active)
+    mflops_dev = mflops / ndev
+    useful = mflops_dev / flops_dev if flops_dev else 0.0
+
+    # analytic per-device param/opt bytes (sanity vs memory_analysis)
+    pbytes = sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree.leaves(p_shapes)
+    )
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": ndev,
+        "params_total": n_params,
+        "params_active": active,
+        "compile_s": round(compile_s, 1),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": mem_info,
+        "collectives": {
+            "bytes_by_type": totals.collective_by_type,
+            "count_by_type": coll.count_by_type,        # static op counts
+            "total_wire_bytes": totals.collective_bytes,
+            "flat_wire_bytes": coll.total_wire_bytes,   # w/o trip counts
+        },
+        "roofline": roof.as_dict(),
+        "model_flops_total": mflops,
+        "model_flops_per_device": mflops_dev,
+        "useful_flops_ratio": useful,
+        "param_bytes_global": pbytes,
+        "param_bytes_per_device_est": pbytes / ndev,
+        "tag": tag,
+    }
+    if save:
+        os.makedirs(ART_DIR, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fn = os.path.join(
+            ART_DIR, f"{arch}_{shape_name}_{result['mesh']}{suffix}.json"
+        )
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    pairs: list[tuple[str, str]]
+    if args.all:
+        pairs = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in pairs:
+        try:
+            r = dryrun_one(arch, shape, multi_pod=args.multi_pod)
+            roof = r["roofline"]
+            print(
+                f"OK  {arch:20s} {shape:12s} {r['mesh']:8s} "
+                f"compile={r['compile_s']:6.1f}s "
+                f"compute={roof['compute_s']:9.3e}s "
+                f"memory={roof['memory_s']:9.3e}s "
+                f"coll={roof['collective_s']:9.3e}s "
+                f"dominant={roof['dominant']:10s} "
+                f"useful={r['useful_flops_ratio']:.2f}"
+            )
+            if r["memory_analysis"]:
+                print(f"    memory_analysis: {r['memory_analysis']}")
+        except Exception as e:
+            failures.append((arch, shape, repr(e)))
+            print(f"FAIL {arch} {shape}: {e}")
+            if not args.continue_on_error:
+                traceback.print_exc()
+                raise
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

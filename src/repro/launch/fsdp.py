@@ -1,0 +1,85 @@
+"""Explicit FSDP: gather-weights-before-use hook.
+
+Storage sharding for large archs puts weight matrices on
+P("data", "model") (see launch.sharding).  Left to implicit GSPMD
+propagation, the contraction-dim×batch-dim conflict can make the
+partitioner re-replicate *activations* instead of weights (measured 8–12×
+memory-traffic blowup on internlm2 train_4k — EXPERIMENTS.md §Perf).  The
+FSDP contract is the opposite: all-gather the (small) weight shard right
+before use and keep activations sharded.
+
+Models call ``maybe_unshard(block_params, name)`` on each scanned layer
+slice; by default it is the identity.  The launch layer installs a policy
+built from the parameter PartitionSpecs: a ``with_sharding_constraint``
+that strips every data-axis assignment from weight leaves, so XLA
+materializes the all-gather of exactly one layer's weights per scan
+iteration (the FSDP weights-prefetch pattern).
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def maybe_unshard(tree, name: str = "blocks"):
+    policies = getattr(_state, "policies", None)
+    if not policies or name not in policies:
+        return tree
+    return policies[name](tree)
+
+
+def _strip_data(axis, drop: set):
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a not in drop)
+        return kept if kept else None
+    return None if axis in drop else axis
+
+
+def make_policy(mesh, specs_tree, data_axes: tuple[str, ...]):
+    """Build an unshard policy for one stacked-blocks spec subtree."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    drop = set(data_axes)
+    spec_leaves = jax.tree.leaves(
+        specs_tree, is_leaf=lambda s: isinstance(s, P)
+    )
+
+    def policy(tree):
+        leaves, treedef = jax.tree.flatten(tree)
+        out = []
+        for x, spec in zip(leaves, spec_leaves):
+            if not hasattr(x, "ndim"):
+                out.append(x)
+                continue
+            trailing = list(spec)[-x.ndim:] if len(spec) else []
+            trailing = [None] * (x.ndim - len(trailing)) + [
+                _strip_data(a, drop) for a in trailing
+            ]
+            if any(a is not None for a in trailing):
+                sh = NamedSharding(mesh, P(*trailing))
+            else:
+                sh = NamedSharding(mesh, P(*([None] * x.ndim)))
+            out.append(jax.lax.with_sharding_constraint(x, sh))
+        return treedef.unflatten(out)
+
+    return policy
+
+
+def install(mesh, param_spec_tree: dict, data_axes: tuple[str, ...],
+            block_keys: tuple[str, ...] = ("blocks", "enc_blocks",
+                                           "dec_blocks", "cross_attn")):
+    policies = {}
+    for k in block_keys:
+        if isinstance(param_spec_tree, dict) and k in param_spec_tree:
+            policies[k] = make_policy(mesh, param_spec_tree[k], data_axes)
+    _state.policies = policies
+
+
+def clear() -> None:
+    _state.policies = None

@@ -1,0 +1,351 @@
+"""Static cost model over optimized HLO text (the dry-run 'profiler').
+
+``compiled.cost_analysis()`` counts each while-loop *body* once, which
+under-counts scan-over-layers programs by ~L×.  This module re-derives the
+three roofline inputs by walking the HLO call graph:
+
+* **FLOPs** — every ``dot`` contributes ``2 · |result| · |contracting|``
+  (convolutions likewise, from window size); summed per computation and
+  multiplied through ``while`` trip counts (parsed from the loop-condition
+  constant — jax scans lower to counted loops).
+* **HBM bytes** — fusion boundaries are the memory-traffic model: each
+  materializing instruction (fusion, dot, scatter, copy, ...) reads its
+  operands and writes its result once.  Elementwise chains inside a fusion
+  are free, exactly as on the real TPU.
+* **Collective bytes** — result-shape bytes of each collective × wire
+  factor (all-reduce 2·(n−1)/n, others (n−1)/n), multiplied through trip
+  counts.
+
+This is a *static* model: it assumes no cross-iteration caching and
+perfect fusion-internal locality.  Those assumptions are also what the
+§Perf napkin math uses, so baseline and optimized variants are compared
+under one consistent model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CALLED_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)"
+    r"(%?[\w\.\-]+(?:,\s*%?[\w\.\-]+)*)"
+)
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# ops that materialize an HBM round-trip at fusion boundaries
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_list(type_str: str) -> list[tuple[str, list[int]]]:
+    return [
+        (d, [int(x) for x in dims.split(",") if x.strip()])
+        for d, dims in _SHAPE_RE.findall(type_str)
+    ]
+
+
+def _nbytes(shapes: list[tuple[str, list[int]]]) -> int:
+    total = 0
+    for dtype, dims in shapes:
+        nb = _DTYPE_BYTES.get(dtype, 0)
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * nb
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    operands: list[str]
+    text: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    shapes: dict          # name -> list[(dtype, dims)]
+
+
+def _parse_instr(line: str) -> Instr | None:
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    # result type = leading type expression; opcode follows it.
+    om = re.match(r"((?:\([^)]*\))|(?:[\w]+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+                  r"([\w\-]+)", rhs)
+    if not om:
+        return None
+    rtype, opcode = om.groups()
+    # operand names inside the first (...) after opcode
+    pstart = rhs.find(opcode) + len(opcode)
+    operands: list[str] = []
+    if pstart < len(rhs) and rhs[pstart:].lstrip().startswith("("):
+        depth = 0
+        buf = []
+        for ch in rhs[rhs.find("(", pstart):]:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            if ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                buf.append(ch)
+        args = "".join(buf)
+        operands = re.findall(r"%([\w\.\-]+)", args)
+    return Instr(name, rtype, opcode, operands, line)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line.strip()) if line.rstrip().endswith("{") \
+            else None
+        if h and ("->" in line):
+            cur = Computation(h.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr(line)
+        if ins:
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = _shape_list(ins.result_type)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """jax scans lower to `i < C` conditions; take the compare constant."""
+    const_vals: dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.text)
+            if m:
+                const_vals[ins.name] = int(m.group(1))
+    for ins in cond.instrs:
+        if ins.opcode == "compare":
+            for op in ins.operands:
+                if op in const_vals and const_vals[op] > 0:
+                    return const_vals[op]
+    # fall back to any positive constant, else 1
+    pos = [v for v in const_vals.values() if v > 0]
+    return max(pos) if pos else 1
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    result = _shape_list(ins.result_type)
+    out_elems = 1
+    for _, dims in result:
+        for d in dims:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.text)
+    if not m or not ins.operands:
+        return 2.0 * out_elems  # degenerate
+    cdims = [int(x) for x in m.group(1).split(",") if x.strip()]
+    lhs = comp.shapes.get(ins.operands[0])
+    if not lhs:
+        return 2.0 * out_elems
+    ldims = lhs[0][1]
+    k = 1
+    for c in cdims:
+        if c < len(ldims):
+            k *= ldims[c]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    result = _shape_list(ins.result_type)
+    out_elems = 1
+    for _, dims in result:
+        for d in dims:
+            out_elems *= d
+    if len(ins.operands) >= 2:
+        rhs = comp.shapes.get(ins.operands[1])
+        if rhs:
+            k = 1
+            for d in rhs[0][1]:
+                k *= d
+            # kernel elems include output-feature dim already in result
+            return 2.0 * out_elems * max(
+                k // max(result[0][1][-1] if result[0][1] else 1, 1), 1
+            )
+    return 2.0 * out_elems
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_type: dict = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "CostTotals":
+        return CostTotals(
+            self.flops * k, self.hbm_bytes * k, self.collective_bytes * k,
+            {t: v * k for t, v in self.collective_by_type.items()},
+        )
+
+    def add(self, o: "CostTotals") -> None:
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.collective_bytes += o.collective_bytes
+        for t, v in o.collective_by_type.items():
+            self.collective_by_type[t] = (
+                self.collective_by_type.get(t, 0.0) + v
+            )
+
+
+_GROUP_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUP_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _wire_factor(op: str, line: str) -> float:
+    n = 0
+    gm = _GROUP_RE.search(line)
+    if gm:
+        n = len([x for x in gm.group(1).split(",") if x.strip()])
+    else:
+        g2 = _GROUP_V2_RE.search(line)
+        if g2:
+            n = int(g2.group(2))
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n if n > 1 else 2.0
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n if n > 1 else 1.0
+    return 1.0
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: dict[str, CostTotals] = {}
+        entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+                if m:
+                    entry = m.group(1)
+                break
+        if entry is None:
+            # fall back: computation with most instructions
+            entry = max(self.comps, key=lambda c: len(self.comps[c].instrs))
+        self.entry = entry
+
+    def totals(self) -> CostTotals:
+        return self._visit(self.entry)
+
+    def _visit(self, name: str) -> CostTotals:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = CostTotals()
+        self._memo[name] = total
+        if comp is None:
+            return total
+        for ins in comp.instrs:
+            op = ins.opcode
+            # --- flops ---
+            if op == "dot":
+                total.flops += _dot_flops(ins, comp)
+            elif op == "convolution":
+                total.flops += _conv_flops(ins, comp)
+            # --- collectives ---
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                size = _nbytes(_shape_list(ins.result_type))
+                f = _wire_factor(base, ins.text)
+                total.collective_bytes += size * f
+                total.collective_by_type[base] = (
+                    total.collective_by_type.get(base, 0.0) + size * f
+                )
+            # --- hbm traffic at fusion boundaries ---
+            if op in ("while", "conditional", "call"):
+                pass  # loop carries stay resident; bodies are counted below
+            elif op in ("dynamic-slice", "gather"):
+                # reads only the slice, not the sliced-from buffer
+                total.hbm_bytes += 2 * _nbytes(_shape_list(ins.result_type))
+            elif op in ("dynamic-update-slice", "scatter"):
+                # touches only the update region (read+write)
+                upd = (
+                    _nbytes(comp.shapes.get(ins.operands[-1], []))
+                    if ins.operands else 0
+                )
+                total.hbm_bytes += 2 * upd
+            elif op not in _SKIP_BYTES and not op.endswith("-done"):
+                result_shapes = _shape_list(ins.result_type)
+                out_b = _nbytes(result_shapes)
+                in_b = 0
+                aliased = False
+                for o in ins.operands:
+                    oshapes = comp.shapes.get(o, [])
+                    if (
+                        op == "fusion" and not aliased
+                        and "dynamic-update-slice" in ins.text
+                        and oshapes == result_shapes
+                    ):
+                        # in-place accumulator (lax.map/scan stacking):
+                        # aliased with the result; only the updated slice
+                        # moves.  Skip the buffer read AND the buffer write.
+                        aliased = True
+                        continue
+                    in_b += _nbytes(oshapes)
+                if aliased:
+                    out_b = 0
+                total.hbm_bytes += out_b + in_b
+            # --- called computations ---
+            if op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.text)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.text)
+                if bm:
+                    trips = (
+                        _trip_count(self.comps[cm.group(1)])
+                        if cm and cm.group(1) in self.comps else 1
+                    )
+                    total.add(self._visit(bm.group(1)).scaled(trips))
+            elif op in ("call", "fusion", "custom-call"):
+                m = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", ins.text)
+                if m and op == "call":
+                    total.add(self._visit(m.group(1)))
+                elif m and op == "fusion":
+                    # fusion internals: count dot flops only (bytes are the
+                    # fusion boundary, already counted above).
+                    sub = self._visit(m.group(1))
+                    total.flops += sub.flops
+                    total.collective_bytes += sub.collective_bytes
+            elif op == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.text)
+                if m:
+                    branches = re.findall(r"%?([\w\.\-]+)", m.group(1))
+                    subs = [self._visit(b) for b in branches if b in self.comps]
+                    if subs:
+                        # worst-case branch
+                        best = max(subs, key=lambda s: s.flops + s.hbm_bytes)
+                        total.add(best)
+        return total

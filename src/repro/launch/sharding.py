@@ -1,0 +1,256 @@
+"""GSPMD partition rules for the model zoo + DiT experts.
+
+Strategy (DESIGN.md §5): 2D "FSDP × TP" —
+
+* column-parallel weights (attention q/k/v, FFN up/gate, SSM in_proj,
+  MoE up/gate): last dim on "model", second-to-last on "data";
+* row-parallel weights (attention o, FFN down, SSM out_proj, MoE down):
+  last dim on "data", second-to-last on "model";
+* embeddings: feature dim on "model";
+* norms / scalars / small tables: replicated;
+* batch dims of inputs/caches on ("pod","data") (pod folds into data);
+* batch-1 long-context decode: KV-cache *sequence* axis shards on "data"
+  (sequence-parallel cache attention), SSM-state heads on "model".
+
+GSPMD tolerates non-divisible dims (pads); every d_model/d_ff/kv_dim in
+the assigned configs is divisible by 16 regardless.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+from repro.models.config import DiTConfig, LMConfig
+
+# Leaf-name → (trailing-dims spec builder). `dp` = data axes tuple.
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w1", "in_proj", "vision_proj",
+        "text_proj", "mlp1", "mlp2", "out", "mod", "cls_head"}
+_ROW = {"wo", "w_down", "w2", "out_proj"}
+# The unembed projection only TP-shards its vocab dim: FSDP-sharding its
+# d_model (contraction) dim on "data" collides with batch-on-"data" in the
+# CE backward and GSPMD re-replicates the global batch (measured 12×
+# memory-traffic blowup on internlm2 train_4k — see EXPERIMENTS.md §Perf).
+_COL_TP_ONLY = {"unembed"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(str(e.idx))
+    return names
+
+
+def _rule_for(names: list[str], ndim: int, dp) -> P:
+    """Trailing-dim partition rule; leading (stacked-layer) dims -> None."""
+    dpa = dp if len(dp) > 1 else dp[0]
+    owner = None
+    for n in reversed(names):
+        if (n in _COL or n in _ROW or n in _COL_TP_ONLY
+                or n in ("emb", "router", "conv_w", "table", "block_embed")):
+            owner = n
+            break
+    if ndim <= 1:
+        return P()
+    if owner == "emb":
+        # embedding tables (V, D) / pos tables (S, D): shard feature dim.
+        return _pad(P("model"), ndim, trailing=1)
+    if owner == "table":
+        return P(*([None] * ndim))
+    if owner == "router":                    # MoE gate: replicate (small)
+        return P(*([None] * ndim))
+    if owner == "conv_w":                    # (K, C): shard channels
+        return _pad(P("model"), ndim, trailing=1)
+    if owner == "block_embed":               # (L, 6, d)
+        return P(*([None] * ndim))
+    if owner in _COL_TP_ONLY:
+        if ndim >= 2:
+            return _pad(P(None, "model"), ndim, trailing=2)
+        return P("model")
+    if owner in _COL:
+        if ndim >= 2:
+            return _pad(P(dpa, "model"), ndim, trailing=2)
+        return P("model")
+    if owner in _ROW:
+        if ndim >= 2:
+            return _pad(P("model", dpa), ndim, trailing=2)
+        return P(dpa)
+    # biases / norms / A_log / dt_bias / D / unknowns: replicate.
+    return P(*([None] * ndim))
+
+
+def _pad(spec: P, ndim: int, trailing: int) -> P:
+    return P(*([None] * (ndim - trailing) + list(spec)))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axis assignments whose mesh size doesn't divide the dim.
+
+    jit in_shardings require exact divisibility (unlike internal GSPMD
+    propagation); any non-divisible assignment falls back to replication
+    of that dim.
+    """
+    out = []
+    for i, axis in enumerate(spec):
+        if axis is None or i >= len(shape):
+            out.append(None if i >= len(shape) else axis)
+            continue
+        if shape[i] % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    # pad/trim to ndim
+    out = out[: len(shape)] + [None] * (len(shape) - len(out))
+    return P(*out)
+
+
+def param_specs(params_shape: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching an eval_shape'd param tree.
+
+    ``fsdp=False`` (default): TP-only weight sharding + pure data
+    parallelism — fits every arch below ~8B.  ``fsdp=True``: weight
+    matrices additionally shard over the data axis (storage); models must
+    run under the launch.fsdp gather-before-use policy.
+    """
+    dp = data_axes(mesh)
+
+    def leaf(path, x):
+        names = _path_names(path)
+        # bias vectors follow their weight's last-dim sharding.
+        if names[-1] == "b":
+            w_spec = _rule_for(names[:-1] + ["w"], 2, dp)
+            last = w_spec[-1] if len(w_spec) else None
+            spec = P(last)
+        elif names[-1] == "w":
+            spec = _rule_for(names[:-1], x.ndim, dp)
+        else:
+            spec = _rule_for(names, x.ndim, dp)
+        if not fsdp:
+            dset = set(dp)
+            spec = P(*[
+                None if (a in dset or isinstance(a, tuple)) else a
+                for a in spec
+            ])
+        return sanitize_spec(spec, x.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params_shape, mesh, fsdp=fsdp),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input/batch/cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: LMConfig, mesh: Mesh, batch: dict) -> dict:
+    """Shard batch dicts: leading batch dim over (pod, data)."""
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    ndev = 1
+    for a in dp:
+        ndev *= mesh.shape[a]
+
+    def leaf(x):
+        b = x.shape[0]
+        if b % ndev == 0:
+            return P(dpa, *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    return jax.tree.map(leaf, batch)
+
+
+def _first_divisible(shape, dims: list[int], mesh: Mesh, axis) -> int | None:
+    """First dim (by priority) divisible by the mesh axis size."""
+    n = _axis_size(mesh, axis)
+    for d in dims:
+        if d < len(shape) and shape[d] % n == 0 and shape[d] >= n:
+            return d
+    return None
+
+
+def cache_specs(cfg: LMConfig, mesh: Mesh, cache: dict, batch: int) -> dict:
+    """KV/SSM cache sharding.
+
+    Batch shards over (pod, data) when divisible; otherwise (long_500k,
+    batch=1) the cache *sequence* axis shards over "data"
+    (sequence-parallel attention over the cache).
+    """
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    ndev = 1
+    for a in dp:
+        ndev *= mesh.shape[a]
+    batch_ok = batch % ndev == 0
+
+    def spec_for(name, x):
+        nd = x.ndim
+        parts: list = [None] * nd
+        if name in ("k", "v", "cross_k", "cross_v"):  # (L|G, B, S, H, hd)
+            if batch_ok:
+                parts[1] = dpa
+            elif x.shape[2] % _axis_size(mesh, dpa) == 0:
+                parts[2] = dpa                   # sequence-parallel cache
+            # model axis: prefer heads (Megatron TP); when kv heads don't
+            # divide (GQA with few kv heads), fall back to
+            # sequence-parallel cache (flash-decode style), then head_dim.
+            prio = [3] + ([2] if parts[2] is None else []) + [4]
+            d = _first_divisible(x.shape, prio, mesh, "model")
+            if d is not None:
+                parts[d] = "model"
+        elif name == "pos":                      # (B, S)
+            if batch_ok:
+                parts[0] = dpa
+            elif x.shape[1] % _axis_size(mesh, dpa) == 0:
+                parts[1] = dpa
+        elif name == "ssm":                      # (L, B, H, P, N)
+            if batch_ok:
+                parts[1] = dpa
+            d = _first_divisible(x.shape, [2, 3, 4], mesh, "model")
+            if d is not None:
+                parts[d] = "model"
+        elif name == "conv":                     # (L, B, K-1, C)
+            if batch_ok:
+                parts[1] = dpa
+            if x.shape[3] % _axis_size(mesh, "model") == 0:
+                parts[3] = "model"
+        return sanitize_spec(P(*parts), x.shape, mesh)
+
+    return {k: spec_for(k, v) for k, v in cache.items()}
+
+
+def dit_batch_specs(mesh: Mesh, batch: dict) -> dict:
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    return jax.tree.map(
+        lambda x: P(dpa, *([None] * (x.ndim - 1))), batch
+    )
+
+
+def to_shardings(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

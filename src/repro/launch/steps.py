@@ -1,0 +1,162 @@
+"""Step functions + input specs for launch (train / prefill / decode).
+
+Everything here is shape-only-safe: ``input_specs`` returns
+ShapeDtypeStructs (no allocation) and the step builders close over configs
+only, so ``jax.jit(...).lower(**specs)`` works for the 512-device dry-run
+exactly as it would on real hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape
+from repro.models import zoo
+from repro.models.config import LMConfig
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+Array = jax.Array
+
+
+def cfg_for_shape(cfg: LMConfig, shape: InputShape) -> tuple[LMConfig, int]:
+    """Resolve the (config variant, cache length) for an input shape.
+
+    decode_32k keeps the full seq_len cache (ring-buffering disabled);
+    long_500k uses the sub-quadratic variant: ring-buffer window for
+    attention archs (cfg.decode_window / native sliding_window), O(1)
+    state for SSM.  See DESIGN.md §Arch-applicability.
+    """
+    if shape.kind != "decode":
+        return cfg, shape.seq_len
+    if cfg.arch_type == "ssm":
+        return cfg, 0
+    window = cfg.decode_window or cfg.sliding_window
+    if shape.seq_len > 100_000:
+        if not window:
+            raise ValueError(
+                f"{cfg.name} has no sub-quadratic variant for {shape.name}"
+            )
+        return dataclasses.replace(cfg, decode_window=window), window
+    # 32k decode: full cache, exact attention (window masking still applies
+    # for natively-SWA archs through cfg.sliding_window).
+    return dataclasses.replace(cfg, decode_window=0), shape.seq_len
+
+
+def input_specs(cfg: LMConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        if cfg.arch_type == "audio":
+            batch["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), cfg.activation_dtype
+            )
+        if cfg.arch_type == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_prefix_len, cfg.d_model), cfg.activation_dtype
+            )
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": tok}
+        if cfg.arch_type == "audio":
+            batch["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), cfg.activation_dtype
+            )
+        if cfg.arch_type == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_prefix_len, cfg.d_model), cfg.activation_dtype
+            )
+        return {"batch": batch}
+    # decode: ONE new token against a seq_len cache.
+    rcfg, cache_len = cfg_for_shape(cfg, shape)
+    cache_shapes = jax.eval_shape(
+        lambda: zoo.make_cache(rcfg, b, max(cache_len, 1))
+    )
+    return {
+        "cache": cache_shapes,
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def param_shapes(cfg: LMConfig) -> Any:
+    return jax.eval_shape(lambda k: zoo.init(cfg, k), jax.random.PRNGKey(0))
+
+
+def opt_shapes(cfg: LMConfig) -> Any:
+    p = param_shapes(cfg)
+    return jax.eval_shape(adamw_init, p)
+
+
+def make_train_step(cfg: LMConfig, opt: AdamWConfig | None = None,
+                    *, microbatches: int = 1):
+    """Full optimizer step.
+
+    ``microbatches > 1`` runs gradient accumulation: the global batch is
+    split along its leading axis and scanned, so peak activation memory
+    scales with the microbatch (§Perf lever for the ≥33B trains) at the
+    cost of re-running the per-microbatch collectives sequentially.
+
+    CAVEAT (measured, EXPERIMENTS.md §Perf iteration 4): under GSPMD the
+    in-jit reshape of the data-sharded batch axis re-replicates the batch
+    (all roofline terms ×4 on deepseek-67b).  Use only with externally
+    pre-split microbatches until the sharded-reshape fix lands.
+    """
+    opt = opt or AdamWConfig()
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: zoo.loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def acc(carry, one):
+                loss_sum, grads = carry
+                (loss, _), g = grad_fn(params, one)
+                grads = jax.tree.map(jnp.add, grads, g)
+                return (loss_sum + loss, grads), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zero), mb
+            )
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss_sum * inv
+        params, opt_state, om = adamw_update(opt, grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig):
+    def prefill_step(params, batch):
+        return zoo.prefill(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: LMConfig, shape: InputShape):
+    rcfg, _ = cfg_for_shape(cfg, shape)
+
+    def serve_step(params, cache, token, pos):
+        return zoo.decode_step(rcfg, params, cache, token, pos)
+
+    return serve_step

@@ -1,0 +1,143 @@
+"""Training launcher.
+
+Two modes:
+
+* ``--mode expert``: train ONE decentralized diffusion expert (the paper's
+  unit of work — one contributor, one GPU/pod slice, zero synchronization
+  with other experts).  ``--objective ddpm|fm`` selects the heterogeneous
+  objective, ``--cluster`` the data partition.
+* ``--mode lm``: train an assigned LM architecture (``--arch``) on the
+  synthetic token pipeline — the smoke-scale end-to-end driver.
+
+On the CPU container this runs reduced configs by default
+(``--full`` uses the real config — intended for actual TPU slices).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --mode expert \
+      --objective ddpm --cluster 0 --steps 200
+  PYTHONPATH=src python -m repro.launch.train --mode lm \
+      --arch mamba2-2.7b --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_dit_config
+from repro.data import SyntheticSpec, fit_clusters, lm_batch
+from repro.data.pipeline import ExpertDataStream, RouterDataStream
+from repro.models import dit as D
+from repro.models import zoo
+from repro.training import (
+    AdamWConfig,
+    ExpertTrainer,
+    RouterTrainer,
+    adamw_init,
+    expert_metadata,
+    save_checkpoint,
+)
+from repro.training.trainer import make_lm_train_step
+
+
+def train_expert(args) -> None:
+    spec = SyntheticSpec(num_categories=args.clusters,
+                         latent_size=args.latent_size)
+    cm, assign = fit_clusters(
+        spec, corpus_size=args.corpus, num_clusters=args.clusters,
+        num_fine=min(256, args.corpus // 4),
+    )
+    cfg = get_dit_config(args.dit)
+    if not args.full:
+        cfg = cfg.reduced(latent_size=args.latent_size)
+    params = D.init(cfg, jax.random.PRNGKey(args.seed))
+    schedule = "cosine" if args.objective == "ddpm" else "linear"
+    trainer = ExpertTrainer(
+        apply_fn=D.make_expert_apply(cfg),
+        objective=args.objective,
+        schedule_name=schedule,
+        opt=AdamWConfig(learning_rate=args.lr,
+                        warmup_steps=min(100, args.steps // 10)),
+    )
+    state = trainer.init_state(params)
+    stream = ExpertDataStream(spec, cm, cluster_id=args.cluster,
+                              batch_size=args.batch, seed=args.seed)
+    t0 = time.time()
+    for i in range(args.steps):
+        key = jax.random.fold_in(jax.random.PRNGKey(args.seed + 1), i)
+        state, metrics = trainer.train_step(state, key,
+                                            stream.next_batch(i))
+        if i % max(args.steps // 10, 1) == 0:
+            print(f"step {i:6d} loss {metrics['loss']:.4f} "
+                  f"lr {metrics['lr']:.2e} ({time.time()-t0:.1f}s)")
+    if args.out:
+        save_checkpoint(
+            args.out, state.ema,
+            metadata=expert_metadata(
+                name=f"expert{args.cluster}", objective=args.objective,
+                schedule=schedule, cluster_id=args.cluster,
+                arch=cfg.name, step=state.step,
+            ),
+        )
+        print(f"saved EMA checkpoint -> {args.out}")
+
+
+def train_lm(args) -> None:
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    params = zoo.init(cfg, jax.random.PRNGKey(args.seed))
+    opt = AdamWConfig(learning_rate=args.lr, warmup_steps=5)
+    opt_state = adamw_init(params)
+    step_fn = make_lm_train_step(cfg, opt)
+    for i in range(args.steps):
+        key = jax.random.fold_in(jax.random.PRNGKey(args.seed), i)
+        batch = lm_batch(key, args.batch, args.seq_len, cfg.vocab_size)
+        if cfg.arch_type == "audio":
+            from repro.models.frontend_stubs import audio_frame_embeddings
+            batch["audio_embeds"] = audio_frame_embeddings(
+                cfg, args.batch, seed=i
+            )
+        if cfg.arch_type == "vlm":
+            from repro.models.frontend_stubs import vision_patch_embeddings
+            batch["vision_embeds"] = vision_patch_embeddings(
+                cfg, args.batch, seed=i
+            )
+        params, opt_state, loss, metrics = step_fn(params, opt_state, batch)
+        print(f"step {i:4d} loss {float(loss):.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("expert", "lm"), default="expert")
+    # expert mode
+    ap.add_argument("--objective", choices=("ddpm", "fm"), default="fm")
+    ap.add_argument("--cluster", type=int, default=0)
+    ap.add_argument("--clusters", type=int, default=8)
+    ap.add_argument("--dit", default="dit-b2")
+    ap.add_argument("--latent-size", type=int, default=8)
+    ap.add_argument("--corpus", type=int, default=1024)
+    ap.add_argument("--out", default="")
+    # lm mode
+    ap.add_argument("--arch", choices=ARCH_IDS, default="internlm2-1.8b")
+    ap.add_argument("--seq-len", type=int, default=128)
+    # shared
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (TPU-scale) config")
+    args = ap.parse_args()
+    if args.mode == "expert":
+        train_expert(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,333 @@
+"""Diffusion Transformer expert with PixArt-α AdaLN-Single (paper §2.5).
+
+Processes 32×32×4 VAE latents with 2×2 patch embedding (256 tokens).
+
+AdaLN-Single (Eqs. 14–16): a single global MLP maps the timestep embedding
+τ(t) to all ``L × 6 × d`` modulation vectors at once; each block adds its
+learned embedding ``E_b`` (init N(0, 1/√d)).  Per block (Eqs. 17–19):
+
+    h1 = h  + α_msa ⊙ MSA(LN(h) ⊙ (1+γ_msa) + β_msa)
+    h2 = h1 + CrossAttn(LN(h1), e_text)
+    h' = h2 + α_mlp ⊙ FFN(LN(h2) ⊙ (1+γ_mlp) + β_mlp)
+
+LN has no learnable affine.  Zero-init: modulation-path final linear,
+cross-attn output projections (§2.5 Initialization Strategy).
+
+Timesteps: the discrete 1000-entry sinusoidal table from the pretrained
+DiT is kept; continuous FM times are mapped through ``round(999 t)``
+(Eq. 21) at runtime.
+
+Parameter top-level groups intentionally mirror the Eq. 20 checkpoint-
+conversion policy keys: patch_embed / pos_embed / blocks / t_embed /
+adaln_single / cross_attn / text_proj / final_layer / null_text_embed.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import DiTConfig
+from repro.core.schedules import to_ddpm_timestep
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal_table(num: int, dim: int) -> Array:
+    """Frozen sinusoidal timestep features (the 'learned table' initializer)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = jnp.arange(num)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def patchify(x: Array, p: int) -> Array:
+    """(B, H, W, C) -> (B, H/p * W/p, p*p*C)."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // p, p, w // p, p, c)
+    x = jnp.transpose(x, (0, 1, 3, 2, 4, 5))
+    return x.reshape(b, (h // p) * (w // p), p * p * c)
+
+
+def unpatchify(x: Array, p: int, hw: int, c: int) -> Array:
+    b, n, _ = x.shape
+    g = hw // p
+    x = x.reshape(b, g, g, p, p, c)
+    x = jnp.transpose(x, (0, 1, 3, 2, 4, 5))
+    return x.reshape(b, hw, hw, c)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(cfg: DiTConfig, key) -> dict:
+    d = cfg.d_model
+    hd = d // cfg.num_heads
+    ks = jax.random.split(key, 2)
+    return {
+        "attn": L.gqa_init(ks[0], d, cfg.num_heads, cfg.num_heads, hd,
+                           cfg.param_dtype),
+        "mlp": L.gelu_mlp_init(ks[1], d, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def _cross_attn_init(cfg: DiTConfig, key) -> dict:
+    d = cfg.d_model
+    hd = d // cfg.num_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, d, cfg.param_dtype),
+        "wk": L.dense_init(ks[1], d, d, cfg.param_dtype),
+        "wv": L.dense_init(ks[2], d, d, cfg.param_dtype),
+        # §2.5: cross-attn output projection zero-initialized.
+        "wo": L.zeros_dense_init(ks[3], d, d, cfg.param_dtype),
+    }
+
+
+def init(cfg: DiTConfig, key) -> dict:
+    d = cfg.d_model
+    p = cfg.patch_size
+    in_dim = p * p * cfg.latent_channels
+    ks = jax.random.split(key, 10)
+    t_feat = 256
+
+    params: dict = {
+        "patch_embed": L.dense_init_b(ks[0], in_dim, d, cfg.param_dtype),
+        "pos_embed": {
+            "emb": (0.02 * jax.random.normal(ks[1], (cfg.num_tokens, d))
+                    ).astype(cfg.param_dtype)
+        },
+        "t_embed": {
+            "table": sinusoidal_table(cfg.num_timesteps, t_feat).astype(
+                cfg.param_dtype
+            ),
+            "mlp1": L.dense_init_b(ks[2], t_feat, d, cfg.param_dtype),
+            "mlp2": L.dense_init_b(ks[3], d, d, cfg.param_dtype),
+        },
+        "blocks": jax.vmap(lambda k: _block_init(cfg, k))(
+            jax.random.split(ks[4], cfg.num_layers)
+        ),
+        "final_layer": {
+            # zero-init final projection -> identity-ish start (§2.5).
+            "mod": L.zeros_dense_init(ks[5], d, 2 * d, cfg.param_dtype),
+            "out": L.zeros_dense_init(ks[5], d, in_dim, cfg.param_dtype),
+        },
+    }
+    if cfg.adaln_single:
+        params["adaln_single"] = {
+            # Eq. 14 global MLP.  The (L,6,d) tensor of Eq. 15 is the global
+            # (6,d) modulation broadcast over layers plus per-block E_b —
+            # a literal d->6Ld dense would alone cost more than the
+            # per-block MLPs it replaces (PixArt-α §2.3).  Final linear
+            # zero-init (§2.5).
+            "mlp1": L.dense_init_b(ks[6], d, d, cfg.param_dtype),
+            "mlp2": L.zeros_dense_init(ks[6], d, 6 * d),
+            # Eq. 16 per-block embeddings E_b ~ N(0, 1/sqrt(d)).
+            "block_embed": (
+                jax.random.normal(ks[7], (cfg.num_layers, 6, d))
+                / math.sqrt(d)
+            ).astype(cfg.param_dtype),
+        }
+    else:
+        # classic per-block adaLN-Zero (ablation baseline; 30% more params)
+        params["adaln_per_block"] = jax.vmap(
+            lambda k: L.zeros_dense_init(k, d, 6 * d, cfg.param_dtype)
+        )(jax.random.split(ks[6], cfg.num_layers))
+    if cfg.use_text:
+        params["text_proj"] = L.dense_init_b(ks[8], cfg.text_dim, d,
+                                             cfg.param_dtype)
+        params["cross_attn"] = jax.vmap(lambda k: _cross_attn_init(cfg, k))(
+            jax.random.split(ks[9], cfg.num_layers)
+        )
+        params["null_text_embed"] = {
+            "emb": (0.02 * jax.random.normal(ks[9], (cfg.text_len,
+                                                     cfg.text_dim))
+                    ).astype(cfg.param_dtype)
+        }
+    if cfg.num_classes:
+        params["cls_head"] = L.dense_init_b(ks[8], d, cfg.num_classes,
+                                            cfg.param_dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+def timestep_embedding(cfg: DiTConfig, params, t: Array) -> Array:
+    """τ(t) via the discrete table + MLP (Eq. 21 runtime mapping)."""
+    idx = to_ddpm_timestep(t, cfg.num_timesteps)
+    feat = jnp.take(params["t_embed"]["table"], idx, axis=0)
+    h = jax.nn.silu(L.dense(params["t_embed"]["mlp1"], feat))
+    return L.dense(params["t_embed"]["mlp2"], h)            # (B, d)
+
+
+def global_modulation(cfg: DiTConfig, params, tau: Array) -> Array:
+    """Eq. 14/15: (B, L, 6, d) modulation tensor C (+E_b added per block).
+
+    Computed as a single global (6, d) modulation broadcast across the L
+    layers (the per-layer variation comes from E_b in Eq. 16)."""
+    b = tau.shape[0]
+    h = jax.nn.silu(L.dense(params["adaln_single"]["mlp1"], tau))
+    c = L.dense(params["adaln_single"]["mlp2"], h)
+    c = c.reshape(b, 1, 6, cfg.d_model)
+    return jnp.broadcast_to(c, (b, cfg.num_layers, 6, cfg.d_model))
+
+
+def _modulate(x: Array, gamma: Array, beta: Array) -> Array:
+    return x * (1.0 + gamma[:, None]) + beta[:, None]
+
+
+def _self_attn(cfg: DiTConfig, p, x: Array) -> Array:
+    d = cfg.d_model
+    hd = d // cfg.num_heads
+    b, s, _ = x.shape
+    q, k, v = L.gqa_project(p, x, cfg.num_heads, cfg.num_heads, hd)
+    pos = jnp.arange(s)
+    out = L.chunked_attention(
+        q, k, v, q_positions=pos, kv_positions=pos, causal=False,
+        chunk_size=cfg.attn_chunk,
+    )
+    return L.dense(p["wo"], out.reshape(b, s, d))
+
+
+def _cross_attn(cfg: DiTConfig, p, x: Array, text: Array) -> Array:
+    d = cfg.d_model
+    hd = d // cfg.num_heads
+    b, s, _ = x.shape
+    m = text.shape[1]
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    k = L.dense(p["wk"], text).reshape(b, m, cfg.num_heads, hd)
+    v = L.dense(p["wv"], text).reshape(b, m, cfg.num_heads, hd)
+    out = L.chunked_attention(
+        q, k, v, q_positions=jnp.arange(s), kv_positions=jnp.arange(m),
+        causal=False, chunk_size=cfg.attn_chunk,
+    )
+    return L.dense(p["wo"], out.reshape(b, s, d))
+
+
+def apply(
+    cfg: DiTConfig,
+    params,
+    x_t: Array,
+    t: Array,
+    *,
+    text_emb: Array | None = None,
+    drop_mask: Array | None = None,
+) -> Array:
+    """Predict ε or velocity (objective decided by the training loss).
+
+    Args:
+      x_t: (B, H, W, C) noisy latents.
+      t: (B,) native-time (continuous [0,1] or discrete indices).
+      text_emb: (B, text_len, text_dim) frozen CLIP embeddings; None uses the
+        learned null embedding (CFG unconditional branch).
+      drop_mask: optional (B,) bool — per-sample CFG dropout: True rows use
+        the null embedding (train-time p=0.1 conditioning drop, §2.5).
+    """
+    b = x_t.shape[0]
+    p = cfg.patch_size
+    x = patchify(x_t.astype(cfg.activation_dtype), p)
+    h = L.dense(params["patch_embed"], x)
+    h = h + params["pos_embed"]["emb"][None].astype(h.dtype)
+
+    tau = timestep_embedding(cfg, params, t)                 # (B, d)
+
+    if cfg.use_text:
+        null = jnp.broadcast_to(
+            params["null_text_embed"]["emb"][None],
+            (b, cfg.text_len, cfg.text_dim),
+        )
+        if text_emb is None:
+            text_emb = null
+        elif drop_mask is not None:
+            text_emb = jnp.where(drop_mask[:, None, None], null, text_emb)
+        text = L.dense(params["text_proj"],
+                       text_emb.astype(cfg.activation_dtype))
+    else:
+        text = None
+
+    if cfg.adaln_single:
+        mods = global_modulation(cfg, params, tau)           # (B, L, 6, d)
+        mods = mods + params["adaln_single"]["block_embed"][None].astype(
+            mods.dtype
+        )
+        mods = jnp.moveaxis(mods, 1, 0)                      # (L, B, 6, d)
+    else:
+        def per_block(pb):
+            return L.dense(pb, jax.nn.silu(tau)).reshape(b, 6, cfg.d_model)
+
+        mods = jax.vmap(per_block)(params["adaln_per_block"])
+
+    xs: tuple = (params["blocks"], mods)
+    if cfg.use_text:
+        xs = xs + (params["cross_attn"],)
+
+    def body(h, inputs):
+        if cfg.use_text:
+            bp, mod, cp = inputs
+        else:
+            bp, mod = inputs
+            cp = None
+        g_msa, b_msa, a_msa = mod[:, 0], mod[:, 1], mod[:, 2]
+        g_mlp, b_mlp, a_mlp = mod[:, 3], mod[:, 4], mod[:, 5]
+        # Eq. 17
+        hn = _modulate(L.layernorm({}, h), g_msa, b_msa)
+        h = h + a_msa[:, None] * _self_attn(cfg, bp["attn"], hn)
+        # Eq. 18
+        if cp is not None:
+            h = h + _cross_attn(cfg, cp, L.layernorm({}, h), text)
+        # Eq. 19
+        hn = _modulate(L.layernorm({}, h), g_mlp, b_mlp)
+        h = h + a_mlp[:, None] * L.gelu_mlp(bp["mlp"], hn)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, xs)
+
+    if cfg.num_classes:
+        pooled = jnp.mean(h, axis=1)
+        return L.dense(params["cls_head"], pooled)           # router logits
+
+    # Final layer: adaLN modulation from tau, then linear to patch pixels.
+    mod = L.dense(params["final_layer"]["mod"], jax.nn.silu(tau))
+    shift, scale = jnp.split(mod, 2, axis=-1)
+    h = L.layernorm({}, h) * (1.0 + scale[:, None]) + shift[:, None]
+    out = L.dense(params["final_layer"]["out"], h)
+    return unpatchify(out, p, cfg.latent_size,
+                      cfg.latent_channels).astype(jnp.float32)
+
+
+def make_expert_apply(cfg: DiTConfig):
+    """Adapter matching the ``ExpertSpec.apply_fn`` signature."""
+
+    def apply_fn(params, x_t, t, **cond):
+        return apply(cfg, params, x_t, t,
+                     text_emb=cond.get("text_emb"),
+                     drop_mask=cond.get("drop_mask"))
+
+    return apply_fn
+
+
+def make_router_fn(cfg: DiTConfig, params):
+    """Router posterior p(k | x_t, t) (Eq. 2)."""
+
+    def router_fn(x_t, t):
+        logits = apply(cfg, params, x_t, t)
+        return jax.nn.softmax(logits, axis=-1)
+
+    return router_fn

@@ -1,0 +1,277 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+Per the modality carve-out, the audio frontend (mel spectrogram + conv
+feature extractor) is a STUB: ``input_specs`` supplies precomputed frame
+embeddings ``(B, n_frames, d_model)``.  This module implements the
+transformer: a bidirectional encoder over frames and a causal decoder with
+cross-attention, learned positional embeddings, pre-LN blocks with GELU
+MLPs (whisper uses LayerNorm with bias, not RMSNorm).
+
+Decode carries a self-attention KV cache (ring-buffer under
+``decode_window``) plus per-layer cross-attention K/V computed once at
+prefill from the encoder output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import LMConfig
+from repro.launch.fsdp import maybe_unshard
+
+Array = jax.Array
+
+
+def _enc_block_init(cfg: LMConfig, key):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_attn": L.layernorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": L.gqa_init(ks[0], cfg.d_model, cfg.num_heads,
+                           cfg.num_kv_heads, hd, cfg.param_dtype,
+                           qkv_bias=True),
+        "ln_ffn": L.layernorm_init(cfg.d_model, cfg.param_dtype),
+        "ffn": L.gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def _dec_block_init(cfg: LMConfig, key):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 3)
+    return {
+        "ln_self": L.layernorm_init(cfg.d_model, cfg.param_dtype),
+        "self_attn": L.gqa_init(ks[0], cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, hd, cfg.param_dtype,
+                                qkv_bias=True),
+        "ln_cross": L.layernorm_init(cfg.d_model, cfg.param_dtype),
+        "cross_attn": L.gqa_init(ks[1], cfg.d_model, cfg.num_heads,
+                                 cfg.num_heads, hd, cfg.param_dtype,
+                                 qkv_bias=True),
+        "ln_ffn": L.layernorm_init(cfg.d_model, cfg.param_dtype),
+        "ffn": L.gelu_mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def init(cfg: LMConfig, key) -> dict:
+    k_emb, k_pe, k_pd, k_enc, k_dec, k_out = jax.random.split(key, 6)
+    n_enc = cfg.num_encoder_layers or cfg.num_layers
+    return {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model,
+                              cfg.param_dtype),
+        "enc_pos": (jax.random.normal(k_pe, (cfg.encoder_seq_len,
+                                             cfg.d_model)) * 0.01
+                    ).astype(cfg.param_dtype),
+        "dec_pos_table": (jax.random.normal(k_pd, (8192, cfg.d_model)) * 0.01
+                          ).astype(cfg.param_dtype),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(cfg, k))(
+            jax.random.split(k_enc, n_enc)
+        ),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(cfg, k))(
+            jax.random.split(k_dec, cfg.num_layers)
+        ),
+        "ln_enc_final": L.layernorm_init(cfg.d_model, cfg.param_dtype),
+        "ln_dec_final": L.layernorm_init(cfg.d_model, cfg.param_dtype),
+        "unembed": L.dense_init(k_out, cfg.d_model, cfg.vocab_size,
+                                cfg.param_dtype),
+    }
+
+
+def _dec_positions(cfg: LMConfig, params, positions: Array) -> Array:
+    tbl = params["dec_pos_table"]
+    return jnp.take(tbl, jnp.clip(positions, 0, tbl.shape[0] - 1), axis=0)
+
+
+def encode(cfg: LMConfig, params, frames: Array) -> Array:
+    """frames: (B, n_frames, d_model) stubbed conv-frontend output."""
+    h = frames.astype(cfg.activation_dtype)
+    s = h.shape[1]
+    h = h + params["enc_pos"][None, :s].astype(h.dtype)
+    positions = jnp.arange(s)
+    hd = cfg.resolved_head_dim
+
+    def body(h, p):
+        p = maybe_unshard(p, "enc_blocks")
+        hn = L.layernorm(p["ln_attn"], h, cfg.norm_eps)
+        q, k, v = L.gqa_project(p["attn"], hn, cfg.num_heads,
+                                cfg.num_kv_heads, hd)
+        out = L.chunked_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            causal=False, chunk_size=cfg.attn_chunk, kv_chunk=cfg.attn_kv_chunk,
+        f32_softmax=cfg.attn_f32_softmax,
+        )
+        h = h + L.dense(p["attn"]["wo"],
+                        out.reshape(h.shape[0], s, cfg.num_heads * hd))
+        h = h + L.gelu_mlp(p["ffn"], L.layernorm(p["ln_ffn"], h, cfg.norm_eps))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["enc_blocks"])
+    return L.layernorm(params["ln_enc_final"], h, cfg.norm_eps)
+
+
+def _cross_kv(cfg: LMConfig, p, memory: Array):
+    hd = cfg.resolved_head_dim
+    b, m, _ = memory.shape
+    k = L.dense(p["cross_attn"]["wk"], memory).reshape(b, m, cfg.num_heads, hd)
+    v = L.dense(p["cross_attn"]["wv"], memory).reshape(b, m, cfg.num_heads, hd)
+    return k, v
+
+
+def _dec_block(cfg: LMConfig, p, h: Array, memory: Array, positions: Array):
+    hd = cfg.resolved_head_dim
+    b, s = h.shape[:2]
+    m = memory.shape[1]
+    # causal self-attention
+    hn = L.layernorm(p["ln_self"], h, cfg.norm_eps)
+    q, k, v = L.gqa_project(p["self_attn"], hn, cfg.num_heads,
+                            cfg.num_kv_heads, hd)
+    out = L.chunked_attention(
+        q, k, v, q_positions=positions, kv_positions=positions,
+        causal=True, window=cfg.sliding_window, chunk_size=cfg.attn_chunk, kv_chunk=cfg.attn_kv_chunk,
+        f32_softmax=cfg.attn_f32_softmax,
+    )
+    h = h + L.dense(p["self_attn"]["wo"],
+                    out.reshape(b, s, cfg.num_heads * hd))
+    self_kv = (k, v)
+    # cross-attention
+    hn = L.layernorm(p["ln_cross"], h, cfg.norm_eps)
+    qc = L.dense(p["cross_attn"]["wq"], hn).reshape(b, s, cfg.num_heads, hd)
+    kc, vc = _cross_kv(cfg, p, memory)
+    out = L.chunked_attention(
+        qc, kc, vc, q_positions=positions, kv_positions=jnp.arange(m),
+        causal=False, chunk_size=cfg.attn_chunk, kv_chunk=cfg.attn_kv_chunk,
+        f32_softmax=cfg.attn_f32_softmax,
+    )
+    h = h + L.dense(p["cross_attn"]["wo"],
+                    out.reshape(b, s, cfg.num_heads * hd))
+    h = h + L.gelu_mlp(p["ffn"], L.layernorm(p["ln_ffn"], h, cfg.norm_eps))
+    return h, self_kv
+
+
+def forward_train(
+    cfg: LMConfig, params, tokens: Array, *, audio_embeds: Array,
+) -> tuple[Array, Array]:
+    """Teacher-forced decoder over encoded audio.  Returns (logits, aux)."""
+    memory = encode(cfg, params, audio_embeds)
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    h = L.embed(params["embed"], tokens, cfg.activation_dtype)
+    h = h + _dec_positions(cfg, params, positions)[None].astype(h.dtype)
+
+    def body(h, p):
+        p = maybe_unshard(p, "dec_blocks")
+        h, _ = _dec_block(cfg, p, h, memory, positions)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["dec_blocks"])
+    h = L.layernorm(params["ln_dec_final"], h, cfg.norm_eps)
+    return L.dense(params["unembed"], h), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: LMConfig, params, tokens: Array, labels: Array, *,
+            audio_embeds: Array):
+    from repro.models.transformer import cross_entropy
+
+    logits, _ = forward_train(cfg, params, tokens, audio_embeds=audio_embeds)
+    ce = cross_entropy(logits, labels, chunk=cfg.logits_chunk)
+    return ce, {"ce": ce}
+
+
+def make_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    hd = cfg.resolved_head_dim
+    m = cfg.encoder_seq_len
+    lyr = cfg.num_layers
+    return {
+        "k": jnp.zeros((lyr, batch, max_len, cfg.num_kv_heads, hd),
+                       cfg.activation_dtype),
+        "v": jnp.zeros((lyr, batch, max_len, cfg.num_kv_heads, hd),
+                       cfg.activation_dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "cross_k": jnp.zeros((lyr, batch, m, cfg.num_heads, hd),
+                             cfg.activation_dtype),
+        "cross_v": jnp.zeros((lyr, batch, m, cfg.num_heads, hd),
+                             cfg.activation_dtype),
+    }
+
+
+def prefill(
+    cfg: LMConfig, params, tokens: Array, *, audio_embeds: Array,
+) -> tuple[Array, dict]:
+    memory = encode(cfg, params, audio_embeds)
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    h = L.embed(params["embed"], tokens, cfg.activation_dtype)
+    h = h + _dec_positions(cfg, params, positions)[None].astype(h.dtype)
+
+    def body(h, p):
+        p = maybe_unshard(p, "dec_blocks")
+        h, (k, v) = _dec_block(cfg, p, h, memory, positions)
+        kc, vc = _cross_kv(cfg, p, memory)
+        return h, (k, v, kc, vc)
+
+    h, (ks, vs, kcs, vcs) = jax.lax.scan(body, h, params["dec_blocks"])
+    hl = L.layernorm(params["ln_dec_final"], h[:, -1:], cfg.norm_eps)
+    logits = L.dense(params["unembed"], hl)[:, 0]
+    cache = {
+        "k": ks, "v": vs,
+        "pos": jnp.broadcast_to(positions[None], (b, s)),
+        "cross_k": kcs, "cross_v": vcs,
+    }
+    return logits, cache
+
+
+def decode_step(
+    cfg: LMConfig, params, cache: dict, token: Array, pos: Array
+) -> tuple[Array, dict]:
+    hd = cfg.resolved_head_dim
+    b = token.shape[0]
+    h = L.embed(params["embed"], token, cfg.activation_dtype)
+    h = h + _dec_positions(cfg, params, pos[:, None]).astype(h.dtype)
+    w = cache["k"].shape[2]
+    window = cfg.decode_window or cfg.sliding_window
+    slot = (pos % w) if cfg.decode_window else jnp.minimum(pos, w - 1)
+    new_pos = cache["pos"].at[jnp.arange(b), slot].set(pos)
+    m = cache["cross_k"].shape[2]
+
+    def body(h, xs):
+        p, k_c, v_c, kc, vc = xs
+        p = maybe_unshard(p, "dec_blocks")
+        hn = L.layernorm(p["ln_self"], h, cfg.norm_eps)
+        q, k, v = L.gqa_project(p["self_attn"], hn, cfg.num_heads,
+                                cfg.num_kv_heads, hd)
+        bidx = jnp.arange(b)
+        k_c = k_c.at[bidx, slot].set(k[:, 0])
+        v_c = v_c.at[bidx, slot].set(v[:, 0])
+        out = L.decode_attention(
+            q, k_c, v_c, q_position=pos, kv_positions=new_pos, window=window
+        )
+        h = h + L.dense(p["self_attn"]["wo"],
+                        out.reshape(b, 1, cfg.num_heads * hd))
+        hn = L.layernorm(p["ln_cross"], h, cfg.norm_eps)
+        qc = L.dense(p["cross_attn"]["wq"], hn).reshape(b, 1, cfg.num_heads,
+                                                        hd)
+        out = L.decode_attention(
+            qc, kc, vc,
+            q_position=jnp.full((b,), m, jnp.int32),
+            kv_positions=jnp.broadcast_to(jnp.arange(m)[None], (b, m)),
+        )
+        h = h + L.dense(p["cross_attn"]["wo"],
+                        out.reshape(b, 1, cfg.num_heads * hd))
+        h = h + L.gelu_mlp(p["ffn"],
+                           L.layernorm(p["ln_ffn"], h, cfg.norm_eps))
+        return h, (k_c, v_c)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h,
+        (params["dec_blocks"], cache["k"], cache["v"],
+         cache["cross_k"], cache["cross_v"]),
+    )
+    h = L.layernorm(params["ln_dec_final"], h, cfg.norm_eps)
+    logits = L.dense(params["unembed"], h)[:, 0]
+    return logits, {
+        "k": ks, "v": vs, "pos": new_pos,
+        "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+    }

@@ -1,0 +1,49 @@
+"""Modality frontend STUBS (the one sanctioned carve-out).
+
+Audio (whisper): the mel-spectrogram + conv feature extractor is stubbed —
+we supply precomputed frame embeddings ``(B, n_frames, d_model)``.
+
+Vision (paligemma): the SigLIP ViT encoder + projector input is stubbed —
+we supply patch embeddings ``(B, 256, d_model)``.
+
+Both stubs are *deterministic* functions of a seed so tests and examples
+get reproducible "features", and both expose ShapeDtypeStruct specs for the
+dry-run path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import LMConfig
+
+
+def audio_frame_embeddings(cfg: LMConfig, batch: int, seed: int = 0):
+    """Stand-in for log-mel + conv1d×2 frontend output."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(
+        key, (batch, cfg.encoder_seq_len, cfg.d_model),
+        dtype=cfg.activation_dtype,
+    )
+
+
+def vision_patch_embeddings(cfg: LMConfig, batch: int, seed: int = 0):
+    """Stand-in for SigLIP-So400m patch embeddings (already projected)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(
+        key, (batch, cfg.vision_prefix_len, cfg.d_model),
+        dtype=cfg.activation_dtype,
+    )
+
+
+def audio_spec(cfg: LMConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.encoder_seq_len, cfg.d_model), cfg.activation_dtype
+    )
+
+
+def vision_spec(cfg: LMConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.vision_prefix_len, cfg.d_model), cfg.activation_dtype
+    )

@@ -1,0 +1,241 @@
+"""Zamba2-style hybrid backbone [arXiv:2411.15242].
+
+Mamba2 trunk with a single *shared* attention block (one parameter set)
+applied after every ``attn_every`` mamba layers — Zamba2's key trick for
+getting attention quality at SSM parameter cost.  Each application of the
+shared block sees a different input, so decode keeps one KV cache *per
+application*.
+
+Layout for zamba2-2.7b: 54 mamba layers, shared GQA block every 6 layers
+(9 applications).  Structured as an outer ``lax.scan`` over groups with an
+inner scan over each group's mamba layers; the shared block's params are
+closed over (replicated, single copy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.config import LMConfig
+from repro.launch.fsdp import maybe_unshard
+
+Array = jax.Array
+
+
+def _shared_attn_init(cfg: LMConfig, key) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_attn": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": L.gqa_init(ks[0], cfg.d_model, cfg.num_heads,
+                           cfg.num_kv_heads, hd, cfg.param_dtype),
+        "ln_ffn": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "ffn": L.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def num_groups(cfg: LMConfig) -> int:
+    assert cfg.attn_every and cfg.num_layers % cfg.attn_every == 0
+    return cfg.num_layers // cfg.attn_every
+
+
+def init(cfg: LMConfig, key) -> dict:
+    k_emb, k_blocks, k_shared, k_out = jax.random.split(key, 4)
+    per = cfg.attn_every
+    g = num_groups(cfg)
+    blocks = jax.vmap(
+        lambda k: {
+            "ln": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "mixer": M.mixer_init(cfg, k),
+        }
+    )(jax.random.split(k_blocks, cfg.num_layers))
+    # Reshape stacked layer params to (groups, per_group, ...).
+    blocks = jax.tree.map(
+        lambda x: x.reshape((g, per) + x.shape[1:]), blocks
+    )
+    return {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model,
+                              cfg.param_dtype),
+        "blocks": blocks,
+        "shared_attn": _shared_attn_init(cfg, k_shared),
+        "ln_final": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "unembed": L.dense_init(k_out, cfg.d_model, cfg.vocab_size,
+                                cfg.param_dtype),
+    }
+
+
+def _shared_attn_apply(cfg: LMConfig, p, h: Array, positions: Array) -> Array:
+    hd = cfg.resolved_head_dim
+    hn = L.rmsnorm(p["ln_attn"], h, cfg.norm_eps)
+    q, k, v = L.gqa_project(p["attn"], hn, cfg.num_heads, cfg.num_kv_heads, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    out = L.chunked_attention(
+        q, k, v, q_positions=positions, kv_positions=positions,
+        causal=True, window=cfg.sliding_window, chunk_size=cfg.attn_chunk, kv_chunk=cfg.attn_kv_chunk,
+        f32_softmax=cfg.attn_f32_softmax,
+    )
+    b, s = h.shape[:2]
+    h = h + L.dense(p["attn"]["wo"], out.reshape(b, s, cfg.num_heads * hd))
+    h = h + L.swiglu(p["ffn"], L.rmsnorm(p["ln_ffn"], h, cfg.norm_eps))
+    return h
+
+
+def forward_train(cfg: LMConfig, params, tokens: Array) -> tuple[Array, Array]:
+    h = L.embed(params["embed"], tokens, cfg.activation_dtype)
+    positions = jnp.arange(tokens.shape[1])
+
+    def inner(h, block_p):
+        block_p = maybe_unshard(block_p)
+        y, _ = M.mixer_apply(
+            cfg, block_p["mixer"], L.rmsnorm(block_p["ln"], h, cfg.norm_eps)
+        )
+        return h + y, None
+
+    def outer(h, group_p):
+        h, _ = jax.lax.scan(inner, h, group_p)
+        h = _shared_attn_apply(cfg, params["shared_attn"], h, positions)
+        return h, None
+
+    outer_fn = jax.checkpoint(outer) if cfg.remat else outer
+    h, _ = jax.lax.scan(outer_fn, h, params["blocks"])
+    h = L.rmsnorm(params["ln_final"], h, cfg.norm_eps)
+    logits = L.dense(params["unembed"], h)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: LMConfig, params, tokens: Array, labels: Array):
+    from repro.models.transformer import cross_entropy
+
+    logits, _ = forward_train(cfg, params, tokens)
+    ce = cross_entropy(logits, labels, chunk=cfg.logits_chunk)
+    return ce, {"ce": ce}
+
+
+def make_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    """Hybrid cache: per-layer SSM states + per-application KV cache."""
+    g = num_groups(cfg)
+    hd = cfg.resolved_head_dim
+    conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_conv_width - 1, conv_ch),
+            cfg.activation_dtype,
+        ),
+        "ssm": jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_nheads, cfg.ssm_headdim,
+             cfg.ssm_state),
+            jnp.float32,
+        ),
+        "k": jnp.zeros((g, batch, max_len, cfg.num_kv_heads, hd),
+                       cfg.activation_dtype),
+        "v": jnp.zeros((g, batch, max_len, cfg.num_kv_heads, hd),
+                       cfg.activation_dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def prefill(cfg: LMConfig, params, tokens: Array) -> tuple[Array, dict]:
+    h = L.embed(params["embed"], tokens, cfg.activation_dtype)
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    hd = cfg.resolved_head_dim
+
+    def inner(h, block_p):
+        block_p = maybe_unshard(block_p)
+        y, (conv_tail, state) = M.mixer_apply(
+            cfg, block_p["mixer"], L.rmsnorm(block_p["ln"], h, cfg.norm_eps)
+        )
+        return h + y, (conv_tail, state)
+
+    def outer(h, group_p):
+        h, (convs, states) = jax.lax.scan(inner, h, group_p)
+        p = params["shared_attn"]
+        hn = L.rmsnorm(p["ln_attn"], h, cfg.norm_eps)
+        q, k, v = L.gqa_project(p["attn"], hn, cfg.num_heads,
+                                cfg.num_kv_heads, hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        out = L.chunked_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            causal=True, window=cfg.sliding_window, chunk_size=cfg.attn_chunk, kv_chunk=cfg.attn_kv_chunk,
+        f32_softmax=cfg.attn_f32_softmax,
+        )
+        h = h + L.dense(p["attn"]["wo"],
+                        out.reshape(b, s, cfg.num_heads * hd))
+        h = h + L.swiglu(p["ffn"], L.rmsnorm(p["ln_ffn"], h, cfg.norm_eps))
+        return h, (convs, states, k, v)
+
+    h, (convs, states, ks, vs) = jax.lax.scan(outer, h, params["blocks"])
+    hl = L.rmsnorm(params["ln_final"], h[:, -1:], cfg.norm_eps)
+    logits = L.dense(params["unembed"], hl)[:, 0]
+    g, per = num_groups(cfg), cfg.attn_every
+    cache = {
+        "conv": convs.reshape((g * per,) + convs.shape[2:]),
+        "ssm": states.reshape((g * per,) + states.shape[2:]),
+        "k": ks, "v": vs,
+        "pos": jnp.broadcast_to(positions[None], (b, s)),
+    }
+    return logits, cache
+
+
+def decode_step(
+    cfg: LMConfig, params, cache: dict, token: Array, pos: Array
+) -> tuple[Array, dict]:
+    h = L.embed(params["embed"], token, cfg.activation_dtype)
+    b = token.shape[0]
+    g, per = num_groups(cfg), cfg.attn_every
+    hd = cfg.resolved_head_dim
+    w = cache["k"].shape[2]
+    window = cfg.decode_window or cfg.sliding_window
+    slot = (pos % w) if (cfg.decode_window or window) else jnp.minimum(pos, w - 1)
+    new_pos = cache["pos"].at[jnp.arange(b), slot].set(pos)
+
+    conv = jax.tree.map(lambda x: x.reshape((g, per) + x.shape[1:]),
+                        cache["conv"])
+    ssm = jax.tree.map(lambda x: x.reshape((g, per) + x.shape[1:]),
+                       cache["ssm"])
+
+    def inner(h, xs):
+        block_p, conv_c, ssm_c = xs
+        block_p = maybe_unshard(block_p)
+        y, (conv_tail, state) = M.mixer_apply(
+            cfg, block_p["mixer"], L.rmsnorm(block_p["ln"], h, cfg.norm_eps),
+            conv_state=conv_c, ssm_state=ssm_c, mode="decode",
+        )
+        return h + y, (conv_tail, state)
+
+    def outer(h, xs):
+        group_p, conv_g, ssm_g, k_c, v_c = xs
+        h, (convs, states) = jax.lax.scan(inner, h, (group_p, conv_g, ssm_g))
+        p = params["shared_attn"]
+        hn = L.rmsnorm(p["ln_attn"], h, cfg.norm_eps)
+        q, k, v = L.gqa_project(p["attn"], hn, cfg.num_heads,
+                                cfg.num_kv_heads, hd)
+        q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+        bidx = jnp.arange(b)
+        k_c = k_c.at[bidx, slot].set(k[:, 0])
+        v_c = v_c.at[bidx, slot].set(v[:, 0])
+        out = L.decode_attention(
+            q, k_c, v_c, q_position=pos, kv_positions=new_pos, window=window
+        )
+        h = h + L.dense(p["attn"]["wo"],
+                        out.reshape(b, 1, cfg.num_heads * hd))
+        h = h + L.swiglu(p["ffn"], L.rmsnorm(p["ln_ffn"], h, cfg.norm_eps))
+        return h, (convs, states, k_c, v_c)
+
+    h, (convs, states, ks, vs) = jax.lax.scan(
+        outer, h, (params["blocks"], conv, ssm, cache["k"], cache["v"])
+    )
+    h = L.rmsnorm(params["ln_final"], h, cfg.norm_eps)
+    logits = L.dense(params["unembed"], h)[:, 0]
+    cache = {
+        "conv": convs.reshape((g * per,) + convs.shape[2:]),
+        "ssm": states.reshape((g * per,) + states.shape[2:]),
+        "k": ks, "v": vs, "pos": new_pos,
+    }
+    return logits, cache

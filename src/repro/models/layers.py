@@ -1,0 +1,541 @@
+"""Shared neural-net primitives for the model zoo.
+
+Pure-function style: every layer is an ``init(key, ...) -> params`` plus an
+``apply(params, x, ...) -> y`` pair operating on plain dict pytrees (no flax
+dependency).  Attention is implemented with a chunked online-softmax scan —
+the XLA analogue of flash attention — so that 32k-token prefill lowers
+without materializing an S×S logits tensor.  The Pallas kernel in
+``repro/kernels/flash_attention.py`` is the TPU fast path; this module is the
+semantics-defining reference used on CPU and in dry-runs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale=None):
+    scale = (1.0 / math.sqrt(in_dim)) if scale is None else scale
+    return {
+        "w": (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+    }
+
+
+def dense_init_b(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale=None):
+    p = dense_init(key, in_dim, out_dim, dtype, scale)
+    p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def zeros_dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32):
+    del key
+    return {"w": jnp.zeros((in_dim, out_dim), dtype)}
+
+
+def dense(params, x: Array) -> Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"emb": (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)}
+
+
+def embed(params, ids: Array, dtype=None) -> Array:
+    tbl = params["emb"]
+    if dtype is not None:
+        tbl = tbl.astype(dtype)
+    return jnp.take(tbl, ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32, affine: bool = True):
+    if not affine:
+        return {}
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if "scale" in params:
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """Rotate pairs.  ``x``: (B, S, H, D); ``positions``: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)              # (D/2,)
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos[..., None] * freqs[None, None, :]     # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention — chunked online softmax (flash-style, pure XLA)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(q: Array, num_kv: int) -> Array:
+    """(B, S, Hq, D) -> (B, S, Hkv, G, D) grouping query heads per kv head."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, num_kv, hq // num_kv, d)
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    q_positions: Array,
+    kv_positions: Array,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    kv_valid: Array | None = None,
+    chunk_size: int = 512,
+    kv_chunk: int = 0,
+    f32_softmax: bool = True,
+    softmax_scale: float | None = None,
+) -> Array:
+    """Memory-efficient attention with GQA, causality, SWA and prefix-LM.
+
+    Args:
+      q: (B, Sq, Hq, D);  k/v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+      q_positions / kv_positions: absolute positions, (Sq,)/(Skv,) or (B, ·).
+      causal: apply ``kv_pos <= q_pos``.
+      window: if > 0, also require ``q_pos - kv_pos < window`` (SWA).
+      prefix_len: positions < prefix_len attend bidirectionally (PaliGemma
+        prefix-LM); only meaningful with ``causal=True``.
+      kv_valid: optional (B, Skv) bool mask of valid cache slots.
+      chunk_size: query-block length for the online-softmax scan.
+      kv_chunk: if > 0, additionally block the KV axis with an
+        online-softmax accumulator (flash-attention semantics in pure
+        XLA): per-(q,kv)-block logits only, never a (chunk, Skv) f32
+        tensor.  This is the §Perf 'online' attention variant; 0 keeps
+        the single-level baseline.
+
+    Never materializes an (Sq, Skv) tensor larger than
+    (chunk, kv_chunk or Skv).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None], (b, sq))
+    if kv_positions.ndim == 1:
+        kv_positions = jnp.broadcast_to(kv_positions[None], (b, skv))
+
+    # Pad Sq to a multiple of the chunk size.
+    n_chunks = max(1, -(-sq // chunk_size))
+    pad = n_chunks * chunk_size - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)))
+
+    qg = _gqa_expand(q, hkv)                               # (B, S, Hkv, G, D)
+    qg = jnp.moveaxis(qg, 1, -2)                           # (B, Hkv, G, S, D)
+    qg = qg.reshape(b, hkv, g, n_chunks, chunk_size, d)
+    qpos = q_positions.reshape(b, n_chunks, chunk_size)
+
+    kT = jnp.moveaxis(k, 1, 3)                             # (B, Hkv, D, Skv)
+    vv = jnp.moveaxis(v, 1, 2)                             # (B, Hkv, Skv, D)
+
+    # No masking at all (encoder/cross attention with no cache): skip the
+    # where() — it materializes a full logits-sized copy in unfused HLO.
+    unmasked = not causal and not window and kv_valid is None
+
+    def _block_mask(qp, kp):
+        """(B, C) q-positions × (B, K) kv-positions -> (B, C, K) bool."""
+        mask = jnp.ones((qp.shape[0], qp.shape[1], kp.shape[1]), bool)
+        if causal:
+            cmask = kp[:, None, :] <= qp[:, :, None]
+            if prefix_len:
+                bidir = (kp[:, None, :] < prefix_len) & (
+                    qp[:, :, None] < prefix_len
+                )
+                cmask = cmask | bidir
+            mask = mask & cmask
+        if window:
+            mask = mask & (qp[:, :, None] - kp[:, None, :] < window)
+        return mask
+
+    # Softmax-chain precision: f32 (default) materializes the (chunk, Skv)
+    # logits/probs chain in f32; bf16 halves the dominant HBM traffic of
+    # long-sequence prefill (§Perf iteration) — the MXU still accumulates
+    # the dots in f32 internally, and the row max/denominator stay f32.
+    sdtype = jnp.float32 if f32_softmax else jnp.bfloat16
+    neg = jnp.asarray(NEG_INF if f32_softmax else -3e38, sdtype)
+
+    def one_chunk(c):
+        qc = qg[:, :, :, c]                                # (B, Hkv, G, C, D)
+        qp = qpos[:, c]                                    # (B, C)
+        logits = jnp.einsum(
+            "bhgcd,bhds->bhgcs", qc.astype(sdtype), kT.astype(sdtype),
+            preferred_element_type=sdtype,
+        ) * jnp.asarray(scale, sdtype)                     # (B,Hkv,G,C,Skv)
+        if not unmasked:
+            mask = _block_mask(qp, kv_positions)
+            if kv_valid is not None:
+                mask = mask & kv_valid[:, None, :]
+            logits = jnp.where(mask[:, None, None], logits, neg)
+        m = jnp.max(logits.astype(jnp.float32), axis=-1, keepdims=True)
+        m = jnp.maximum(m, NEG_INF)
+        p = jnp.exp((logits - m.astype(sdtype)).astype(sdtype))
+        denom = jnp.maximum(
+            jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True), 1e-30
+        )
+        out = jnp.einsum(
+            "bhgcs,bhsd->bhgcd", p, vv.astype(sdtype),
+            preferred_element_type=jnp.float32,
+        ) / denom
+        return out                                         # (B,Hkv,G,C,D)
+
+    def one_chunk_online(c):
+        """Double-blocked online softmax (flash semantics in XLA).
+
+        Inner lax.scan over kv blocks carries (m, l, acc); per-step
+        materialization is only (B, Hkv, G, C, kv_chunk)."""
+        qc = qg[:, :, :, c].astype(jnp.float32)            # (B,Hkv,G,C,D)
+        qp = qpos[:, c]                                    # (B, C)
+        nk = skv // kv_chunk
+        kT_blk = kT.reshape(b, hkv, d, nk, kv_chunk)
+        vv_blk = vv.reshape(b, hkv, nk, kv_chunk, d)
+        kp_blk = kv_positions.reshape(b, nk, kv_chunk)
+        valid_blk = (kv_valid.reshape(b, nk, kv_chunk)
+                     if kv_valid is not None else None)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            logits = jnp.einsum(
+                "bhgcd,bhdk->bhgck", qc,
+                kT_blk[:, :, :, j].astype(jnp.float32),
+            ) * scale
+            mask = _block_mask(qp, kp_blk[:, j])
+            if valid_blk is not None:
+                mask = mask & valid_blk[:, j][:, None, :]
+            logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, -1, keepdims=True))
+            p = jnp.exp(logits - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, -1, keepdims=True)
+            acc = alpha * acc + jnp.einsum(
+                "bhgck,bhkd->bhgcd", p,
+                vv_blk[:, :, j].astype(jnp.float32),
+            )
+            return (m_new, l, acc), None
+
+        init = (
+            jnp.full((b, hkv, g, chunk_size, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, chunk_size, 1), jnp.float32),
+            jnp.zeros((b, hkv, g, chunk_size, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)                 # (B,Hkv,G,C,D)
+
+    if kv_chunk and skv % kv_chunk == 0 and skv > kv_chunk:
+        one_chunk = one_chunk_online
+
+    outs = jax.lax.map(one_chunk, jnp.arange(n_chunks))    # (N,B,Hkv,G,C,D)
+    out = jnp.moveaxis(outs, 0, 3)                         # (B,Hkv,G,N,C,D)
+    out = out.reshape(b, hkv, g, n_chunks * chunk_size, d)
+    out = jnp.moveaxis(out, 3, 1)                          # (B,S,Hkv,G,D)
+    out = out.reshape(b, n_chunks * chunk_size, hq, d)
+    if pad:
+        out = out[:, :sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    *,
+    q_position: Array,
+    kv_positions: Array,
+    window: int = 0,
+    softmax_scale: float | None = None,
+) -> Array:
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    Args:
+      q: (B, 1, Hq, D).
+      k_cache/v_cache: (B, Skv, Hkv, D).
+      q_position: (B,) absolute position of the new token.
+      kv_positions: (B, Skv) absolute positions stored in each slot; slots
+        with position < 0 or > q_position or outside the window are masked.
+    """
+    b, skv, hkv, d = k_cache.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum(
+        "bhgd,bshd->bhgs", qg.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * scale
+    valid = (kv_positions >= 0) & (kv_positions <= q_position[:, None])
+    if window:
+        valid = valid & (q_position[:, None] - kv_positions < window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + attention)
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(
+    key,
+    d_model: int,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    dtype=jnp.float32,
+    qkv_bias: bool = False,
+):
+    ks = jax.random.split(key, 4)
+    mk = dense_init_b if qkv_bias else dense_init
+    return {
+        "wq": mk(ks[0], d_model, num_heads * head_dim, dtype),
+        "wk": mk(ks[1], d_model, num_kv_heads * head_dim, dtype),
+        "wv": mk(ks[2], d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+
+
+def gqa_project(params, x: Array, num_heads: int, num_kv_heads: int,
+                head_dim: int):
+    b, s, _ = x.shape
+    q = dense(params["wq"], x).reshape(b, s, num_heads, head_dim)
+    k = dense(params["wk"], x).reshape(b, s, num_kv_heads, head_dim)
+    v = dense(params["wv"], x).reshape(b, s, num_kv_heads, head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward variants
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params, x: Array) -> Array:
+    return dense(
+        params["w_down"],
+        jax.nn.silu(dense(params["w_gate"], x)) * dense(params["w_up"], x),
+    )
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {
+        "w1": dense_init_b(ks[0], d_model, d_ff, dtype),
+        "w2": dense_init_b(ks[1], d_ff, d_model, dtype),
+    }
+
+
+def gelu_mlp(params, x: Array) -> Array:
+    return dense(params["w2"], jax.nn.gelu(dense(params["w1"], x)))
+
+
+# ---------------------------------------------------------------------------
+# MoE (Mixtral-style top-k with capacity + scatter dispatch)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, d_model: int, d_ff: int, num_experts: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d_model)
+    sf = 1.0 / math.sqrt(d_ff)
+    return {
+        "router": dense_init(ks[0], d_model, num_experts, jnp.float32),
+        "w_gate": (
+            jax.random.normal(ks[1], (num_experts, d_model, d_ff)) * sc
+        ).astype(dtype),
+        "w_up": (
+            jax.random.normal(ks[2], (num_experts, d_model, d_ff)) * sc
+        ).astype(dtype),
+        "w_down": (
+            jax.random.normal(ks[3], (num_experts, d_ff, d_model)) * sf
+        ).astype(dtype),
+    }
+
+
+def moe_apply(
+    params,
+    x: Array,
+    *,
+    num_experts_per_tok: int = 2,
+    capacity_factor: float = 1.25,
+    impl: str = "dropping",
+) -> tuple[Array, Array]:
+    """Top-k routed MoE FFN.
+
+    Returns ``(y, aux_loss)`` where ``aux_loss`` is the Switch/Mixtral
+    load-balance loss ``E * sum_e f_e * p_e``.
+
+    ``impl='dropping'``: GShard-style capacity dispatch via scatter — only
+    top-k expert FLOPs are spent (plus drops).  ``impl='dense'``: every
+    expert processes every token (upper-bound FLOPs; used as the naive
+    baseline in §Perf).
+    """
+    b, s, d = x.shape
+    e = params["w_gate"].shape[0]
+    k = num_experts_per_tok
+    xf = x.reshape(b * s, d)
+    t = xf.shape[0]
+
+    logits = dense(params["router"], xf.astype(jnp.float32))    # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, k)                        # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch eq. 4): E * sum_e f_e p_e.
+    sel_mask = jax.nn.one_hot(tope[:, 0], e, dtype=jnp.float32)
+    f = sel_mask.mean(axis=0)
+    p = probs.mean(axis=0)
+    aux = e * jnp.sum(f * p)
+
+    def ffn_all(h):     # (..., d) -> per-expert ffn, h has leading E axis
+        g = jnp.einsum("ecd,edf->ecf", h, params["w_gate"].astype(h.dtype))
+        u = jnp.einsum("ecd,edf->ecf", h, params["w_up"].astype(h.dtype))
+        return jnp.einsum(
+            "ecf,efd->ecd", jax.nn.silu(g) * u,
+            params["w_down"].astype(h.dtype),
+        )
+
+    if impl in ("dense", "dense_scan"):
+        # Every expert processes every token (upper-bound FLOPs: E/k× the
+        # active compute), weighted by its gate.  Sharding-friendly: no
+        # scatter/gather, tokens stay batch-sharded, expert weights stay
+        # (data, model)-sharded.  'dense_scan' accumulates expert-by-expert
+        # so peak memory is one (T, F) buffer instead of (E, T, F).
+        w_full = jnp.zeros((t, e), xf.dtype)
+        w_full = w_full.at[jnp.arange(t)[:, None], tope].set(
+            topw.astype(xf.dtype)
+        )
+        if impl == "dense":
+            y_all = ffn_all(jnp.broadcast_to(xf[None], (e, t, d)))
+            y = jnp.einsum("etd,te->td", y_all, w_full)
+            return y.reshape(b, s, d), aux
+
+        def one_expert(y, packed):
+            wg, wu, wd, we = packed
+            g = xf @ wg.astype(xf.dtype)
+            u = xf @ wu.astype(xf.dtype)
+            yo = (jax.nn.silu(g) * u) @ wd.astype(xf.dtype)
+            return y + yo * we[:, None], None
+
+        y, _ = jax.lax.scan(
+            one_expert, jnp.zeros_like(xf),
+            (params["w_gate"], params["w_up"], params["w_down"],
+             jnp.moveaxis(w_full, 0, 1)),
+        )
+        return y.reshape(b, s, d), aux
+
+    if impl == "dense_fused":
+        # §Perf variant: batch all experts into single dots so the
+        # row-parallel (F-sharded) contraction incurs ONE partial-sum
+        # all-reduce per layer instead of one per expert (dense_scan's
+        # per-iteration matmul each triggers its own reduction).  Peak
+        # activation is (E, T, F/shards) — fine at F-sharded widths.
+        w_full = jnp.zeros((t, e), xf.dtype)
+        w_full = w_full.at[jnp.arange(t)[:, None], tope].set(
+            topw.astype(xf.dtype)
+        )
+        g = jnp.einsum("td,edf->etf", xf, params["w_gate"].astype(xf.dtype))
+        u = jnp.einsum("td,edf->etf", xf, params["w_up"].astype(xf.dtype))
+        z = jax.nn.silu(g) * u
+        # single contraction over (e, f): weights folded in first so the
+        # all-reduce output is only (T, D).
+        y = jnp.einsum("etf,efd,te->td", z,
+                       params["w_down"].astype(xf.dtype), w_full)
+        return y.reshape(b, s, d), aux
+
+    # --- capacity dispatch ---
+    cap = int(max(1, math.ceil(t * k / e * capacity_factor)))
+    flat_e = tope.reshape(-1)                                  # (T*k,)
+    flat_w = topw.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    # position within expert: cumulative count of earlier assignments.
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                  # exclusive
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < cap
+    slot = jnp.where(keep, flat_e * cap + flat_pos, e * cap)   # overflow slot
+    buf = jnp.zeros((e * cap + 1, d), xf.dtype)
+    buf = buf.at[slot].add(xf[flat_t])
+    y_buf = ffn_all(buf[: e * cap].reshape(e, cap, d))
+    y_flat = y_buf.reshape(e * cap, d)
+    y_tok = jnp.where(
+        keep[:, None], jnp.take(y_flat, jnp.minimum(slot, e * cap - 1), axis=0), 0.0
+    )
+    y = jnp.zeros_like(xf)
+    y = y.at[flat_t].add(y_tok * flat_w[:, None].astype(xf.dtype))
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,378 @@
+"""Mamba2 / SSD (state-space duality) backbone [arXiv:2405.21060].
+
+Assigned architectures: mamba2-2.7b (pure SSM) and the mamba trunk of
+zamba2-2.7b (hybrid).  The SSD recurrence per head h with state (P, N):
+
+    s_t = exp(dt_t * A_h) * s_{t-1} + dt_t * x_t ⊗ B_t
+    y_t = s_t · C_t + D_h * x_t
+
+Training uses the *chunked* SSD algorithm (matmul-rich, MXU-friendly —
+this is the TPU adaptation of the paper's GPU scan): intra-chunk terms via
+masked (C Bᵀ ⊙ L) x matmuls, inter-chunk terms via a `lax.scan` over chunk
+states.  Decode is the O(1) single-token state update — this is why the SSM
+archs run long_500k natively.
+
+``ssd_sequential`` is the slow oracle used by tests and mirrored by the
+Pallas kernel in ``repro/kernels/ssd_scan.py``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import LMConfig
+from repro.launch.fsdp import maybe_unshard
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_sequential(
+    x: Array, dt: Array, A: Array, B: Array, C: Array,
+    init_state: Array | None = None,
+) -> tuple[Array, Array]:
+    """Reference recurrence.
+
+    Args:
+      x: (b, s, h, p) inner activations.
+      dt: (b, s, h) positive step sizes.
+      A: (h,) negative decay rates.
+      B, C: (b, s, n) input/output projections (single group).
+      init_state: optional (b, h, p, n).
+
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    state = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None else init_state.astype(jnp.float32)
+    )
+
+    def step(state, inputs):
+        xt, dtt, Bt, Ct = inputs
+        decay = jnp.exp(dtt * A)[:, :, None, None]          # (b,h,1,1)
+        upd = (dtt[:, :, None] * xt)[..., None] * Bt[:, None, None, :]
+        state = decay * state + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def _segsum(a: Array) -> Array:
+    """Stable segment-sum: L[i, j] = sum_{k=j+1..i} a_k for i >= j, -inf else.
+
+    a: (..., q).  Returns (..., q, q).
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]               # sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: Array, dt: Array, A: Array, B: Array, C: Array,
+    *, chunk: int = 128, init_state: Array | None = None,
+) -> tuple[Array, Array]:
+    """Chunked SSD (training path).  Same signature as ssd_sequential."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, q, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, q, n)
+
+    a = dtf * A[None, None, None, :]                          # (b,nc,q,h) log-decay
+    a_h = jnp.moveaxis(a, -1, 2)                              # (b,nc,h,q)
+    Lmat = jnp.exp(_segsum(a_h))                              # (b,nc,h,q,q)
+
+    # Intra-chunk output: y[i] += sum_{j<=i} C_i·B_j L_ij dt_j x_j
+    CB = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)                # (b,nc,q,q)
+    scores = CB[:, :, None] * Lmat                            # (b,nc,h,i,j)
+    xdt = xf * dtf[..., None]                                 # (b,nc,q,h,p)
+    y_intra = jnp.einsum(
+        "bchij,bcjhp->bcihp", scores, xdt
+    )
+
+    # Per-chunk final-state contribution and decay-to-end factors.
+    cum = jnp.cumsum(a_h, axis=-1)                            # (b,nc,h,q)
+    total = cum[..., -1:]                                     # (b,nc,h,1)
+    decay_to_end = jnp.exp(total - cum)                       # (b,nc,h,q)
+    # state_c = sum_j exp(sum_{k>j} a_k) dt_j x_j ⊗ B_j
+    w = jnp.moveaxis(decay_to_end, 2, -1)                     # (b,nc,q,h)
+    states = jnp.einsum("bcqhp,bcqh,bcqn->bchpn", xf, dtf * w, Bf)
+
+    chunk_decay = jnp.exp(total[..., 0])                      # (b,nc,h)
+
+    init = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None else init_state.astype(jnp.float32)
+    )
+
+    def carry_fn(state, inputs):
+        st_c, dec_c = inputs                                  # (b,h,p,n), (b,h)
+        prev = state
+        state = dec_c[..., None, None] * state + st_c
+        return state, prev
+
+    final, prevs = jax.lax.scan(
+        carry_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prevs = jnp.moveaxis(prevs, 0, 1)                         # (b,nc,h,p,n)
+
+    # Inter-chunk output: y[i] += exp(cum_i) C_i · state_{c-1}
+    decay_in = jnp.exp(cum)                                   # (b,nc,h,q)
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bchi->bcihp", Cf, prevs, decay_in
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    state: Array, x: Array, dt: Array, A: Array, B: Array, C: Array
+) -> tuple[Array, Array]:
+    """Single-token state update.
+
+    state: (b,h,p,n); x: (b,h,p); dt: (b,h); B,C: (b,n).
+    Returns (y (b,h,p), new_state).
+    """
+    decay = jnp.exp(dt * A)[:, :, None, None]
+    upd = (dt[:, :, None] * x)[..., None] * B[:, None, None, :]
+    state = decay * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 mixer block
+# ---------------------------------------------------------------------------
+
+
+def mixer_init(cfg: LMConfig, key) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_nheads
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 5)
+    dt = jnp.exp(
+        jax.random.uniform(ks[3], (h,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    return {
+        "in_proj": L.dense_init(
+            ks[0], d, 2 * di + 2 * n + h, cfg.param_dtype
+        ),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch))
+                   * (1.0 / math.sqrt(cfg.ssm_conv_width))
+                   ).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": (jnp.log(jnp.expm1(dt))).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_norm": L.rmsnorm_init(di, cfg.param_dtype),
+        "out_proj": L.dense_init(ks[2], di, d, cfg.param_dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 init: Array | None = None) -> tuple[Array, Array]:
+    """Depthwise causal conv1d (width K).  x: (B, S, C); w: (K, C).
+
+    Returns (y, tail) where tail (B, K-1, C) is the new conv cache.
+    """
+    kw = w.shape[0]
+    if init is None:
+        init = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+        for i in range(kw)
+    )
+    tail = xp[:, -(kw - 1):] if kw > 1 else init
+    return y + b.astype(x.dtype), tail
+
+
+def _split_proj(cfg: LMConfig, zxbcdt: Array):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt_raw = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt_raw
+
+
+def mixer_apply(
+    cfg: LMConfig, p, hid: Array, *,
+    conv_state: Array | None = None,
+    ssm_state: Array | None = None,
+    mode: str = "train",
+) -> tuple[Array, tuple[Array, Array]]:
+    """Apply the Mamba2 mixer.  mode: 'train' (chunked) | 'decode' (S==1)."""
+    b, s, _ = hid.shape
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    pdim = cfg.ssm_headdim
+
+    zxbcdt = L.dense(p["in_proj"], hid)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :di].reshape(b, s, h, pdim)
+    B = xbc[..., di : di + n]
+    C = xbc[..., di + n :]
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"][None, None]
+    )
+    A = -jnp.exp(p["A_log"])
+
+    if mode == "decode":
+        assert s == 1
+        y1, new_state = ssd_decode_step(
+            ssm_state, x[:, 0].astype(jnp.float32), dt[:, 0], A,
+            B[:, 0].astype(jnp.float32), C[:, 0].astype(jnp.float32),
+        )
+        y = y1[:, None]
+    else:
+        y, new_state = ssd_chunked(
+            x, dt, A, B, C, chunk=cfg.ssm_chunk, init_state=ssm_state
+        )
+    y = y.astype(hid.dtype)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * x.astype(y.dtype)
+    y = y.reshape(b, s, di)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z.astype(y.dtype)),
+                  cfg.norm_eps)
+    out = L.dense(p["out_proj"], y)
+    return out.astype(hid.dtype), (conv_tail.astype(hid.dtype), new_state)
+
+
+# ---------------------------------------------------------------------------
+# Full pure-SSM model (mamba2-2.7b)
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(cfg: LMConfig, key):
+    return {
+        "ln": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "mixer": mixer_init(cfg, key),
+    }
+
+
+def init(cfg: LMConfig, key) -> dict:
+    k_emb, k_blocks, k_out = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: _layer_init(cfg, k))(
+        jax.random.split(k_blocks, cfg.num_layers)
+    )
+    return {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model,
+                              cfg.param_dtype),
+        "blocks": blocks,
+        "ln_final": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "unembed": L.dense_init(k_out, cfg.d_model, cfg.vocab_size,
+                                cfg.param_dtype),
+    }
+
+
+def forward_train(cfg: LMConfig, params, tokens: Array) -> tuple[Array, Array]:
+    h = L.embed(params["embed"], tokens, cfg.activation_dtype)
+
+    def body(h, block_p):
+        block_p = maybe_unshard(block_p)
+        y, _ = mixer_apply(
+            cfg, block_p["mixer"],
+            L.rmsnorm(block_p["ln"], h, cfg.norm_eps),
+        )
+        return h + y, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["blocks"])
+    h = L.rmsnorm(params["ln_final"], h, cfg.norm_eps)
+    logits = L.dense(params["unembed"], h)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: LMConfig, params, tokens: Array, labels: Array):
+    from repro.models.transformer import cross_entropy
+
+    logits, _ = forward_train(cfg, params, tokens)
+    ce = cross_entropy(logits, labels, chunk=cfg.logits_chunk)
+    return ce, {"ce": ce}
+
+
+def make_cache(cfg: LMConfig, batch: int, max_len: int = 0) -> dict:
+    """SSM decode cache: conv tail + state per layer.  O(1) in seq len."""
+    del max_len
+    conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_conv_width - 1, conv_ch),
+            cfg.activation_dtype,
+        ),
+        "ssm": jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_nheads, cfg.ssm_headdim,
+             cfg.ssm_state),
+            jnp.float32,
+        ),
+    }
+
+
+def prefill(cfg: LMConfig, params, tokens: Array) -> tuple[Array, dict]:
+    h = L.embed(params["embed"], tokens, cfg.activation_dtype)
+
+    def body(h, block_p):
+        block_p = maybe_unshard(block_p)
+        y, (conv_tail, state) = mixer_apply(
+            cfg, block_p["mixer"],
+            L.rmsnorm(block_p["ln"], h, cfg.norm_eps),
+        )
+        return h + y, (conv_tail, state)
+
+    h, (convs, states) = jax.lax.scan(body, h, params["blocks"])
+    hl = L.rmsnorm(params["ln_final"], h[:, -1:], cfg.norm_eps)
+    logits = L.dense(params["unembed"], hl)[:, 0]
+    return logits, {"conv": convs, "ssm": states}
+
+
+def decode_step(
+    cfg: LMConfig, params, cache: dict, token: Array, pos: Array
+) -> tuple[Array, dict]:
+    del pos  # state carries all history
+    h = L.embed(params["embed"], token, cfg.activation_dtype)
+
+    def body(h, xs):
+        block_p, conv_c, ssm_c = xs
+        block_p = maybe_unshard(block_p)
+        y, (conv_tail, state) = mixer_apply(
+            cfg, block_p["mixer"],
+            L.rmsnorm(block_p["ln"], h, cfg.norm_eps),
+            conv_state=conv_c, ssm_state=ssm_c, mode="decode",
+        )
+        return h + y, (conv_tail, state)
+
+    h, (convs, states) = jax.lax.scan(
+        body, h, (params["blocks"], cache["conv"], cache["ssm"])
+    )
+    h = L.rmsnorm(params["ln_final"], h, cfg.norm_eps)
+    logits = L.dense(params["unembed"], h)[:, 0]
+    return logits, {"conv": convs, "ssm": states}

@@ -1,0 +1,90 @@
+"""Unified model-zoo dispatch.
+
+Every assigned architecture maps to one of four backbone modules; this
+registry gives launch/, training/ and tests a single interface:
+
+    init(cfg, key) -> params
+    loss_fn(cfg, params, batch) -> (loss, metrics)
+    forward_train(cfg, params, batch) -> (logits, aux)
+    prefill(cfg, params, batch) -> (logits, cache)
+    make_cache(cfg, batch_size, max_len) -> cache
+    decode_step(cfg, params, cache, token, pos) -> (logits, cache)
+
+``batch`` is a dict: tokens / labels (+ audio_embeds or vision_embeds for
+the stubbed-frontend archs).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, mamba2, transformer
+from repro.models.config import LMConfig
+
+Array = jax.Array
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "audio": encdec,
+}
+
+
+def backbone(cfg: LMConfig):
+    return _FAMILY[cfg.arch_type]
+
+
+def init(cfg: LMConfig, key) -> Any:
+    return backbone(cfg).init(cfg, key)
+
+
+def _extra_kwargs(cfg: LMConfig, batch: dict) -> dict:
+    if cfg.arch_type == "audio":
+        return {"audio_embeds": batch["audio_embeds"]}
+    if cfg.arch_type == "vlm":
+        return {"vision_embeds": batch["vision_embeds"]}
+    return {}
+
+
+def loss_fn(cfg: LMConfig, params, batch: dict):
+    m = backbone(cfg)
+    return m.loss_fn(cfg, params, batch["tokens"], batch["labels"],
+                     **_extra_kwargs(cfg, batch))
+
+
+def forward_train(cfg: LMConfig, params, batch: dict):
+    m = backbone(cfg)
+    return m.forward_train(cfg, params, batch["tokens"],
+                           **_extra_kwargs(cfg, batch))
+
+
+def prefill(cfg: LMConfig, params, batch: dict):
+    m = backbone(cfg)
+    return m.prefill(cfg, params, batch["tokens"], **_extra_kwargs(cfg, batch))
+
+
+def make_cache(cfg: LMConfig, batch_size: int, max_len: int):
+    return backbone(cfg).make_cache(cfg, batch_size, max_len)
+
+
+def decode_step(cfg: LMConfig, params, cache, token: Array, pos: Array):
+    return backbone(cfg).decode_step(cfg, params, cache, token, pos)
+
+
+def supports_long_context(cfg: LMConfig) -> bool:
+    """True when 500k-token decode is sub-quadratic/O(1)-state.
+
+    SSM/hybrid natively; attention archs only under a sliding/decode window
+    (ring-buffer cache) — see DESIGN.md §Arch-applicability.
+    """
+    if cfg.arch_type in ("ssm",):
+        return True
+    if cfg.arch_type == "hybrid":
+        return bool(cfg.decode_window or cfg.sliding_window)
+    return bool(cfg.decode_window or cfg.sliding_window)

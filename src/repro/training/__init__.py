@@ -1,0 +1,10 @@
+from repro.training.optimizer import (
+    AdamWConfig, AdamWState, adamw_init, adamw_update, ema_init, ema_update,
+    clip_by_global_norm, global_norm, lr_schedule,
+)
+from repro.training.trainer import (
+    ExpertTrainer, RouterTrainer, TrainState, make_lm_train_step,
+)
+from repro.training.checkpoint import (
+    save_checkpoint, load_checkpoint, expert_metadata,
+)

@@ -1,0 +1,89 @@
+"""npz checkpointing with pytree flattening + expert metadata.
+
+Decentralized experts checkpoint independently (no coordination); each
+checkpoint carries its objective/schedule/cluster metadata so the serving
+engine can assemble a heterogeneous ensemble from a directory of expert
+checkpoints produced by unrelated contributors (paper §5 limitation iv —
+self-describing expert metadata).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "::"
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{SEP}"))
+    else:
+        out[prefix.rstrip(SEP[-1]).rstrip(SEP[0])] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split(SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+    return _intify(tree)
+
+
+def _intify(node):
+    """Convert dicts whose keys are 0..n-1 back into lists."""
+    if not isinstance(node, dict):
+        return node
+    node = {k: _intify(v) for k, v in node.items()}
+    keys = list(node)
+    if keys and all(k.isdigit() for k in keys):
+        idx = sorted(int(k) for k in keys)
+        if idx == list(range(len(idx))):
+            return [node[str(i)] for i in idx]
+    return node
+
+
+def save_checkpoint(
+    path: str, params: Any, *, metadata: dict | None = None
+) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    meta = json.dumps(metadata or {})
+    np.savez(path, __metadata__=np.asarray(meta), **flat)
+
+
+def load_checkpoint(path: str) -> tuple[Any, dict]:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__metadata__"]))
+        flat = {k: z[k] for k in z.files if k != "__metadata__"}
+    return _unflatten(flat), meta
+
+
+def expert_metadata(
+    *, name: str, objective: str, schedule: str, cluster_id: int,
+    arch: str, step: int = 0, extra: dict | None = None,
+) -> dict:
+    md = {
+        "name": name, "objective": objective, "schedule": schedule,
+        "cluster_id": cluster_id, "arch": arch, "step": step,
+        "format_version": 1,
+    }
+    if extra:
+        md.update(extra)
+    return md

@@ -1,0 +1,129 @@
+"""Optimizer substrate (optax-lite, built in-repo per scope rules).
+
+AdamW exactly as §6.2: β1=0.9, β2=0.999, ε=1e-8, weight decay 0 for
+experts / 1e-2 for the router, linear warmup, optional cosine decay,
+global-norm gradient clipping (max 1.0), and EMA(0.9999) of parameters
+updated after every step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    warmup_steps: int = 5000
+    total_steps: int = 500_000
+    cosine_decay: bool = False
+    min_lr_ratio: float = 0.01
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: PyTree
+    nu: PyTree
+
+
+def lr_schedule(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup then constant (paper) or cosine decay (router §6.3)."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(cfg.warmup_steps, 1))
+    if not cfg.cosine_decay:
+        return cfg.learning_rate * warm
+    frac = jnp.clip(
+        (step - cfg.warmup_steps)
+        / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    floor = cfg.min_lr_ratio
+    return cfg.learning_rate * warm * (floor + (1.0 - floor) * cos)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads: PyTree, state: AdamWState, params: PyTree
+) -> tuple[PyTree, AdamWState, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr,
+    }
+
+
+# --- EMA (§6.2) --------------------------------------------------------------
+
+
+def ema_init(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+
+def ema_update(ema: PyTree, params: PyTree, decay: float = 0.9999) -> PyTree:
+    return jax.tree.map(
+        lambda e, p: decay * e + (1.0 - decay) * p.astype(jnp.float32),
+        ema, params,
+    )

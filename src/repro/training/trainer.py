@@ -1,0 +1,185 @@
+"""Trainers: isolated diffusion experts, router, and LM smoke-training.
+
+The expert trainer is deliberately self-contained — one expert, one data
+partition, one optimizer; nothing references any other expert.  The
+decentralization of the paper is enforced by construction: training K
+experts is literally K independent invocations of ``ExpertTrainer`` (in the
+paper, on K different contributors' GPUs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objectives import diffusion_loss, sample_timesteps
+from repro.core.schedules import Schedule, get_schedule
+from repro.training.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    ema_init,
+    ema_update,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: AdamWState
+    ema: Any
+    step: int = 0
+
+
+@dataclasses.dataclass
+class ExpertTrainer:
+    """One decentralized diffusion expert (paper §6.2).
+
+    apply_fn(params, x_t, t, text_emb=...) -> prediction.
+    """
+
+    apply_fn: Callable[..., Array]
+    objective: str                      # 'ddpm' | 'fm'
+    schedule_name: str                  # 'cosine' | 'linear'
+    opt: AdamWConfig = AdamWConfig()
+    cfg_drop_prob: float = 0.1          # classifier-free guidance dropout
+    ema_decay: float = 0.9999
+
+    def __post_init__(self):
+        self.schedule: Schedule = get_schedule(self.schedule_name)
+        self._step = jax.jit(self._train_step)
+
+    def init_state(self, params) -> TrainState:
+        return TrainState(
+            params=params, opt_state=adamw_init(params),
+            ema=ema_init(params), step=0,
+        )
+
+    def loss(self, params, key, latents: Array, text_emb: Array | None):
+        k_t, k_eps, k_drop = jax.random.split(key, 3)
+        b = latents.shape[0]
+        t = sample_timesteps(k_t, b, objective=self.objective)
+        eps = jax.random.normal(k_eps, latents.shape)
+        cond: dict = {}
+        if text_emb is not None:
+            # paper §2.5: conditioning dropped with p=0.1; dropped samples
+            # use the learned null embedding (handled by the model given
+            # the per-sample drop mask).
+            drop = jax.random.bernoulli(k_drop, self.cfg_drop_prob, (b,))
+            cond = {"text_emb": text_emb, "drop_mask": drop}
+        return diffusion_loss(
+            self.apply_fn, params, latents, eps, t,
+            objective=self.objective, schedule=self.schedule, cond=cond,
+        )
+
+    def _train_step(self, state_tuple, key, latents, text_emb):
+        params, opt_state, ema = state_tuple
+        loss, grads = jax.value_and_grad(
+            lambda p: self.loss(p, key, latents, text_emb)
+        )(params)
+        params, opt_state, metrics = adamw_update(
+            self.opt, grads, opt_state, params
+        )
+        ema = ema_update(ema, params, self.ema_decay)
+        return params, opt_state, ema, loss, metrics
+
+    def train_step(self, state: TrainState, key, batch: dict) -> tuple[
+        TrainState, dict
+    ]:
+        params, opt_state, ema, loss, metrics = self._step(
+            (state.params, state.opt_state, state.ema),
+            key, batch["latents"], batch.get("text_emb"),
+        )
+        return TrainState(params, opt_state, ema, state.step + 1), {
+            "loss": float(loss), **{k: float(v) for k, v in metrics.items()},
+        }
+
+
+@dataclasses.dataclass
+class RouterTrainer:
+    """Router classifier over noisy latents (paper §6.3).
+
+    Trains with CE against ground-truth cluster ids; timesteps sampled
+    uniformly in both objective domains so the router covers DDPM's
+    discrete grid and FM's continuous range.
+    """
+
+    apply_fn: Callable[..., Array]       # (params, x_t, t) -> (B, K) logits
+    num_clusters: int
+    opt: AdamWConfig = AdamWConfig(
+        learning_rate=5e-5, weight_decay=1e-2, warmup_steps=0,
+        cosine_decay=True, min_lr_ratio=0.01,
+    )
+
+    def __post_init__(self):
+        self._step = jax.jit(self._train_step)
+        self._lin = get_schedule("linear")
+        self._cos = get_schedule("cosine")
+
+    def init_state(self, params) -> TrainState:
+        return TrainState(
+            params=params, opt_state=adamw_init(params),
+            ema=ema_init(params), step=0,
+        )
+
+    def loss(self, params, key, latents: Array, labels: Array):
+        k_t, k_eps, k_mix = jax.random.split(key, 3)
+        b = latents.shape[0]
+        t = jax.random.uniform(k_t, (b,))
+        eps = jax.random.normal(k_eps, latents.shape)
+        # §6.3 timestep sampling: half the batch perturbed with the DDPM
+        # cosine schedule, half with the FM linear path.
+        use_cos = jax.random.bernoulli(k_mix, 0.5, (b,))
+        x_cos = self._cos.perturb(latents, eps, t)
+        x_lin = self._lin.perturb(latents, eps, t)
+        x_t = jnp.where(use_cos[:, None, None, None], x_cos, x_lin)
+        logits = self.apply_fn(params, x_t, t)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.mean(
+            jnp.take_along_axis(logp, labels[:, None], axis=-1)
+        )
+        acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+        return ce, acc
+
+    def _train_step(self, state_tuple, key, latents, labels):
+        params, opt_state, ema = state_tuple
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: self.loss(p, key, latents, labels), has_aux=True
+        )(params)
+        params, opt_state, metrics = adamw_update(
+            self.opt, grads, opt_state, params
+        )
+        ema = ema_update(ema, params)
+        return params, opt_state, ema, loss, acc, metrics
+
+    def train_step(self, state: TrainState, key, batch: dict):
+        params, opt_state, ema, loss, acc, metrics = self._step(
+            (state.params, state.opt_state, state.ema),
+            key, batch["latents"], batch["cluster"],
+        )
+        return TrainState(params, opt_state, ema, state.step + 1), {
+            "loss": float(loss), "acc": float(acc),
+            **{k: float(v) for k, v in metrics.items()},
+        }
+
+
+def make_lm_train_step(cfg, opt: AdamWConfig):
+    """Jitted LM train step for the assigned architectures (zoo dispatch)."""
+    from repro.models import zoo
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: zoo.loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        params, opt_state, om = adamw_update(opt, grads, opt_state, params)
+        return params, opt_state, loss, {**metrics, **om}
+
+    return step

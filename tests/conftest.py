@@ -1,0 +1,10 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — tests must see the single real CPU
+# device; only launch/dryrun.py requests 512 placeholder devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,86 @@
+"""Hierarchical k-means clustering (paper §6.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cluster_balance,
+    cosine_assign,
+    hierarchical_kmeans,
+    kmeans,
+    partition_indices,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _blob_data(k=4, per=64, d=16, sep=4.0, seed=0):
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(k, d)
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    feats = np.concatenate(
+        [sep * centers[i] + 0.3 * rng.randn(per, d) for i in range(k)]
+    )
+    labels = np.repeat(np.arange(k), per)
+    return jnp.asarray(feats), labels
+
+
+def _purity(pred, true, k):
+    total = 0
+    for c in range(k):
+        members = true[np.asarray(pred) == c]
+        if len(members):
+            total += np.bincount(members).max()
+    return total / len(true)
+
+
+def test_kmeans_recovers_blobs():
+    feats, labels = _blob_data()
+    _, assign = kmeans(KEY, feats, num_clusters=4)
+    assert _purity(assign, labels, 4) > 0.95
+
+
+def test_hierarchical_two_stage():
+    feats, labels = _blob_data(k=4, per=64, sep=8.0)
+    cm = hierarchical_kmeans(KEY, feats, num_coarse=4, num_fine=32)
+    assert cm.fine_centroids.shape[0] == 32
+    assert cm.num_clusters == 4
+    assign = cm.assign(feats)
+    # two-stage k-means can merge blobs at small scale; require clearly
+    # better-than-chance purity (chance = 0.25)
+    assert _purity(assign, labels, 4) > 0.7
+    # fine->coarse map consistent with direct assignment most of the time
+    direct = cm.assign_direct(feats)
+    agree = (np.asarray(assign) == np.asarray(direct)).mean()
+    assert agree > 0.5
+
+
+def test_partitions_are_disjoint_and_complete():
+    feats, _ = _blob_data()
+    cm = hierarchical_kmeans(KEY, feats, num_coarse=4, num_fine=16)
+    assign = np.asarray(cm.assign(feats))
+    parts = partition_indices(assign, 4)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(feats)
+    assert len(np.unique(all_idx)) == len(feats)  # disjoint
+    bal = cluster_balance(assign, 4)
+    np.testing.assert_allclose(bal.sum(), 1.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_assignment_invariant_to_feature_scale(seed):
+    """Cosine metric: scaling features must not change assignments."""
+    feats, _ = _blob_data(seed=seed)
+    cm = hierarchical_kmeans(KEY, feats, num_coarse=4, num_fine=16)
+    a1 = np.asarray(cm.assign(feats))
+    a2 = np.asarray(cm.assign(feats * 7.3))
+    np.testing.assert_array_equal(a1, a2)
+
+
+def test_cosine_assign_basic():
+    cents = jnp.eye(3)
+    feats = jnp.array([[0.9, 0.1, 0.0], [0.0, 0.0, 2.0]])
+    np.testing.assert_array_equal(cosine_assign(feats, cents), [0, 2])

@@ -1,0 +1,197 @@
+"""ε→v conversion (Eqs. 22–25, §8.3) and checkpoint conversion (Eq. 20)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ConversionConfig,
+    convert_checkpoint,
+    eps_to_velocity,
+    get_schedule,
+    predict_x0_from_eps,
+    target_for,
+    unify_prediction,
+    velocity_scale,
+    velocity_to_x0,
+)
+
+KEY = jax.random.PRNGKey(0)
+NOSCALE = ConversionConfig(velocity_scaling="none")
+
+
+def _sample(shape=(4, 8, 8, 4), seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return jax.random.normal(k1, shape), jax.random.normal(k2, shape)
+
+
+def test_eq25_linear_path_identity():
+    """Perfect ε-oracle on the linear path gives exactly v = ε − x0."""
+    lin = get_schedule("linear")
+    x0, eps = _sample()
+    t = jnp.array([0.1, 0.3, 0.6, 0.9])
+    xt = lin.perturb(x0, eps, t)
+    v = eps_to_velocity(xt, eps, lin, t, NOSCALE)
+    np.testing.assert_allclose(v, eps - x0, atol=1e-4)
+
+
+def test_cosine_conversion_matches_fm_target():
+    """On cosine path: v = α' x̂0 + σ' ε must equal the FM target built
+    from the true (x0, eps) when the ε-prediction is exact and no clamping
+    binds (Eq. 24 == target_for)."""
+    cos = get_schedule("cosine")
+    x0, eps = _sample()
+    x0 = jnp.clip(x0, -3, 3)
+    t = jnp.array([0.2, 0.4, 0.6, 0.8])
+    xt = cos.perturb(x0, eps, t)
+    v = eps_to_velocity(xt, eps, cos, t, NOSCALE)
+    expected = target_for("fm", cos, x0, eps, t)
+    np.testing.assert_allclose(v, expected, atol=1e-3)
+
+
+def test_x0_recovery_and_clamp():
+    cos = get_schedule("cosine")
+    x0, eps = _sample()
+    t = jnp.array([0.1, 0.5, 0.7, 0.99])
+    xt = cos.perturb(x0, eps, t)
+    x0h = predict_x0_from_eps(xt, eps, cos, t)
+    # at t=0.99, alpha_safe floor + clamp bind; earlier ts recover x0
+    np.testing.assert_allclose(x0h[:3], x0[:3], atol=1e-3)
+    assert float(jnp.max(jnp.abs(x0h))) <= 20.0
+
+
+def test_velocity_scale_piecewise_eq31():
+    t = jnp.array([0.5, 0.7, 0.9])
+    np.testing.assert_allclose(
+        velocity_scale(t, "piecewise"), [0.96, 0.93, 0.88]
+    )
+    s = velocity_scale(t, "sigmoid")
+    assert float(s[0]) == 1.0 and float(s[1]) == 1.0 and float(s[2]) <= 1.0
+    np.testing.assert_allclose(velocity_scale(t, "none"), 1.0)
+
+
+def test_unify_fm_passthrough():
+    lin = get_schedule("linear")
+    x0, eps = _sample()
+    t = jnp.full((4,), 0.5)
+    xt = lin.perturb(x0, eps, t)
+    pred = eps - x0
+    out = unify_prediction(pred, xt, t, objective="fm", schedule=lin)
+    np.testing.assert_array_equal(out, pred)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.floats(min_value=0.02, max_value=0.93),
+    sched=st.sampled_from(["linear", "cosine"]),
+)
+def test_roundtrip_property(t, sched):
+    """x0 -> (xt, v) -> x0 roundtrip is exact where safeguards don't bind."""
+    sch = get_schedule(sched)
+    x0, eps = _sample(seed=int(t * 1e4))
+    x0 = jnp.clip(x0, -3, 3)
+    tb = jnp.full((4,), t)
+    xt = sch.perturb(x0, eps, tb)
+    v = eps_to_velocity(xt, eps, sch, tb, NOSCALE)
+    x0r = velocity_to_x0(xt, v, sch, tb, NOSCALE)
+    np.testing.assert_allclose(x0r, x0, atol=5e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(t=st.floats(min_value=0.0, max_value=1.0))
+def test_conversion_finite_everywhere_property(t):
+    """§8.2: conversion must stay finite at ALL noise levels (safeguards)."""
+    cos = get_schedule("cosine")
+    x0, eps = _sample(seed=7)
+    tb = jnp.full((4,), t)
+    xt = cos.perturb(x0, eps, tb)
+    v = eps_to_velocity(xt, 10.0 * eps, cos, tb)  # bad predictor
+    assert bool(jnp.isfinite(v).all())
+
+
+# --- Eq. 20 checkpoint conversion -------------------------------------------
+
+
+def _tree(key, spec):
+    leaves = {}
+    for name, shape in spec.items():
+        key, k = jax.random.split(key)
+        leaves[name] = jax.random.normal(k, shape)
+    return leaves
+
+
+def test_checkpoint_conversion_policy():
+    key = jax.random.PRNGKey(3)
+    pre = {
+        "patch_embed": _tree(key, {"w": (16, 64)}),
+        "pos_embed": _tree(key, {"emb": (16, 64)}),
+        "blocks": _tree(key, {"w": (2, 64, 64)}),
+        "final_layer": _tree(key, {"w": (64, 16)}),
+        "class_embed": _tree(key, {"emb": (1000, 64)}),
+    }
+    template = {
+        "patch_embed": jax.tree.map(jnp.zeros_like, pre["patch_embed"]),
+        "pos_embed": jax.tree.map(jnp.zeros_like, pre["pos_embed"]),
+        "blocks": jax.tree.map(jnp.zeros_like, pre["blocks"]),
+        "final_layer": jax.tree.map(jnp.zeros_like, pre["final_layer"]),
+        "text_proj": {"w": jnp.full((8, 64), 9.0)},
+    }
+    out, report = convert_checkpoint(pre, template, rng=jax.random.PRNGKey(0))
+    # transferred groups carry pretrained values
+    np.testing.assert_array_equal(out["patch_embed"]["w"],
+                                  pre["patch_embed"]["w"])
+    np.testing.assert_array_equal(out["blocks"]["w"], pre["blocks"]["w"])
+    # final layer reinitialized N(0, 0.02): small but nonzero
+    fl = np.asarray(out["final_layer"]["w"])
+    assert 0 < np.abs(fl).max() < 0.2
+    assert not np.allclose(fl, np.asarray(pre["final_layer"]["w"]))
+    # text stack kept from template (NEW), class embed dropped
+    np.testing.assert_array_equal(out["text_proj"]["w"],
+                                  template["text_proj"]["w"])
+    assert "class_embed" not in out
+    assert report["class_embed"] == "drop"
+    assert report["patch_embed"] == "transfer"
+    assert report["final_layer"] == "reinit"
+    assert report["text_proj"] == "new"
+
+
+def test_checkpoint_conversion_shape_mismatch_falls_back():
+    pre = {"blocks": {"w": jnp.ones((2, 8, 8))}}
+    template = {"blocks": {"w": jnp.full((3, 8, 8), 5.0)}}
+    out, report = convert_checkpoint(pre, template, rng=KEY)
+    np.testing.assert_array_equal(out["blocks"]["w"], template["blocks"]["w"])
+
+
+def test_snr_rebased_conversion_exact_for_perfect_oracle():
+    """Beyond-paper (§5.ii): SNR-matched cross-schedule conversion is EXACT
+    for a perfect ε-predictor, where the paper's identity time map carries
+    an O(1) schedule-mismatch bias."""
+    from repro.core.conversion import snr_rebased_velocity
+
+    lin, cos = get_schedule("linear"), get_schedule("cosine")
+    key = jax.random.PRNGKey(0)
+    x0 = jnp.clip(jax.random.normal(key, (4, 8, 8, 4)), -3, 3)
+    eps = jax.random.normal(jax.random.PRNGKey(1), x0.shape)
+    t = jnp.array([0.2, 0.4, 0.6, 0.8])
+    xt = lin.perturb(x0, eps, t)
+
+    def cosine_eps_oracle(params, x_in, t_e, **c):
+        a, s = cos.coeffs(t_e)
+        a = a.reshape(-1, 1, 1, 1)
+        s = s.reshape(-1, 1, 1, 1)
+        return (x_in - a * x0) / jnp.maximum(s, 1e-6)
+
+    v = snr_rebased_velocity(
+        cosine_eps_oracle, None, xt, t, objective="ddpm",
+        expert_schedule=cos, path_schedule=lin, cfg=NOSCALE,
+    )
+    np.testing.assert_allclose(v, eps - x0, atol=2e-2)
+
+    # the identity map on the same oracle is badly biased
+    pred_id = cosine_eps_oracle(None, xt, t)
+    v_id = eps_to_velocity(xt, pred_id, cos, t, NOSCALE)
+    id_err = float(jnp.max(jnp.abs(v_id - (eps - x0))))
+    snr_err = float(jnp.max(jnp.abs(v - (eps - x0))))
+    assert snr_err < 0.1 * id_err

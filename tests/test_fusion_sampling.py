@@ -1,0 +1,131 @@
+"""Router fusion (Eq. 1), selection strategies (§3.1), samplers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ExpertSpec,
+    SamplerConfig,
+    cfg_combine,
+    fuse_predictions,
+    prediction_conflict,
+    routing_weights,
+    sample_ddpm_ancestral,
+    sample_ensemble,
+    sample_single_expert,
+    select_topk,
+    threshold_router_weights,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _probs(b=5, k=8, seed=0):
+    return jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(seed), (b, k)), -1
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(min_value=1, max_value=8), seed=st.integers(0, 100))
+def test_topk_weights_property(k, seed):
+    probs = _probs(seed=seed)
+    w, mask = select_topk(probs, k)
+    assert int((w > 0).sum(-1).max()) <= k
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    # selected experts are the k most probable ones
+    top = np.asarray(jax.lax.top_k(probs, k)[1])
+    sel = np.asarray(w > 0)
+    for b in range(probs.shape[0]):
+        assert set(np.nonzero(sel[b])[0]).issubset(set(top[b]) | set(
+            np.nonzero(np.asarray(probs[b]) >= np.asarray(probs[b])[top[b]].min())[0]
+        ))
+
+
+def test_strategies():
+    probs = _probs()
+    w1 = routing_weights(probs, "top1")
+    assert ((w1 > 0).sum(-1) == 1).all()
+    wf = routing_weights(probs, "full")
+    np.testing.assert_allclose(wf, probs, atol=1e-6)
+    with pytest.raises(ValueError):
+        routing_weights(probs, "bogus")
+
+
+def test_fuse_predictions_eq1():
+    preds = jnp.stack([jnp.full((2, 3), 1.0), jnp.full((2, 3), 3.0)])
+    w = jnp.array([[0.5, 0.5], [1.0, 0.0]])
+    out = fuse_predictions(preds, w)
+    np.testing.assert_allclose(out[0], 2.0)
+    np.testing.assert_allclose(out[1], 1.0)
+
+
+def test_threshold_router():
+    t = jnp.array([0.2, 0.5, 0.8])
+    w = threshold_router_weights(t, 2, threshold=0.5)
+    # t<=0.5 -> expert 0 (low-noise / converted DDPM), else expert 1 (FM)
+    np.testing.assert_array_equal(np.asarray(w),
+                                  [[1, 0], [1, 0], [0, 1]])
+
+
+def test_prediction_conflict_zero_when_identical():
+    preds = jnp.stack([jnp.ones((2, 4)), jnp.ones((2, 4))])
+    w = jnp.full((2, 2), 0.5)
+    np.testing.assert_allclose(prediction_conflict(preds, w), 0.0, atol=1e-7)
+    preds2 = jnp.stack([jnp.zeros((2, 4)), jnp.ones((2, 4))])
+    assert (np.asarray(prediction_conflict(preds2, w)) > 0).all()
+
+
+def test_cfg_combine():
+    c, u = jnp.array(2.0), jnp.array(1.0)
+    assert float(cfg_combine(c, u, 1.0)) == 2.0
+    assert float(cfg_combine(c, u, 7.5)) == 1.0 + 7.5
+
+
+def _toy_expert(objective: str):
+    """Analytic expert: predicts its target exactly for x0 = 0."""
+    if objective == "fm":
+        # v = eps - x0 with x0=0 -> v = eps = x_t / t on linear path...
+        # use a contractive prediction: v = x (drives x -> 0 as t decreases)
+        return lambda params, x, t, **c: x
+    return lambda params, x, t, **c: x  # eps-style: also proportional to x
+
+
+def test_sample_ensemble_strategies_finite():
+    experts = [
+        ExpertSpec("e0", "ddpm", "cosine", _toy_expert("ddpm"), 0),
+        ExpertSpec("e1", "fm", "linear", _toy_expert("fm"), 1),
+    ]
+    router_fn = lambda x, t: jnp.full((x.shape[0], 2), 0.5)
+    for strat in ("top1", "topk", "full", "threshold"):
+        out = sample_ensemble(
+            KEY, experts, [None, None], router_fn, (2, 4, 4, 1),
+            config=SamplerConfig(num_steps=6, cfg_scale=1.0, strategy=strat),
+        )
+        assert out.shape == (2, 4, 4, 1)
+        assert bool(jnp.isfinite(out).all()), strat
+
+
+def test_single_expert_exact_ode():
+    """With v(x,t) = x the ODE dx/dt = v gives x(0) = x(1)·exp(-1); Euler
+    with N steps converges to it."""
+    e = ExpertSpec("e", "fm", "linear", lambda p, x, t, **c: x)
+    out = sample_single_expert(
+        KEY, e, None, (1, 2, 2, 1),
+        config=SamplerConfig(num_steps=400, cfg_scale=1.0),
+    )
+    x1 = jax.random.normal(KEY, (1, 2, 2, 1))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(x1) * np.exp(-1.0), rtol=5e-3
+    )
+
+
+def test_ddpm_ancestral_finite():
+    out = sample_ddpm_ancestral(
+        KEY, lambda p, x, t, **c: 0.1 * x, None, (2, 4, 4, 1),
+        num_steps=10, cfg_scale=1.0,
+    )
+    assert bool(jnp.isfinite(out).all())

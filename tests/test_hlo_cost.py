@@ -1,0 +1,73 @@
+"""Static HLO cost model: trip counts, dot flops, collective parsing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import HloCostModel, parse_hlo
+from repro.launch.hlo_analysis import collective_bytes
+
+
+def test_scan_trip_count_multiplies_flops():
+    """A scanned matmul must count L× the body flops (cost_analysis
+    famously counts it once — the whole reason this model exists)."""
+    d, L = 64, 7
+
+    def f(ws, x):
+        def body(x, w):
+            return x @ w, None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    ws = jnp.zeros((L, d, d))
+    x = jnp.zeros((8, d))
+    compiled = jax.jit(f).lower(ws, x).compile()
+    totals = HloCostModel(compiled.as_text()).totals()
+    expected = 2 * 8 * d * d * L
+    assert abs(totals.flops - expected) / expected < 0.05, (
+        totals.flops, expected
+    )
+
+
+def test_single_dot_flops():
+    a = jnp.zeros((32, 64))
+    b = jnp.zeros((64, 16))
+    compiled = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    totals = HloCostModel(compiled.as_text()).totals()
+    assert totals.flops == 2 * 32 * 64 * 16
+
+
+def test_bytes_reasonable_for_elementwise():
+    x = jnp.zeros((1024, 1024))
+    compiled = jax.jit(lambda x: jnp.tanh(x) + 1.0).lower(x).compile()
+    totals = HloCostModel(compiled.as_text()).totals()
+    nbytes = 1024 * 1024 * 4
+    # read + write, allow fusion-accounting slack
+    assert nbytes <= totals.hbm_bytes <= 6 * nbytes
+
+
+def test_collective_regex_on_synthetic_hlo():
+    hlo = """
+HloModule m
+
+ENTRY %main (p: f32[16,128]) -> f32[16,128] {
+  %p = f32[16,128]{1,0} parameter(0)
+  %ag = f32[256,128]{1,0} all-gather(%p), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %ar = f32[256,128]{1,0} all-reduce(%ag), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, to_apply=%add
+  ROOT %out = f32[16,128]{1,0} slice(%ar), slice={[0:16], [0:128]}
+}
+"""
+    stats = collective_bytes(hlo)
+    ag = 256 * 128 * 4 * (15 / 16)
+    ar = 256 * 128 * 4 * 2 * (15 / 16)
+    np.testing.assert_allclose(stats.bytes_by_type["all-gather"], ag)
+    np.testing.assert_allclose(stats.bytes_by_type["all-reduce"], ar)
+    assert stats.count_by_type == {"all-gather": 1, "all-reduce": 1}
+
+
+def test_parse_hlo_computations():
+    x = jnp.zeros((4, 4))
+    compiled = jax.jit(lambda x: x @ x).lower(x).compile()
+    comps = parse_hlo(compiled.as_text())
+    assert comps, "no computations parsed"
+    assert any("main" in n for n in comps)

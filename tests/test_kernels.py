@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.adaln_fuse import adaln_fuse
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hetero_fuse import hetero_fuse
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _rand(shape, dtype=jnp.float32, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+# --- flash attention ---------------------------------------------------------
+
+FLASH_CASES = [
+    # (b, h, s, d, causal, window, dtype, bq, bk)
+    (2, 3, 128, 32, True, 0, jnp.float32, 64, 64),
+    (1, 2, 256, 64, True, 64, jnp.float32, 64, 128),
+    (2, 2, 128, 16, False, 0, jnp.float32, 32, 64),
+    (1, 4, 256, 32, True, 0, jnp.bfloat16, 128, 128),
+    (1, 1, 64, 128, True, 16, jnp.bfloat16, 64, 32),
+]
+
+
+@pytest.mark.parametrize("b,h,s,d,causal,window,dtype,bq,bk", FLASH_CASES)
+def test_flash_attention_sweep(b, h, s, d, causal, window, dtype, bq, bk):
+    q = _rand((b, h, s, d), dtype, 0)
+    k = _rand((b, h, s, d), dtype, 1)
+    v = _rand((b, h, s, d), dtype, 2)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    ref = R.ref_flash_attention(q, k, v, causal=causal, window=window)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=atol
+    )
+
+
+# --- SSD scan ----------------------------------------------------------------
+
+SSD_CASES = [
+    # (b, h, s, p, n, chunk, head_block)
+    (2, 8, 64, 16, 16, 16, 4),
+    (1, 4, 128, 32, 8, 32, 4),
+    (2, 2, 32, 8, 32, 8, 2),
+]
+
+
+@pytest.mark.parametrize("b,h,s,p,n,chunk,hb", SSD_CASES)
+def test_ssd_scan_sweep(b, h, s, p, n, chunk, hb):
+    x = _rand((b, h, s, p), seed=0)
+    dt = jax.nn.softplus(_rand((b, h, s), seed=1))
+    A = -jnp.exp(_rand((h,), seed=2))
+    B = _rand((b, s, n), seed=3)
+    C = _rand((b, s, n), seed=4)
+    y, st = ssd_scan(x, dt, A, B, C, chunk=chunk, head_block=hb,
+                     interpret=True)
+    yr, str_ = R.ref_ssd_scan(
+        jnp.swapaxes(x, 1, 2), jnp.swapaxes(dt, 1, 2), A, B, C
+    )
+    np.testing.assert_allclose(y, jnp.swapaxes(yr, 1, 2), atol=5e-4)
+    np.testing.assert_allclose(st, str_, atol=5e-4)
+
+
+# --- AdaLN fuse --------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,d,bs,dtype", [
+    (3, 64, 48, 16, jnp.float32),
+    (1, 256, 128, 64, jnp.float32),
+    (2, 64, 64, 64, jnp.bfloat16),
+])
+def test_adaln_fuse_sweep(b, s, d, bs, dtype):
+    x = _rand((b, s, d), dtype, 0)
+    g = _rand((b, d), dtype, 1)
+    be = _rand((b, d), dtype, 2)
+    out = adaln_fuse(x, g, be, block_s=bs, interpret=True)
+    ref = R.ref_adaln_fuse(x, g, be)
+    atol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=atol
+    )
+
+
+# --- hetero fuse -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,b,t,bt", [(2, 3, 128, 32), (8, 2, 256, 128),
+                                      (4, 1, 64, 64)])
+def test_hetero_fuse_sweep(k, b, t, bt):
+    preds = _rand((k, b, t), seed=0)
+    xt = _rand((b, t), seed=1)
+    w = jax.nn.softmax(_rand((b, k), seed=2), -1)
+    isd = jnp.arange(k) % 2 == 0
+    al = jax.random.uniform(jax.random.PRNGKey(3), (k, b),
+                            minval=0.05, maxval=1.0)
+    si = jnp.sqrt(1 - al ** 2)
+    da = -jnp.ones((k, b))
+    ds = jnp.ones((k, b))
+    vs = jnp.full((k, b), 0.93)
+    out = hetero_fuse(preds, xt, w, isd, al, si, da, ds, vs,
+                      block_t=bt, interpret=True)
+    ref = R.ref_hetero_fuse(preds, xt, w, isd, al, si, da, ds, vs)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+def test_hetero_fuse_wrapper_matches_core():
+    """ops.fused_convert_and_fuse == unify_prediction + fuse_predictions."""
+    import os
+
+    from repro.core import (
+        ConversionConfig,
+        fuse_predictions,
+        get_schedule,
+        unify_prediction,
+    )
+    from repro.kernels import ops
+
+    os.environ["REPRO_FORCE_PALLAS"] = "1"
+    try:
+        lin, cos = get_schedule("linear"), get_schedule("cosine")
+        t = jnp.array([0.3, 0.7, 0.5])
+        preds = _rand((2, 3, 8, 8, 4), seed=0)
+        xt = _rand((3, 8, 8, 4), seed=1)
+        w = jax.nn.softmax(_rand((3, 2), seed=2), -1)
+        cfg = ConversionConfig()
+        fused = ops.fused_convert_and_fuse(
+            preds, xt, w, ["ddpm", "fm"], [cos, lin], t, cfg
+        )
+        v0 = unify_prediction(preds[0], xt, t, objective="ddpm",
+                              schedule=cos, cfg=cfg)
+        v1 = unify_prediction(preds[1], xt, t, objective="fm",
+                              schedule=lin, cfg=cfg)
+        ref = fuse_predictions(jnp.stack([v0, v1]), w)
+        np.testing.assert_allclose(fused, ref, atol=1e-4)
+    finally:
+        os.environ.pop("REPRO_FORCE_PALLAS", None)

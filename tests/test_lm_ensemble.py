@@ -1,0 +1,99 @@
+"""Decentralized LM-expert ensemble (DESIGN.md §4 — the DDM half of the
+paper's technique applied to the assigned LM architectures)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.lm_ensemble import (
+    LMExpertEnsemble,
+    TokenPrototypeRouter,
+    expert_perplexity,
+)
+from repro.models import zoo
+from repro.training import AdamWConfig, adamw_init
+from repro.training.trainer import make_lm_train_step
+
+KEY = jax.random.PRNGKey(0)
+B, S = 4, 32
+
+
+def _cluster_batch(key, batch, seq, vocab, cluster: int):
+    """Two disjoint token sub-vocabularies = two corpus clusters."""
+    half = vocab // 2
+    lo = cluster * half
+    toks = jax.random.randint(key, (batch, seq + 1), lo, lo + half)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_config("internlm2-1.8b").reduced(vocab_size=64)
+    step = make_lm_train_step(cfg, AdamWConfig(learning_rate=3e-3,
+                                               warmup_steps=2))
+    experts = []
+    for cid in range(2):
+        params = zoo.init(cfg, jax.random.PRNGKey(cid))
+        opt = adamw_init(params)
+        for i in range(30):
+            key = jax.random.fold_in(jax.random.PRNGKey(10 + cid), i)
+            params, opt, loss, _ = step(
+                params, opt, _cluster_batch(key, B, S, 64, cid)
+            )
+        experts.append(params)
+    corpora = [
+        _cluster_batch(jax.random.PRNGKey(99 + c), 8, 128, 64, c)["tokens"]
+        for c in range(2)
+    ]
+    router = TokenPrototypeRouter.fit(corpora, vocab=64)
+    return cfg, experts, router
+
+
+def test_router_identifies_cluster(trained):
+    cfg, experts, router = trained
+    for cid in range(2):
+        batch = _cluster_batch(jax.random.PRNGKey(7 + cid), B, S, 64, cid)
+        post = router.posterior(batch["tokens"])
+        assert int(jnp.argmax(post.mean(0))) == cid
+        assert float(post[:, cid].mean()) > 0.8
+
+
+def test_ensemble_beats_wrong_expert(trained):
+    """On cluster-c data the fused ensemble must be close to the RIGHT
+    expert and much better than the WRONG one (specialization + routing)."""
+    cfg, experts, router = trained
+    ens = LMExpertEnsemble(cfg=cfg, expert_params=experts, router=router,
+                           strategy="topk", top_k=1)
+    for cid in range(2):
+        batch = _cluster_batch(jax.random.PRNGKey(70 + cid), B, S, 64, cid)
+        ppl_right = expert_perplexity(cfg, experts[cid], batch["tokens"],
+                                      batch["labels"])
+        ppl_wrong = expert_perplexity(cfg, experts[1 - cid],
+                                      batch["tokens"], batch["labels"])
+        ppl_ens = ens.perplexity(batch["tokens"], batch["labels"])
+        assert ppl_wrong > 1.5 * ppl_right, (ppl_wrong, ppl_right)
+        assert ppl_ens < 1.1 * ppl_right, (ppl_ens, ppl_right)
+
+
+def test_full_strategy_mixture_valid(trained):
+    cfg, experts, router = trained
+    ens = LMExpertEnsemble(cfg=cfg, expert_params=experts, router=router,
+                           strategy="full")
+    batch = _cluster_batch(jax.random.PRNGKey(3), B, S, 64, 0)
+    lp = ens.fused_logprobs(batch["tokens"])
+    total = jnp.exp(jax.nn.logsumexp(lp, axis=-1))
+    np.testing.assert_allclose(np.asarray(total), 1.0, atol=1e-4)
+
+
+def test_greedy_decode_stays_in_cluster_vocab(trained):
+    cfg, experts, router = trained
+    ens = LMExpertEnsemble(cfg=cfg, expert_params=experts, router=router,
+                           strategy="topk", top_k=1)
+    prompt = _cluster_batch(jax.random.PRNGKey(5), 2, 8, 64, 1)["tokens"]
+    out = ens.decode_greedy(prompt, steps=6)
+    assert out.shape == (2, 14)
+    gen = np.asarray(out[:, 8:])
+    # cluster 1's sub-vocabulary is [32, 64)
+    assert (gen >= 32).mean() > 0.7, gen

@@ -1,0 +1,87 @@
+"""Objectives + Prop. 1 implicit timestep weighting (§2.4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DDPM,
+    FLOW_MATCHING,
+    get_objective,
+    get_schedule,
+    sample_timesteps,
+    target_for,
+    w_eps,
+    w_v,
+    weight_ratio,
+)
+from repro.core.objectives import sh_v_target, sh_v_to_x0
+
+
+def test_objective_defaults():
+    assert get_objective(DDPM).default_schedule == "cosine"
+    assert get_objective(FLOW_MATCHING).default_schedule == "linear"
+    assert get_objective(DDPM).predicts == "epsilon"
+    assert get_objective(FLOW_MATCHING).predicts == "velocity"
+
+
+def test_targets():
+    lin = get_schedule("linear")
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(key, (2, 4, 4, 2))
+    eps = jax.random.normal(jax.random.PRNGKey(1), x0.shape)
+    t = jnp.array([0.3, 0.7])
+    np.testing.assert_array_equal(target_for("ddpm", lin, x0, eps, t), eps)
+    np.testing.assert_allclose(
+        target_for("fm", lin, x0, eps, t), eps - x0, atol=1e-6
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t=st.floats(min_value=0.01, max_value=0.99),
+    sched=st.sampled_from(["linear", "cosine"]),
+)
+def test_prop1_ratio_property(t, sched):
+    """Eq. 11: w_v / w_eps == 1/alpha^2 >= 1 for BOTH schedule families
+    (the Remark: the structure is schedule-independent)."""
+    sch = get_schedule(sched)
+    tb = jnp.array([t])
+    ratio = float((w_v(sch, tb) / w_eps(sch, tb))[0])
+    expected = float(weight_ratio(sch, tb)[0])
+    np.testing.assert_allclose(ratio, expected, rtol=1e-4)
+    assert ratio >= 1.0 - 1e-6
+
+
+def test_prop1_divergence_at_high_noise():
+    cos = get_schedule("cosine")
+    r_low = float(weight_ratio(cos, jnp.array([0.1]))[0])
+    r_high = float(weight_ratio(cos, jnp.array([0.99]))[0])
+    assert r_high > 100 * r_low
+
+
+def test_salimans_ho_v_param_recovers_x0():
+    """§2.4 notation remark: under VP, x0 = alpha x_t - sigma v."""
+    cos = get_schedule("cosine")
+    key = jax.random.PRNGKey(2)
+    x0 = jax.random.normal(key, (3, 4, 4, 1))
+    eps = jax.random.normal(jax.random.PRNGKey(3), x0.shape)
+    t = jnp.array([0.2, 0.5, 0.8])
+    xt = cos.perturb(x0, eps, t)
+    v = sh_v_target(cos, x0, eps, t)
+    np.testing.assert_allclose(sh_v_to_x0(cos, xt, v, t), x0, atol=1e-5)
+
+
+def test_timestep_sampling_domains():
+    """§6.3: DDPM samples the discrete grid; FM samples U(0,1)."""
+    key = jax.random.PRNGKey(0)
+    td = sample_timesteps(key, 512, objective="ddpm")
+    tf = sample_timesteps(key, 512, objective="fm")
+    # DDPM times land exactly on the 1/999 grid
+    grid = np.round(np.asarray(td) * 999)
+    np.testing.assert_allclose(np.asarray(td) * 999, grid, atol=1e-4)
+    assert 0.0 <= float(tf.min()) and float(tf.max()) < 1.0
+    # FM times are NOT all on the grid
+    off = np.abs(np.asarray(tf) * 999 - np.round(np.asarray(tf) * 999))
+    assert (off > 1e-3).any()

@@ -1,0 +1,85 @@
+"""Schedules: coefficients, derivatives, SNR, timestep mapping (Eq. 21)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cosine_schedule,
+    from_ddpm_timestep,
+    get_schedule,
+    linear_schedule,
+    snr_matched_time,
+    to_ddpm_timestep,
+)
+
+T = jnp.linspace(0.01, 0.99, 13)
+
+
+@pytest.mark.parametrize("name", ["linear", "cosine"])
+def test_fd_matches_analytic(name):
+    sch = get_schedule(name)
+    da, ds = sch.derivs(T)
+    fa, fs = sch.fd_derivs(T)
+    np.testing.assert_allclose(da, fa, atol=5e-4)
+    np.testing.assert_allclose(ds, fs, atol=5e-4)
+
+
+def test_linear_boundaries():
+    sch = linear_schedule()
+    assert float(sch.alpha(jnp.array(0.0))) == 1.0
+    assert float(sch.sigma(jnp.array(1.0))) == 1.0
+
+
+def test_cosine_is_variance_preserving():
+    sch = cosine_schedule()
+    a, s = sch.coeffs(T)
+    np.testing.assert_allclose(a * a + s * s, 1.0, atol=1e-6)
+    assert sch.variance_preserving
+
+
+def test_perturb_broadcasts_per_sample():
+    sch = linear_schedule()
+    x0 = jnp.ones((3, 4, 4, 2))
+    eps = jnp.zeros_like(x0)
+    t = jnp.array([0.0, 0.5, 1.0])
+    xt = sch.perturb(x0, eps, t)
+    np.testing.assert_allclose(xt[0], 1.0)
+    np.testing.assert_allclose(xt[1], 0.5)
+    np.testing.assert_allclose(xt[2], 0.0)
+
+
+def test_eq21_timestep_mapping():
+    # Eq. 21: t_DiT = round(999 t), clipped; integers pass through.
+    t = jnp.array([0.0, 0.25, 0.5, 1.0])
+    assert to_ddpm_timestep(t).tolist() == [0, 250, 500, 999]
+    ints = jnp.array([0, 500, 1200])
+    assert to_ddpm_timestep(ints).tolist() == [0, 500, 999]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(min_value=0.0, max_value=1.0))
+def test_timestep_roundtrip_property(t):
+    idx = to_ddpm_timestep(jnp.array([t]))
+    back = from_ddpm_timestep(idx)
+    assert abs(float(back[0]) - t) <= 0.5 / 999 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(min_value=0.05, max_value=0.95))
+def test_snr_matching_property(t):
+    lin, cos = linear_schedule(), cosine_schedule()
+    tt = snr_matched_time(lin, cos, jnp.array([t]))
+    np.testing.assert_allclose(
+        np.log(np.asarray(cos.snr(tt)) + 1e-20),
+        np.log(np.asarray(lin.snr(jnp.array([t]))) + 1e-20),
+        atol=2e-2,
+    )
+
+
+def test_snr_monotone_decreasing():
+    for sch in (linear_schedule(), cosine_schedule()):
+        snr = np.asarray(sch.snr(T))
+        assert (np.diff(snr) < 0).all()

@@ -1,0 +1,155 @@
+"""End-to-end behaviour tests: the paper's full pipeline on CPU.
+
+cluster → train heterogeneous experts in ISOLATION → train router →
+checkpoint → serve with router-weighted heterogeneous fusion (Fig. 2/6).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExpertSpec, SamplerConfig, sample_ensemble
+from repro.data import SyntheticSpec, fit_clusters
+from repro.data.pipeline import ExpertDataStream, RouterDataStream
+from repro.launch.serve import ServingEngine
+from repro.models import dit as D
+from repro.models.config import dit_b2, router_b2
+from repro.training import (
+    AdamWConfig,
+    ExpertTrainer,
+    RouterTrainer,
+    expert_metadata,
+    save_checkpoint,
+)
+
+KEY = jax.random.PRNGKey(0)
+NUM_CLUSTERS = 2
+STEPS = 15
+
+
+@pytest.fixture(scope="module")
+def pipeline(tmp_path_factory):
+    """Train a tiny 1-DDPM + 1-FM heterogeneous ensemble + router."""
+    tmp = tmp_path_factory.mktemp("ckpts")
+    spec = SyntheticSpec(num_categories=NUM_CLUSTERS, latent_size=8,
+                         separation=3.0)
+    cm, _ = fit_clusters(spec, corpus_size=256,
+                         num_clusters=NUM_CLUSTERS, num_fine=32)
+    cfg = dit_b2().reduced(latent_size=8)
+    apply_fn = D.make_expert_apply(cfg)
+    objectives = [("ddpm", "cosine"), ("fm", "linear")]
+    expert_params = []
+    for cid, (obj, sch) in enumerate(objectives):
+        trainer = ExpertTrainer(
+            apply_fn=apply_fn, objective=obj, schedule_name=sch,
+            opt=AdamWConfig(learning_rate=3e-4, warmup_steps=3),
+            ema_decay=0.8,   # test-scale: paper's 0.9999 needs >>1e4 steps
+        )
+        state = trainer.init_state(D.init(cfg, jax.random.PRNGKey(cid)))
+        stream = ExpertDataStream(spec, cm, cluster_id=cid, batch_size=16,
+                                  seed=cid)
+        for i in range(STEPS):
+            state, _ = trainer.train_step(
+                state, jax.random.fold_in(KEY, 100 * cid + i),
+                stream.next_batch(i),
+            )
+        expert_params.append(state.ema)
+        save_checkpoint(
+            os.path.join(tmp, f"expert{cid}.npz"), state.ema,
+            metadata=expert_metadata(
+                name=f"expert{cid}", objective=obj, schedule=sch,
+                cluster_id=cid, arch=cfg.name, step=STEPS,
+            ),
+        )
+    rcfg = router_b2(num_clusters=NUM_CLUSTERS).reduced(latent_size=8)
+    rtrainer = RouterTrainer(
+        apply_fn=lambda p, x, t: D.apply(rcfg, p, x, t),
+        num_clusters=NUM_CLUSTERS,
+    )
+    rstate = rtrainer.init_state(D.init(rcfg, jax.random.PRNGKey(9)))
+    rstream = RouterDataStream(spec, cm, batch_size=16)
+    for i in range(STEPS):
+        rstate, _ = rtrainer.train_step(
+            rstate, jax.random.fold_in(KEY, 999 + i), rstream.next_batch(i)
+        )
+    save_checkpoint(os.path.join(tmp, "router.npz"), rstate.params,
+                    metadata={"num_clusters": NUM_CLUSTERS})
+    return {
+        "dir": str(tmp), "cfg": cfg, "rcfg": rcfg, "spec": spec,
+        "apply_fn": apply_fn, "expert_params": expert_params,
+        "router_params": rstate.params, "objectives": objectives,
+    }
+
+
+def test_heterogeneous_sampling_all_strategies(pipeline):
+    experts = [
+        ExpertSpec(f"e{i}", obj, sch, pipeline["apply_fn"], i)
+        for i, (obj, sch) in enumerate(pipeline["objectives"])
+    ]
+    router_fn = D.make_router_fn(pipeline["rcfg"],
+                                 pipeline["router_params"])
+    for strat in ("top1", "topk", "full", "threshold"):
+        out = sample_ensemble(
+            KEY, experts, pipeline["expert_params"], router_fn,
+            (4, 8, 8, 4),
+            config=SamplerConfig(num_steps=8, cfg_scale=1.0,
+                                 strategy=strat),
+        )
+        assert out.shape == (4, 8, 8, 4)
+        assert bool(jnp.isfinite(out).all()), strat
+
+
+def test_serving_engine_from_self_describing_checkpoints(pipeline):
+    engine = ServingEngine.from_checkpoint_dir(
+        pipeline["dir"], dit_cfg=pipeline["cfg"],
+        router_cfg=pipeline["rcfg"],
+        sampler=SamplerConfig(num_steps=6, cfg_scale=1.5, strategy="topk",
+                              top_k=2),
+    )
+    assert [e.objective for e in engine.experts] == ["ddpm", "fm"]
+    assert engine.router_fn is not None
+    text = jax.random.normal(
+        KEY, (3, pipeline["cfg"].text_len, pipeline["cfg"].text_dim)
+    )
+    out = engine.generate(KEY, text, 3)
+    assert out.shape == (3, 8, 8, 4)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_cfg_guidance_changes_output(pipeline):
+    cfg = pipeline["cfg"]
+    # cross-attn output projections are zero-initialized (§2.5) so text has
+    # no influence at init; inject a nonzero projection to test the CFG
+    # mechanism itself.
+    params = jax.tree.map(lambda x: x, pipeline["expert_params"][1])
+    params["cross_attn"]["wo"]["w"] = 0.05 * jax.random.normal(
+        KEY, params["cross_attn"]["wo"]["w"].shape
+    )
+    experts = [ExpertSpec("e", "fm", "linear", pipeline["apply_fn"], 0)]
+    router_fn = lambda x, t: jnp.ones((x.shape[0], 1))
+    text = jax.random.normal(KEY, (2, cfg.text_len, cfg.text_dim))
+    outs = {}
+    for scale in (1.0, 4.0):
+        outs[scale] = sample_ensemble(
+            KEY, experts, [params], router_fn,
+            (2, 8, 8, 4), cond={"text_emb": text},
+            null_cond={"text_emb": None},
+            config=SamplerConfig(num_steps=6, cfg_scale=scale,
+                                 strategy="full"),
+        )
+    diff = float(jnp.max(jnp.abs(outs[1.0] - outs[4.0])))
+    assert diff > 1e-4  # guidance has an effect
+
+
+def test_experts_trained_in_isolation_differ(pipeline):
+    """Sanity: the two experts (different objectives, different clusters)
+    learned genuinely different functions."""
+    p0, p1 = pipeline["expert_params"]
+    x = jax.random.normal(KEY, (2, 8, 8, 4))
+    t = jnp.array([0.4, 0.4])
+    y0 = pipeline["apply_fn"](p0, x, t)
+    y1 = pipeline["apply_fn"](p1, x, t)
+    assert float(jnp.max(jnp.abs(y0 - y1))) > 1e-4

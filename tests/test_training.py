@@ -1,0 +1,163 @@
+"""Training substrate: optimizer, EMA, trainers, checkpointing, pipeline."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import convert_checkpoint
+from repro.data import (
+    ExpertDataStream,
+    RouterDataStream,
+    SyntheticSpec,
+    extract_features,
+    fit_clusters,
+)
+from repro.models import dit as D
+from repro.models.config import dit_b2, router_b2
+from repro.training import (
+    AdamWConfig,
+    ExpertTrainer,
+    RouterTrainer,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    ema_init,
+    ema_update,
+    expert_metadata,
+    load_checkpoint,
+    lr_schedule,
+    save_checkpoint,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(learning_rate=0.1, warmup_steps=0, clip_norm=0.0)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"x": 2.0 * params["x"]}
+        params, state, _ = adamw_update(cfg, grads, state, params)
+    np.testing.assert_allclose(params["x"], 0.0, atol=1e-2)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0, 4.0])}        # norm 5
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(clipped["a"])), 1.0, rtol=1e-5
+    )
+
+
+def test_lr_schedule_warmup_and_cosine():
+    cfg = AdamWConfig(learning_rate=1.0, warmup_steps=100,
+                      total_steps=1000, cosine_decay=True,
+                      min_lr_ratio=0.1)
+    lr0 = float(lr_schedule(cfg, jnp.array(0)))
+    lr_mid = float(lr_schedule(cfg, jnp.array(100)))
+    lr_end = float(lr_schedule(cfg, jnp.array(1000)))
+    assert lr0 < 0.05 and lr_mid == pytest.approx(1.0, rel=0.05)
+    assert lr_end == pytest.approx(0.1, rel=0.05)
+
+
+def test_ema_converges_to_params():
+    p = {"w": jnp.ones((3,))}
+    ema = ema_init({"w": jnp.zeros((3,))})
+    for _ in range(100):
+        ema = ema_update(ema, p, decay=0.9)
+    np.testing.assert_allclose(ema["w"], 1.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("objective,schedule",
+                         [("ddpm", "cosine"), ("fm", "linear")])
+def test_expert_loss_decreases(objective, schedule):
+    spec = SyntheticSpec(num_categories=2, latent_size=8)
+    cm, _ = fit_clusters(spec, corpus_size=256, num_clusters=2, num_fine=32)
+    cfg = dit_b2().reduced(latent_size=8)
+    trainer = ExpertTrainer(
+        apply_fn=D.make_expert_apply(cfg), objective=objective,
+        schedule_name=schedule,
+        opt=AdamWConfig(learning_rate=3e-4, warmup_steps=5),
+    )
+    state = trainer.init_state(D.init(cfg, KEY))
+    stream = ExpertDataStream(spec, cm, cluster_id=0, batch_size=16)
+    losses = []
+    for i in range(25):
+        state, m = trainer.train_step(
+            state, jax.random.fold_in(KEY, i), stream.next_batch(i)
+        )
+        losses.append(m["loss"])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+
+
+def test_router_trains_above_chance():
+    spec = SyntheticSpec(num_categories=4, latent_size=8, separation=3.5)
+    cm, _ = fit_clusters(spec, corpus_size=512, num_clusters=4, num_fine=64)
+    rcfg = router_b2(num_clusters=4).reduced(latent_size=8)
+    trainer = RouterTrainer(
+        apply_fn=lambda p, x, t: D.apply(rcfg, p, x, t), num_clusters=4,
+    )
+    state = trainer.init_state(D.init(rcfg, KEY))
+    stream = RouterDataStream(spec, cm, batch_size=32)
+    accs = []
+    for i in range(40):
+        state, m = trainer.train_step(
+            state, jax.random.fold_in(KEY, i), stream.next_batch(i)
+        )
+        accs.append(m["acc"])
+    assert np.mean(accs[-5:]) > 0.3, accs  # chance = 0.25
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = dit_b2().reduced(latent_size=8)
+    params = D.init(cfg, KEY)
+    meta = expert_metadata(name="e0", objective="ddpm", schedule="cosine",
+                           cluster_id=0, arch=cfg.name, step=123)
+    path = os.path.join(tmp_path, "expert0.npz")
+    save_checkpoint(path, params, metadata=meta)
+    loaded, meta2 = load_checkpoint(path)
+    assert meta2["objective"] == "ddpm" and meta2["step"] == 123
+    flat_a = jax.tree.leaves(params)
+    flat_b = jax.tree.leaves(loaded)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pretrained_init_transfers_into_model():
+    """Eq. 20 end-to-end: an 'ImageNet DiT' checkpoint (no text stack)
+    initializes a text-conditioned expert; transferred groups match, the
+    final layer is re-initialized, and the model still runs."""
+    cfg_src = dit_b2(use_text=False).reduced(latent_size=8)
+    cfg_dst = dit_b2().reduced(latent_size=8)
+    src = D.init(cfg_src, KEY)
+    dst_template = D.init(cfg_dst, jax.random.PRNGKey(1))
+    out, report = convert_checkpoint(src, dst_template,
+                                     rng=jax.random.PRNGKey(2))
+    assert report["blocks"] == "transfer"
+    assert report["final_layer"] == "reinit"
+    assert report["text_proj"] == "new"
+    np.testing.assert_array_equal(
+        np.asarray(out["patch_embed"]["w"]),
+        np.asarray(src["patch_embed"]["w"]),
+    )
+    x = jax.random.normal(KEY, (2, 8, 8, 4))
+    pred = D.apply(cfg_dst, out, x, jnp.array([0.5, 0.5]))
+    assert pred.shape == x.shape
+    assert bool(jnp.isfinite(pred).all())
+
+
+def test_expert_streams_are_disjoint():
+    """Decentralization invariant: expert streams only emit samples whose
+    cluster assignment matches their own cluster."""
+    spec = SyntheticSpec(num_categories=4, latent_size=8)
+    cm, _ = fit_clusters(spec, corpus_size=256, num_clusters=4, num_fine=32)
+    s0 = ExpertDataStream(spec, cm, cluster_id=0, batch_size=16)
+    b = s0.next_batch(0)
+    assign = np.asarray(cm.assign(extract_features(b["latents"])))
+    assert (assign == 0).mean() >= 0.9
