@@ -1,0 +1,208 @@
+"""Serving hot-path benchmark: seed dense sampler vs compute-sparse engine.
+
+Measures, for the paper's 8-expert top-2 + CFG serving configuration:
+
+* **expert forwards per step** — counted exactly by tracing the sampler
+  with an instrumented ``apply_fn`` (``lax.scan`` traces its body once, so
+  trace-time call counts == per-step execution counts).  Seed path:
+  ``2·K`` (every expert, twice for CFG).  Sparse path: ``k`` (routed
+  experts only, CFG batched) — within the ``(k+1)`` acceptance budget.
+* **img/s** — wall-clock of the jitted end-to-end sampler (compile
+  excluded via warmup; median of repeated runs).
+* **retrace count** — ``ServingEngine.stats['traces']`` across repeated
+  same-shape requests (must stay at 1).
+
+Emits ``name,us_per_call,derived`` CSV rows for the harness and a JSON
+artifact (``BENCH_sampler.json``) via ``--json-out`` / ``write_json`` so
+future PRs can track the perf trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ExpertSpec, SamplerConfig, sample_ensemble
+from repro.launch.serve import ServingEngine
+from repro.models import dit as D
+from repro.models.config import dit_b2, router_b2
+
+NUM_EXPERTS = 8
+BATCH = int(os.environ.get("REPRO_BENCH_SAMPLER_BATCH", 8))
+STEPS = int(os.environ.get("REPRO_BENCH_SAMPLER_STEPS", 8))
+TOP_K = 2
+CFG_SCALE = 7.5
+LATENT = int(os.environ.get("REPRO_BENCH_SAMPLER_LATENT", 16))
+REPS = int(os.environ.get("REPRO_BENCH_SAMPLER_REPS", 5))
+
+
+def _build():
+    """8 heterogeneous (DDPM/FM) experts sharing one instrumented apply.
+
+    16×16 latents (256-token sequences after 2×2 patching at d=128) are
+    the smallest scale where CPU wall-clock is forward-compute- rather
+    than dispatch/gather-dominated, so the measured speedup reflects the
+    forward-count reduction rather than scan overhead.
+    """
+    cfg = dit_b2().reduced(latent_size=LATENT)
+    base_apply = D.make_expert_apply(cfg)
+    counter = {"n": 0}
+
+    def counted_apply(params, x, t, **cond):
+        counter["n"] += 1                       # trace-time call counter
+        return base_apply(params, x, t, **cond)
+
+    experts, params = [], []
+    for i in range(NUM_EXPERTS):
+        obj = "ddpm" if i % 4 == 0 else "fm"    # paper-style 2 DDPM : 6 FM
+        experts.append(ExpertSpec(
+            f"e{i}", obj, "cosine" if obj == "ddpm" else "linear",
+            counted_apply, i,
+        ))
+        params.append(D.init(cfg, jax.random.PRNGKey(10 + i)))
+    rcfg = router_b2(num_clusters=NUM_EXPERTS).reduced(latent_size=LATENT)
+    router_fn = D.make_router_fn(rcfg, D.init(rcfg, jax.random.PRNGKey(99)))
+    text = jax.random.normal(
+        jax.random.PRNGKey(5), (BATCH, cfg.text_len, cfg.text_dim)
+    )
+    return cfg, experts, params, router_fn, text, counter
+
+
+def _sampler_fn(experts, params, router_fn, text, engine):
+    sampler = SamplerConfig(
+        num_steps=STEPS, cfg_scale=CFG_SCALE, strategy="topk", top_k=TOP_K,
+    )
+
+    def fn(key):
+        return sample_ensemble(
+            key, experts, params, router_fn,
+            (BATCH, LATENT, LATENT, 4),
+            cond={"text_emb": text}, null_cond={"text_emb": None},
+            config=sampler, engine=engine,
+        )
+
+    return fn
+
+
+def _forwards_per_step(counter, fn) -> float:
+    # ``lax.scan`` traces its body exactly once, so the trace-time call
+    # count of the instrumented apply IS the per-step forward count.
+    counter["n"] = 0
+    jax.eval_shape(fn, jax.random.PRNGKey(0))
+    return float(counter["n"])
+
+
+def _time_imgs_per_s(*fns) -> list[tuple[float, bool]]:
+    """Interleaved best-of-REPS timing (min is robust to load spikes)."""
+    jitted = [jax.jit(fn) for fn in fns]
+    outs = [jax.block_until_ready(f(jax.random.PRNGKey(0)))
+            for f in jitted]                                # compile
+    times = [[] for _ in fns]
+    for r in range(REPS):
+        for i, f in enumerate(jitted):
+            t0 = time.time()
+            outs[i] = jax.block_until_ready(f(jax.random.PRNGKey(r + 1)))
+            times[i].append(time.time() - t0)
+    return [
+        (BATCH / float(np.min(ts)),
+         bool(np.isfinite(np.asarray(out)).all()))
+        for ts, out in zip(times, outs)
+    ]
+
+
+def _retrace_count(experts, params, router_fn, text, requests=3) -> int:
+    engine = ServingEngine(
+        experts=experts, expert_params=params, router_fn=router_fn,
+        latent_shape=(LATENT, LATENT, 4),
+        sampler=SamplerConfig(num_steps=STEPS, cfg_scale=CFG_SCALE,
+                              strategy="topk", top_k=TOP_K),
+    )
+    for r in range(requests):
+        jax.block_until_ready(
+            engine.generate(jax.random.PRNGKey(r), text, BATCH)
+        )
+    return int(engine.stats["traces"])
+
+
+def collect() -> dict:
+    cfg, experts, params, router_fn, text, counter = _build()
+
+    seed_fn = _sampler_fn(experts, params, router_fn, text, "reference")
+    sparse_fn = _sampler_fn(experts, params, router_fn, text, "auto")
+
+    seed_fwd = _forwards_per_step(counter, seed_fn)
+    sparse_fwd = _forwards_per_step(counter, sparse_fn)
+    (seed_ips, seed_ok), (sparse_ips, sparse_ok) = _time_imgs_per_s(
+        seed_fn, sparse_fn
+    )
+    retraces = _retrace_count(experts, params, router_fn, text)
+
+    return {
+        "config": {
+            "num_experts": NUM_EXPERTS, "top_k": TOP_K, "batch": BATCH,
+            "num_steps": STEPS, "cfg_scale": CFG_SCALE,
+            "latent": [LATENT, LATENT, 4], "model": cfg.name,
+            "backend": jax.default_backend(),
+        },
+        "seed": {
+            "expert_forwards_per_step": seed_fwd,
+            "img_per_s": seed_ips,
+            "finite": seed_ok,
+        },
+        "sparse": {
+            "expert_forwards_per_step": sparse_fwd,
+            "img_per_s": sparse_ips,
+            "finite": sparse_ok,
+            "serving_retraces_3_requests": retraces,
+        },
+        "speedup": sparse_ips / max(seed_ips, 1e-9),
+        "forward_reduction": seed_fwd / max(sparse_fwd, 1e-9),
+        "meets_forward_budget": sparse_fwd <= TOP_K + 1,   # ≤ (k+1)/step
+        "meets_2x_speedup": sparse_ips >= 2.0 * seed_ips,
+    }
+
+
+_LAST: dict = {}
+
+
+def run():
+    """Harness entry — yields ``name,us_per_call,derived`` rows."""
+    res = collect()
+    _LAST.clear()
+    _LAST.update(res)
+    us = lambda ips: 1e6 / max(ips, 1e-9)  # noqa: E731
+    yield ("sampler_seed_dense", f"{us(res['seed']['img_per_s']):.1f}",
+           f"fwd/step={res['seed']['expert_forwards_per_step']:.0f}")
+    yield ("sampler_sparse_routed", f"{us(res['sparse']['img_per_s']):.1f}",
+           f"fwd/step={res['sparse']['expert_forwards_per_step']:.0f}")
+    yield ("sampler_speedup", "0", f"{res['speedup']:.2f}x")
+    yield ("sampler_retraces", "0",
+           str(res['sparse']['serving_retraces_3_requests']))
+
+
+def write_json(path: str, res: dict | None = None) -> str:
+    res = res or _LAST or collect()
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default="BENCH_sampler.json")
+    args = ap.parse_args()
+    for row in run():
+        print(",".join(str(x) for x in row))
+    path = write_json(args.json_out)
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

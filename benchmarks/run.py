@@ -3,14 +3,28 @@
 Prints ``name,us_per_call,derived`` CSV rows (derived = the table's metric:
 FID-proxy, reduction factor, acceleration, dominant-roofline seconds).
 Markdown reports land in benchmarks/artifacts/.
+
+``--json-out PATH`` additionally runs the sampler hot-path benchmark and
+writes its JSON artifact (img/s, expert-forwards/step, retrace count) so
+future PRs can track the serving-perf trajectory; ``--only sampler`` skips
+the paper-table modules for a quick perf check.
 """
 
+import argparse
 import sys
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default=None,
+                    help="write BENCH_sampler.json-style artifact here")
+    ap.add_argument("--only", default=None,
+                    help="run a single module by short name (e.g. 'sampler')")
+    args = ap.parse_args()
+
     from benchmarks import (
+        bench_sampler,
         fig3_pretrained_init,
         fig4_threshold,
         roofline,
@@ -28,7 +42,15 @@ def main() -> None:
         ("table4", table4_homo_vs_hetero),
         ("fig3", fig3_pretrained_init),
         ("fig4", fig4_threshold),
+        ("sampler", bench_sampler),
     ]
+    if args.only:
+        valid = [n for n, _ in modules]
+        modules = [(n, m) for n, m in modules if n == args.only]
+        if not modules:
+            raise SystemExit(
+                f"--only {args.only!r} matches no module; valid: {valid}"
+            )
     print("name,us_per_call,derived")
     for name, mod in modules:
         t0 = time.time()
@@ -41,6 +63,9 @@ def main() -> None:
             import traceback
             traceback.print_exc(file=sys.stderr)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if args.json_out:
+        path = bench_sampler.write_json(args.json_out)
+        print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

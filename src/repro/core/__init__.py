@@ -7,6 +7,7 @@ conversion and fused with a learned router.
 
 from repro.core.schedules import (
     Schedule,
+    coeff_table,
     cosine_schedule,
     get_schedule,
     linear_schedule,
@@ -31,6 +32,7 @@ from repro.core.conversion import (
     convert_checkpoint,
     eps_to_velocity,
     predict_x0_from_eps,
+    unified_coeff_tables,
     unify_prediction,
     velocity_scale,
     velocity_to_x0,
@@ -38,15 +40,18 @@ from repro.core.conversion import (
 from repro.core.fusion import (
     ExpertSpec,
     fuse_predictions,
+    fusion_weights,
     prediction_conflict,
     routing_weights,
     select_topk,
     threshold_router_weights,
+    topk_slots,
     unified_expert_velocities,
 )
 from repro.core.sampling import (
     SamplerConfig,
     cfg_combine,
+    params_are_stackable,
     sample_ddpm_ancestral,
     sample_ensemble,
     sample_single_expert,

@@ -33,15 +33,50 @@ def cosine_assign(feats: Array, centroids: Array) -> Array:
     return jnp.argmax(sims, axis=-1)
 
 
+def _farthest_point_init(feats_n: Array, num_clusters: int) -> Array:
+    """Deterministic greedy farthest-point (k-means++-style) seeding.
+
+    Uniform-random seeding regularly drops two initial centroids into the
+    same blob, collapsing clusters and making downstream expert partitions
+    / router labels unstable run-to-run.  Greedy max-min seeding is
+    deterministic given the data and places one seed per well-separated
+    mode: start from the point least aligned with the mean direction, then
+    repeatedly take the point with the smallest maximum cosine similarity
+    to any chosen seed.
+    """
+    n, d = feats_n.shape
+    mean_dir = _normalize(jnp.mean(feats_n, axis=0, keepdims=True))
+    first = jnp.argmin((feats_n @ mean_dir.T)[:, 0])
+    centroids = jnp.zeros((num_clusters, d), feats_n.dtype)
+    centroids = centroids.at[0].set(feats_n[first])
+    max_sim = feats_n @ feats_n[first]
+
+    def body(i, state):
+        cents, max_sim = state
+        nxt = jnp.argmin(max_sim)
+        c = feats_n[nxt]
+        cents = cents.at[i].set(c)
+        return cents, jnp.maximum(max_sim, feats_n @ c)
+
+    centroids, _ = jax.lax.fori_loop(
+        1, num_clusters, body, (centroids, max_sim)
+    )
+    return centroids
+
+
 @functools.partial(jax.jit, static_argnames=("num_clusters", "iters"))
 def kmeans(
     key: jax.Array, feats: Array, *, num_clusters: int, iters: int = 25
 ) -> tuple[Array, Array]:
-    """Spherical (cosine) k-means.  Returns ``(centroids, assignment)``."""
-    n = feats.shape[0]
+    """Spherical (cosine) k-means.  Returns ``(centroids, assignment)``.
+
+    ``key`` is kept for API compatibility; seeding is the deterministic
+    farthest-point scheme (see :func:`_farthest_point_init`), so results
+    are reproducible across hosts and runs.
+    """
+    del key  # deterministic seeding
     feats_n = _normalize(feats.astype(jnp.float32))
-    init_idx = jax.random.choice(key, n, (num_clusters,), replace=False)
-    centroids = feats_n[init_idx]
+    centroids = _farthest_point_init(feats_n, num_clusters)
 
     def step(centroids, _):
         assign = cosine_assign(feats_n, centroids)

@@ -24,7 +24,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedules import Schedule, _left_broadcast
+from repro.core.schedules import Schedule, _left_broadcast, coeff_table
 
 Array = jax.Array
 
@@ -148,6 +148,42 @@ def unify_prediction(
     if objective == "ddpm":
         return eps_to_velocity(x_t, pred, schedule, t, cfg)
     raise ValueError(f"unknown objective {objective!r}")
+
+
+def unified_coeff_tables(
+    objectives: list[str],
+    schedules: list[Schedule],
+    ts: Array,
+    cfg: ConversionConfig = ConversionConfig(),
+) -> Array:
+    """Per-step, per-expert conversion coefficients ``(S, 5, K)``.
+
+    Row order: ``(alpha, sigma, dalpha, dsigma, vscale)``.  DDPM experts get
+    their schedule's coefficients plus the Eq. 31 dampening; FM experts are
+    folded to the identity coefficients ``(1, 0, 0, 1, 1)`` under which the
+    Eqs. 23–24 conversion reduces *exactly* to a velocity pass-through
+    (``v = 0·x̂0 + 1·pred``).  One table therefore drives a single fused
+    convert-and-fuse kernel for a heterogeneous expert set — computed once
+    per run, gathered per step on the hot path.
+    """
+    ts = jnp.asarray(ts, jnp.float32)
+    s = ts.shape[0]
+    cols = []
+    for obj, sched in zip(objectives, schedules):
+        if obj == "fm":
+            col = jnp.tile(
+                jnp.array([1.0, 0.0, 0.0, 1.0, 1.0], jnp.float32)[:, None],
+                (1, s),
+            )
+        elif obj == "ddpm":
+            base = coeff_table(sched, ts,
+                               derivative_mode=cfg.derivative_mode)  # (4, S)
+            vs = velocity_scale(ts, cfg.velocity_scaling)            # (S,)
+            col = jnp.concatenate([base, vs[None]], axis=0)          # (5, S)
+        else:
+            raise ValueError(f"unknown objective {obj!r}")
+        cols.append(col)
+    return jnp.stack(cols, axis=-1).transpose(1, 0, 2)               # (S, 5, K)
 
 
 def snr_rebased_velocity(

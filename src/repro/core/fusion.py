@@ -52,14 +52,36 @@ def select_topk(probs: Array, k: int) -> tuple[Array, Array]:
     Returns:
       ``(weights, mask)`` both ``(B, K)``; weights renormalized over the
       selected set (zero elsewhere).
+
+    Ties at the k-th probability are broken deterministically toward the
+    lowest expert index (``jax.lax.top_k`` order), so exactly ``k`` experts
+    are selected — a ``probs >= thresh`` mask would silently select more
+    than ``k`` on ties and change the fusion weights.
     """
     B, K = probs.shape
     k = min(k, K)
-    thresh = jax.lax.top_k(probs, k)[0][:, -1:]
-    mask = probs >= thresh
+    _, idx = jax.lax.top_k(probs, k)                     # (B, k), ties -> low idx
+    mask = jnp.zeros((B, K), bool)
+    mask = mask.at[jnp.arange(B)[:, None], idx].set(True)
     w = probs * mask
     w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-12)
     return w, mask
+
+
+def topk_slots(weights: Array, k: int) -> tuple[Array, Array]:
+    """Expert slots for routed-only execution.
+
+    Args:
+      weights: ``(B, K)`` final fusion weights (≤ k nonzero per row).
+      k: number of slots to run.
+
+    Returns:
+      ``(slot_idx, slot_w)`` both ``(B, k)`` — the expert index and fusion
+      weight per slot.  Slots beyond the nonzero support carry zero weight
+      (their forward is wasted but the fused result is exact).
+    """
+    slot_w, slot_idx = jax.lax.top_k(weights, min(k, weights.shape[-1]))
+    return slot_idx, slot_w
 
 
 def routing_weights(probs: Array, strategy: str, k: int = 2) -> Array:
@@ -109,8 +131,10 @@ def unified_expert_velocities(
     experts whose training schedule differs from the sampling path via the
     SNR-matched conversion (beyond-paper, §5.ii).
 
-    All experts stay resident (decentralized serving); compute savings for
-    Top-K are realized by the serving engine batching only routed requests.
+    This is the dense *reference* arm: every expert runs every call.  The
+    serving hot path (``sampling._sample_fused``) instead executes only
+    the routed experts and fuses through ``kernels.ops.fused_velocity``;
+    this path remains the parity oracle and the ``snr_match`` implementation.
     """
     cond = cond or {}
     path = path_schedule or get_schedule("linear")
@@ -136,6 +160,53 @@ def unified_expert_velocities(
             )
         outs.append(v)
     return jnp.stack(outs, axis=0)
+
+
+def fusion_weights(
+    experts: Sequence[ExpertSpec],
+    router_fn: Callable[[Array, Array], Array] | None,
+    x_t: Array,
+    t: Array,
+    *,
+    strategy: str,
+    top_k: int = 2,
+    threshold: float = 0.5,
+    ddpm_low_noise_only: float = 0.0,
+) -> Array:
+    """Per-step fusion weights ``(B, K)`` — the single source of truth.
+
+    Shared by the dense all-experts path and the compute-sparse routed
+    engine so that routed-only execution is *structurally* weight-identical
+    to the dense reference.  Covers the §3.1 strategies, the Eq. 1 cluster
+    -> expert posterior mapping, and the §7.3 low-noise DDPM gate.
+    """
+    K = len(experts)
+    B = x_t.shape[0]
+    if strategy == "threshold":
+        w = threshold_router_weights(t, K, threshold=threshold)
+    elif router_fn is None:
+        if K != 1:
+            raise ValueError("router_fn required for multi-expert fusion")
+        w = jnp.ones((B, 1))
+    else:
+        probs = router_fn(x_t, t)                        # (B, num_clusters)
+        # Map cluster posterior -> per-expert probs via each expert's owned
+        # cluster (Eq. 1: p(k | x_t)).
+        cluster_ids = jnp.array([max(e.cluster_id, 0) for e in experts])
+        if probs.shape[-1] != K or any(
+            e.cluster_id not in (-1, i) for i, e in enumerate(experts)
+        ):
+            probs = probs[:, cluster_ids]
+            probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-12)
+        w = routing_weights(probs, strategy, top_k)
+    if ddpm_low_noise_only > 0.0:
+        # §7.3: restrict converted-DDPM experts to low-noise steps.
+        is_ddpm = jnp.array([e.objective == "ddpm" for e in experts])
+        high_noise = t > ddpm_low_noise_only             # (B,)
+        gate = jnp.where(high_noise[:, None] & is_ddpm[None, :], 0.0, 1.0)
+        w = w * gate
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-12)
+    return w
 
 
 def threshold_router_weights(

@@ -1,8 +1,32 @@
-"""ODE sampling with heterogeneous expert fusion (paper Fig. 2, §3, §7).
+"""Compute-sparse fused ODE sampling with heterogeneous experts (Fig. 2, §3).
 
 The unified sampler integrates the data-to-noise velocity *backwards*
 (t = 1 → 0) with Euler steps: ``x_{t-Δt} = x_t − v · Δt`` (Eq. 8 remark).
 All experts — DDPM or FM — contribute through the common velocity space.
+
+Serving hot path (the paper's central efficiency claim, §3.1): Top-K /
+threshold routing means inference only pays for the *selected* experts.
+Three mechanisms realize that here:
+
+* **batched CFG** — the conditional and unconditional branches are stacked
+  along the batch axis (null conditioning expressed via the model's
+  ``drop_mask``), so guidance costs one expert forward instead of two;
+* **routed-expert-only execution** — homogeneous-architecture expert
+  params are stacked into one pytree (``models.dit.stack_expert_params``)
+  and each sampling step gathers and runs only the routed experts
+  (per-sample gather + vmap for ``top1``/``topk``; scalar gather or
+  ``jax.lax.switch`` for the batch-uniform ``threshold`` router) — k
+  forwards per step instead of K;
+* **fused convert-and-fuse** — the per-step (alpha, sigma, dalpha, dsigma,
+  vscale) conversion coefficients are tabulated once per run
+  (``conversion.unified_coeff_tables``) and the ε→v conversion + Eq. 1
+  weighting run as a single ``kernels.ops.fused_velocity`` kernel call
+  (Pallas on TPU, oracle elsewhere).
+
+The dense all-experts path is kept as an automatic fallback for expert
+sets the sparse engine cannot stack (heterogeneous ``apply_fn``s) and the
+original per-expert reference path remains available (``engine=
+"reference"``) for parity testing and the ``snr_match`` time map.
 
 Also provided: classifier-free guidance (train-time drop prob 0.1, learned
 null embeddings — §2.5), the native DDPM ancestral sampler (Table 3 "Native
@@ -12,20 +36,22 @@ DDPM" row), and the deterministic two-expert threshold sampler (§3.3).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.conversion import ConversionConfig
+from repro.core.conversion import ConversionConfig, unified_coeff_tables
 from repro.core.fusion import (
     ExpertSpec,
     fuse_predictions,
-    routing_weights,
-    threshold_router_weights,
+    fusion_weights,
+    topk_slots,
     unified_expert_velocities,
 )
 from repro.core.schedules import get_schedule
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -47,11 +73,348 @@ class SamplerConfig:
     #: DDPM experts' routing weights are zeroed for t above this value
     #: (renormalized over the remaining experts).
     ddpm_low_noise_only: float = 0.0
+    #: stack cond/uncond along the batch axis so CFG costs one forward.
+    #: Requires apply_fns that accept ``drop_mask`` when the null branch
+    #: uses a model-internal null embedding; automatically falls back to
+    #: the two-pass formulation when the cond dicts cannot be batched.
+    batched_cfg: bool = True
 
 
 def cfg_combine(cond_pred: Array, uncond_pred: Array, scale: float) -> Array:
     """Classifier-free guidance: ``u + s (c - u)``."""
     return uncond_pred + scale * (cond_pred - uncond_pred)
+
+
+# ---------------------------------------------------------------------------
+# Engine selection
+# ---------------------------------------------------------------------------
+
+
+def params_are_stackable(params: Sequence) -> bool:
+    """True when every expert's param pytree has identical structure and
+    leaf shapes/dtypes — the precondition for stacked-params dispatch."""
+    if len(params) <= 1:
+        return True
+    try:
+        t0 = jax.tree.structure(params[0])
+        l0 = jax.tree.leaves(params[0])
+        for p in params[1:]:
+            if jax.tree.structure(p) != t0:
+                return False
+            lp = jax.tree.leaves(p)
+            for a, b in zip(l0, lp):
+                a, b = jnp.asarray(a), jnp.asarray(b)
+                if a.shape != b.shape or a.dtype != b.dtype:
+                    return False
+    except Exception:
+        return False
+    return True
+
+
+def _resolve_engine(
+    engine: str,
+    experts: Sequence[ExpertSpec],
+    params: Sequence,
+    config: SamplerConfig,
+) -> str:
+    if engine not in ("auto", "routed", "dense", "reference"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "reference":
+        return engine
+    if config.time_map != "identity":
+        # snr_match queries experts at rebased times/inputs — only the
+        # per-expert reference path implements it.
+        if engine != "auto":
+            raise ValueError(
+                f"engine={engine!r} requires time_map='identity'"
+            )
+        return "reference"
+    K = len(experts)
+    homogeneous = K == 1 or (
+        all(e.apply_fn is experts[0].apply_fn for e in experts)
+        and params_are_stackable(params)
+    )
+    routed_ok = K > 1 and (
+        (config.strategy in ("top1", "topk") and homogeneous)
+        or config.strategy == "threshold"
+    )
+    if engine == "auto":
+        return "routed" if routed_ok else "dense"
+    if engine == "routed" and not routed_ok:
+        raise ValueError(
+            "routed engine needs strategy in (top1, topk, threshold) and, "
+            "for per-sample routing, a shared apply_fn with stackable params"
+        )
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# Batched classifier-free guidance
+# ---------------------------------------------------------------------------
+
+
+def _cfg_batchable(cond: dict, null_cond: dict) -> bool:
+    """Can the cond/uncond branches be expressed as one doubled batch?"""
+    if "drop_mask" in cond or "drop_mask" in null_cond:
+        return False
+    for k, v in null_cond.items():
+        if v is not None and cond.get(k) is None:
+            return False
+    return True
+
+
+def _cfg_batched_cond(cond: dict, null_cond: dict, batch: int) -> dict:
+    """Stack cond (first half) and uncond (second half) conditioning.
+
+    Keys whose null value is ``None`` (model-internal learned null, §2.5)
+    are duplicated and signalled through ``drop_mask`` instead.
+    """
+    out: dict = {}
+    need_drop = False
+    for key in sorted(set(cond) | set(null_cond)):
+        c, n = cond.get(key), null_cond.get(key)
+        if c is None and n is None:
+            continue
+        if n is None:
+            out[key] = jnp.concatenate([c, c], axis=0)
+            need_drop = True
+        else:
+            out[key] = jnp.concatenate([jnp.asarray(c), jnp.asarray(n)],
+                                       axis=0)
+    if need_drop:
+        out["drop_mask"] = jnp.concatenate(
+            [jnp.zeros((batch,), bool), jnp.ones((batch,), bool)]
+        )
+    return out
+
+
+def _cfg_grouped_cond(cond: dict, null_cond: dict | None, batch: int) -> dict:
+    """Per-sample CFG-branch conditioning: leaves gain a ``(B, G, ...)``
+    group axis (G=2 cond/uncond, G=1 without guidance batching).
+
+    Used by per-sample routed dispatch, where the guidance branches share
+    the sample's latent *and* its routed expert — grouping them inside one
+    vmapped instance gathers each sample's params once instead of twice.
+    """
+    if null_cond is None:
+        return {
+            k: v[:, None] for k, v in cond.items() if v is not None
+        }
+    out: dict = {}
+    need_drop = False
+    for key in sorted(set(cond) | set(null_cond)):
+        c, n = cond.get(key), null_cond.get(key)
+        if c is None and n is None:
+            continue
+        if n is None:
+            out[key] = jnp.stack([c, c], axis=1)
+            need_drop = True
+        else:
+            out[key] = jnp.stack(
+                [jnp.asarray(c), jnp.asarray(n)], axis=1
+            )
+    if need_drop:
+        out["drop_mask"] = jnp.broadcast_to(
+            jnp.array([False, True])[None], (batch, 2)
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fused compute-sparse engine
+# ---------------------------------------------------------------------------
+
+
+def _stack_params(params: Sequence):
+    if len(params) == 1:
+        return jax.tree.map(lambda x: jnp.asarray(x)[None], params[0])
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+
+
+def _sample_fused(
+    key: jax.Array,
+    experts: Sequence[ExpertSpec],
+    params: Sequence,
+    router_fn,
+    shape: tuple[int, ...],
+    cond: dict,
+    null_cond: dict | None,
+    config: SamplerConfig,
+    mode: str,
+    init_noise: Array | None,
+    stacked_params=None,
+) -> Array:
+    K = len(experts)
+    B = shape[0]
+    conv = config.conversion
+    apply0 = experts[0].apply_fn
+    homogeneous = all(e.apply_fn is experts[0].apply_fn for e in experts)
+
+    use_cfg = null_cond is not None and config.cfg_scale != 1.0
+    batched = (
+        use_cfg and config.batched_cfg
+        and _cfg_batchable(cond, null_cond or {})
+    )
+
+    if mode == "routed":
+        k_slots = 1 if config.strategy in ("top1", "threshold") \
+            else min(config.top_k, K)
+        uniform = config.strategy == "threshold"
+    else:
+        k_slots, uniform = K, False
+
+    # Routed dispatch substrate: callers that keep long-lived stacked
+    # params (ServingEngine) pass them in; otherwise stack once per trace.
+    # _resolve_engine already guaranteed stackability for per-sample
+    # routing; the batch-uniform threshold path re-checks because it also
+    # serves heterogeneous expert sets (via lax.switch).
+    stacked = stacked_params
+    if stacked is None and mode == "routed" and homogeneous and (
+        not uniform or params_are_stackable(params)
+    ):
+        stacked = _stack_params(params)
+
+    x = init_noise if init_noise is not None \
+        else jax.random.normal(key, shape, dtype=jnp.float32)
+    ts = jnp.linspace(1.0, 0.0, config.num_steps + 1)
+    # Schedule-coefficient tables: computed ONCE per run, gathered per step.
+    tables = unified_coeff_tables(
+        [e.objective for e in experts],
+        [e.get_schedule() for e in experts],
+        ts[:-1], conv,
+    )                                                     # (S, 5, K)
+
+    persample = mode == "routed" and not uniform
+
+    # Per-sample routed dispatch runs each sample's G guidance branches
+    # (G=2 batched CFG, G=1 otherwise) inside ONE vmapped instance: the
+    # branches share the sample's latent and routed expert, so its params
+    # are gathered once, not per branch.
+    def _make_vmapped(g):
+        def one(p1, x1, t1, c1):
+            xg = jnp.broadcast_to(x1[None], (g,) + x1.shape)
+            tg = jnp.full((g,), t1)
+            return apply0(p1, xg, tg, **c1)               # (g, *latent)
+        return jax.vmap(one)
+
+    vmapped = {g: _make_vmapped(g) for g in (1, 2)} if persample else {}
+
+    def persample_velocity(x_in, tb, cond_g, g, slot_idx, slot_w, tab):
+        """Fused velocity (g·B, *latent) in [cond; uncond] concat order."""
+        cols = []
+        for j in range(k_slots):
+            pj = jax.tree.map(lambda s: s[slot_idx[:, j]], stacked)
+            cols.append(vmapped[g](pj, x_in, tb, cond_g))  # (B, g, *latent)
+        preds = jnp.moveaxis(jnp.stack(cols), 2, 1)        # (k, g, B, ...)
+        preds = preds.reshape((k_slots, g * B) + preds.shape[3:])
+        x_all = jnp.concatenate([x_in] * g, axis=0)
+        w_all = jnp.concatenate([slot_w] * g, axis=0)
+        idx_all = jnp.concatenate([slot_idx] * g, axis=0)
+        coef = jnp.moveaxis(tab[:, idx_all], 1, 2)         # (5, k, g·B)
+        return ops.fused_velocity(
+            preds, x_all, w_all, coef,
+            clamp=conv.clamp, alpha_min=conv.alpha_min,
+        )
+
+    def concat_preds(x_all, t_all, cond_all, slot_idx_all):
+        """(k_slots, Bx, *latent) predictions — dense / batch-uniform."""
+        if mode == "dense":
+            return jnp.stack([
+                spec.apply_fn(p, x_all, t_all, **cond_all)
+                for spec, p in zip(experts, params)
+            ])
+        # Batch-uniform routing (threshold router depends only on t):
+        # dispatch the whole batch to ONE expert per step.
+        idx0 = slot_idx_all[0, 0]
+        if stacked is not None:
+            p = jax.tree.map(
+                lambda s: jax.lax.dynamic_index_in_dim(
+                    s, idx0, 0, keepdims=False),
+                stacked,
+            )
+            out = apply0(p, x_all, t_all, **cond_all)
+        else:
+            # Heterogeneous apply_fns: switch over expert closures.
+            branches = [
+                functools.partial(
+                    lambda spec, p, op: spec.apply_fn(
+                        p, op[0], op[1], **op[2]),
+                    spec, p,
+                )
+                for spec, p in zip(experts, params)
+            ]
+            out = jax.lax.switch(idx0, branches, (x_all, t_all, cond_all))
+        return out[None]
+
+    def concat_velocity(x_all, t_all, cond_all, slot_idx_all, w_all, tab):
+        preds = concat_preds(x_all, t_all, cond_all, slot_idx_all)
+        if mode == "dense":
+            coef = jnp.broadcast_to(tab[:, :, None], (5, K, x_all.shape[0]))
+        else:
+            coef = jnp.moveaxis(tab[:, slot_idx_all], 1, 2)
+        return ops.fused_velocity(
+            preds, x_all, w_all, coef,
+            clamp=conv.clamp, alpha_min=conv.alpha_min,
+        )
+
+    def step(x, i):
+        t_hi, t_lo = ts[i], ts[i + 1]
+        dt = t_hi - t_lo
+        tb = jnp.full((B,), t_hi)
+        w = fusion_weights(
+            experts, router_fn, x, tb,
+            strategy=config.strategy, top_k=config.top_k,
+            threshold=config.threshold,
+            ddpm_low_noise_only=config.ddpm_low_noise_only,
+        )                                                 # (B, K)
+        if mode == "routed":
+            slot_idx, slot_w = topk_slots(w, k_slots)     # (B, k)
+        else:
+            slot_idx = jnp.broadcast_to(jnp.arange(K)[None], (B, K))
+            slot_w = w
+        tab = tables[i]                                   # (5, K)
+        if persample:
+            if batched:
+                cond_g = _cfg_grouped_cond(cond, null_cond or {}, B)
+                fused = persample_velocity(x, tb, cond_g, 2, slot_idx,
+                                           slot_w, tab)
+                u = cfg_combine(fused[:B], fused[B:], config.cfg_scale)
+            elif use_cfg:
+                u_c = persample_velocity(
+                    x, tb, _cfg_grouped_cond(cond, None, B), 1,
+                    slot_idx, slot_w, tab)
+                u_u = persample_velocity(
+                    x, tb, _cfg_grouped_cond(dict(null_cond or {}), None, B),
+                    1, slot_idx, slot_w, tab)
+                u = cfg_combine(u_c, u_u, config.cfg_scale)
+            else:
+                u = persample_velocity(
+                    x, tb, _cfg_grouped_cond(cond, None, B), 1,
+                    slot_idx, slot_w, tab)
+        elif batched:
+            xb = jnp.concatenate([x, x], axis=0)
+            tb2 = jnp.concatenate([tb, tb], axis=0)
+            cond_b = _cfg_batched_cond(cond, null_cond or {}, B)
+            idx2 = jnp.concatenate([slot_idx, slot_idx], axis=0)
+            w2 = jnp.concatenate([slot_w, slot_w], axis=0)
+            fused = concat_velocity(xb, tb2, cond_b, idx2, w2, tab)
+            u = cfg_combine(fused[:B], fused[B:], config.cfg_scale)
+        elif use_cfg:
+            u_c = concat_velocity(x, tb, cond, slot_idx, slot_w, tab)
+            u_u = concat_velocity(x, tb, dict(null_cond or {}), slot_idx,
+                                  slot_w, tab)
+            u = cfg_combine(u_c, u_u, config.cfg_scale)
+        else:
+            u = concat_velocity(x, tb, cond, slot_idx, slot_w, tab)
+        return x - u * dt, None
+
+    x, _ = jax.lax.scan(step, x, jnp.arange(config.num_steps))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Reference (per-expert, all-experts, two-pass CFG) path
+# ---------------------------------------------------------------------------
 
 
 def _expert_velocities_with_cfg(
@@ -76,6 +439,46 @@ def _expert_velocities_with_cfg(
     return cfg_combine(v_c, v_u, cfg.cfg_scale)
 
 
+def _sample_reference(
+    key: jax.Array,
+    experts: Sequence[ExpertSpec],
+    params: Sequence,
+    router_fn,
+    shape: tuple[int, ...],
+    cond: dict,
+    null_cond: dict | None,
+    config: SamplerConfig,
+    init_noise: Array | None,
+) -> Array:
+    x = init_noise if init_noise is not None \
+        else jax.random.normal(key, shape, dtype=jnp.float32)
+    ts = jnp.linspace(1.0, 0.0, config.num_steps + 1)
+
+    def step(x, i):
+        t_hi, t_lo = ts[i], ts[i + 1]
+        dt = t_hi - t_lo
+        tb = jnp.full((shape[0],), t_hi)
+        v = _expert_velocities_with_cfg(
+            experts, params, x, tb, cond, null_cond, config
+        )
+        w = fusion_weights(
+            experts, router_fn, x, tb,
+            strategy=config.strategy, top_k=config.top_k,
+            threshold=config.threshold,
+            ddpm_low_noise_only=config.ddpm_low_noise_only,
+        )
+        u = fuse_predictions(v, w)
+        return x - u * dt, None
+
+    x, _ = jax.lax.scan(step, x, jnp.arange(config.num_steps))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
 def sample_ensemble(
     key: jax.Array,
     experts: Sequence[ExpertSpec],
@@ -86,6 +489,9 @@ def sample_ensemble(
     cond: dict | None = None,
     null_cond: dict | None = None,
     config: SamplerConfig = SamplerConfig(),
+    engine: str = "auto",
+    init_noise: Array | None = None,
+    stacked_params=None,
 ) -> Array:
     """Euler-ODE sampling with router-weighted heterogeneous fusion.
 
@@ -93,58 +499,30 @@ def sample_ensemble(
       router_fn: ``(x_t, t) -> (B, K) posterior``; may be None only for
         single-expert sampling or the threshold strategy.
       shape: sample shape ``(B, ...)`` in latent space.
+      engine: ``'auto'`` picks the compute-sparse routed engine when the
+        strategy and expert set allow it, falling back to the dense
+        fused engine otherwise; ``'routed'`` / ``'dense'`` force a path;
+        ``'reference'`` is the original per-expert two-pass formulation
+        (required for ``time_map='snr_match'``, kept for parity tests).
+      init_noise: optional pre-drawn ``N(0,1)`` latents of ``shape`` (lets
+        serving donate the buffer); drawn from ``key`` when omitted.
+      stacked_params: optional pre-stacked expert params (leaves
+        ``(K, ...)``, see ``models.dit.stack_expert_params``) so
+        long-lived engines don't re-stack per compiled cache entry.
 
     Returns samples at t=0 (clean latents).
     """
     cond = cond or {}
-    K = len(experts)
-    x = jax.random.normal(key, shape, dtype=jnp.float32)
-    ts = jnp.linspace(1.0, 0.0, config.num_steps + 1)
-
-    def step(x, i):
-        t_hi, t_lo = ts[i], ts[i + 1]
-        dt = t_hi - t_lo
-        tb = jnp.full((shape[0],), t_hi)
-        v = _expert_velocities_with_cfg(
-            experts, params, x, tb, cond, null_cond, config
+    mode = _resolve_engine(engine, experts, params, config)
+    if mode == "reference":
+        return _sample_reference(
+            key, experts, params, router_fn, shape, cond, null_cond,
+            config, init_noise,
         )
-        if config.strategy == "threshold":
-            w = threshold_router_weights(tb, K, threshold=config.threshold)
-        else:
-            if router_fn is None:
-                if K != 1:
-                    raise ValueError("router_fn required for multi-expert fusion")
-                w = jnp.ones((shape[0], 1))
-            else:
-                probs = router_fn(x, tb)          # (B, num_clusters)
-                # Map cluster posterior -> per-expert probs via each
-                # expert's owned cluster (Eq. 1: p(k | x_t)).
-                cluster_ids = jnp.array(
-                    [max(e.cluster_id, 0) for e in experts]
-                )
-                if probs.shape[-1] != K or any(
-                    e.cluster_id not in (-1, i)
-                    for i, e in enumerate(experts)
-                ):
-                    probs = probs[:, cluster_ids]
-                    probs = probs / jnp.maximum(
-                        probs.sum(-1, keepdims=True), 1e-12
-                    )
-                w = routing_weights(probs, config.strategy, config.top_k)
-        if config.ddpm_low_noise_only > 0.0:
-            # §7.3: restrict converted-DDPM experts to low-noise steps.
-            is_ddpm = jnp.array([e.objective == "ddpm" for e in experts])
-            high_noise = tb > config.ddpm_low_noise_only        # (B,)
-            gate = jnp.where(
-                high_noise[:, None] & is_ddpm[None, :], 0.0, 1.0
-            )
-            w = w * gate
-            w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-12)
-        u = fuse_predictions(v, w)
-        return x - u * dt, None
-
-    x, _ = jax.lax.scan(step, x, jnp.arange(config.num_steps))
-    return x
+    return _sample_fused(
+        key, experts, params, router_fn, shape, cond, null_cond, config,
+        mode, init_noise, stacked_params,
+    )
 
 
 def sample_single_expert(

@@ -75,6 +75,27 @@ class Schedule:
         return a * x0 + s * eps
 
 
+def coeff_table(
+    schedule: "Schedule", ts: Array, *, derivative_mode: str = "analytic"
+) -> Array:
+    """Precomputed ``(4, S)`` table of ``(alpha, sigma, dalpha, dsigma)``.
+
+    The sampling hot path evaluates schedule coefficients at the same step
+    grid every request; tabulating them once per run keeps the per-step
+    work to a single gather (see ``conversion.unified_coeff_tables``).
+    """
+    ts = jnp.asarray(ts, jnp.float32)
+    a, s = schedule.coeffs(ts)
+    if derivative_mode == "fd":
+        da, ds = schedule.fd_derivs(ts)
+    else:
+        da, ds = schedule.derivs(ts)
+    return jnp.stack([
+        jnp.broadcast_to(a, ts.shape), jnp.broadcast_to(s, ts.shape),
+        jnp.broadcast_to(da, ts.shape), jnp.broadcast_to(ds, ts.shape),
+    ]).astype(jnp.float32)
+
+
 def _left_broadcast(c: Array, ndim: int) -> Array:
     """Reshape a per-sample coefficient ``(B,)`` to ``(B, 1, ..., 1)``."""
     c = jnp.asarray(c)

@@ -1,10 +1,23 @@
 """Stub DINOv2 feature extractor (modality-frontend carve-out).
 
 The paper extracts 1024-d [CLS] features from DINOv2-ViT-L/14.  Here the
-extractor is a frozen, deterministic 2-layer random-projection network over
+extractor is a frozen, deterministic random-projection network over
 latents — it preserves the property that matters for the pipeline: images
 from the same semantic category land near each other in feature space, so
 hierarchical k-means recovers meaningful partitions.
+
+Two frozen branches are combined:
+
+* a 2-layer random projection of the full latent (fine-grained texture
+  signal, low SNR — per-pixel noise dominates the norm);
+* spatially pooled per-channel statistics projected to the same space.
+  Spatial pooling averages the i.i.d. per-pixel noise down by ~1/√(H·W)
+  while the category mean survives, so this branch carries most of the
+  class-discriminative signal; it is weighted up accordingly.
+
+This mirrors what a real frozen encoder provides (globally pooled,
+denoised semantics) and is what makes k-means partitions align with the
+generating categories instead of per-sample noise.
 """
 
 from __future__ import annotations
@@ -18,21 +31,34 @@ Array = jax.Array
 
 FEATURE_DIM = 1024
 
+#: relative weight of the pooled (high-SNR) branch in the unit-norm output.
+POOLED_GAIN = 3.0
 
-@functools.lru_cache(maxsize=4)
-def _frozen_weights(in_dim: int, seed: int = 7):
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+
+@functools.lru_cache(maxsize=8)
+def _frozen_weights(in_dim: int, pooled_dim: int, seed: int = 7):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
     hidden = 512
     w1 = jax.random.normal(k1, (in_dim, hidden)) / jnp.sqrt(in_dim)
     w2 = jax.random.normal(k2, (hidden, FEATURE_DIM)) / jnp.sqrt(hidden)
-    return w1, w2
+    w3 = jax.random.normal(k3, (pooled_dim, FEATURE_DIM)) / jnp.sqrt(
+        max(pooled_dim, 1)
+    )
+    return w1, w2, w3
+
+
+def _unit(x: Array, eps: float = 1e-8) -> Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
 
 
 def extract_features(latents: Array, *, seed: int = 7) -> Array:
     """(B, H, W, C) latents -> (B, 1024) unit-norm 'DINOv2' features."""
-    b = latents.shape[0]
+    b, c = latents.shape[0], latents.shape[-1]
     x = latents.reshape(b, -1).astype(jnp.float32)
-    w1, w2 = _frozen_weights(x.shape[1], seed)
+    pooled = latents.astype(jnp.float32).mean(axis=(1, 2))       # (B, C)
+    w1, w2, w3 = _frozen_weights(x.shape[1], c, seed)
     h = jnp.tanh(x @ w1)
-    f = h @ w2
-    return f / jnp.maximum(jnp.linalg.norm(f, axis=-1, keepdims=True), 1e-8)
+    fine = _unit(h @ w2)
+    coarse = _unit(pooled @ w3)
+    f = fine + POOLED_GAIN * coarse
+    return _unit(f)

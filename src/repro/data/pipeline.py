@@ -65,21 +65,48 @@ class ExpertDataStream:
             step += 1
 
     def next_batch(self, step: int) -> dict:
-        """Rejection-sample a batch belonging to this expert's cluster."""
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        """Rejection-sample a batch belonging to this expert's cluster.
+
+        Draws additional pools until ``batch_size`` matching samples are
+        found (bounded retries); a short batch is topped up by repeating
+        *matching* samples, never by leaking other clusters' data — the
+        zero-synchronization isolation invariant is structural.
+        """
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
         need = self.batch_size
-        pool = sample_batch(self.spec, key, need * self.oversample)
-        feats = extract_features(pool["latents"])
-        assign = np.asarray(self.cluster_model.assign(feats))
-        idx = np.nonzero(assign == self.cluster_id)[0]
-        if len(idx) < need:  # top up with wraparound (rare, tiny clusters)
-            idx = np.concatenate([idx, np.arange(need)])[:need]
-        else:
-            idx = idx[:need]
+        pools: list[dict] = []
+        matched: list[np.ndarray] = []
+        total = 0
+        for attempt in range(8):
+            key = jax.random.fold_in(base, attempt)
+            pool = sample_batch(self.spec, key, need * self.oversample)
+            feats = extract_features(pool["latents"])
+            assign = np.asarray(self.cluster_model.assign(feats))
+            idx = np.nonzero(assign == self.cluster_id)[0]
+            pools.append(pool)
+            matched.append(idx)
+            total += len(idx)
+            if total >= need:
+                break
+        latents = np.concatenate(
+            [np.asarray(p["latents"])[i] for p, i in zip(pools, matched)]
+        )
+        text = np.concatenate(
+            [np.asarray(p["text_emb"])[i] for p, i in zip(pools, matched)]
+        )
+        cats = np.concatenate(
+            [np.asarray(p["category"])[i] for p, i in zip(pools, matched)]
+        )
+        if len(latents) == 0:
+            raise RuntimeError(
+                f"cluster {self.cluster_id} produced no samples in "
+                f"{8 * need * self.oversample} draws — clustering degenerate?"
+            )
+        sel = np.arange(need) % len(latents)     # wraparound within cluster
         return {
-            "latents": pool["latents"][idx],
-            "text_emb": pool["text_emb"][idx],
-            "category": pool["category"][idx],
+            "latents": jnp.asarray(latents[sel]),
+            "text_emb": jnp.asarray(text[sel]),
+            "category": jnp.asarray(cats[sel]),
         }
 
 

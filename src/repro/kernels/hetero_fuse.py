@@ -11,6 +11,16 @@ a (K, B) operand), and writes only the fused velocity.
 
 Grid: (B, T/block_t); the expert axis K is kept whole inside the block
 (K ≤ 8 in the paper).
+
+Two entry points share the kernel math:
+
+* :func:`hetero_fuse` — per-expert objective flags + raw schedule coeffs
+  (the original dense-ensemble signature);
+* :func:`hetero_fuse_coeffs` — the serving hot path: a single ``(5, K, B)``
+  coefficient stack with FM experts already folded to the identity
+  coefficients ``(1, 0, 0, 1, 1)`` (see ``conversion.unified_coeff_tables``),
+  so the kernel needs no flag select and the K axis can hold *routed slots*
+  (per-sample gathered experts) instead of the full ensemble.
 """
 
 from __future__ import annotations
@@ -45,6 +55,61 @@ def _fuse_kernel(
     v = flags[:, None] * v_conv + (1.0 - flags[:, None]) * preds
     fused = jnp.sum(w[:, None] * v, axis=0)           # (bt,)
     o_ref[0] = fused.astype(o_ref.dtype)
+
+
+def _fuse_coeffs_kernel(
+    preds_ref, xt_ref, w_ref, coef_ref, o_ref,
+    *, clamp: float, alpha_min: float,
+):
+    preds = preds_ref[:, 0].astype(jnp.float32)       # (K, bt)
+    xt = xt_ref[0].astype(jnp.float32)                # (bt,)
+    w = w_ref[0].astype(jnp.float32)                  # (K,)
+    coef = coef_ref[:, :, 0].astype(jnp.float32)      # (5, K)
+    alpha, sigma, dalpha, dsigma, vscale = (
+        coef[0], coef[1], coef[2], coef[3], coef[4]
+    )
+
+    a_safe = jnp.maximum(alpha, alpha_min)[:, None]
+    x0h = (xt[None] - sigma[:, None] * preds) / a_safe
+    x0h = jnp.clip(x0h, -clamp, clamp)
+    v = (dalpha[:, None] * x0h + dsigma[:, None] * preds) * vscale[:, None]
+    fused = jnp.sum(w[:, None] * v, axis=0)           # (bt,)
+    o_ref[0] = fused.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("clamp", "alpha_min", "block_t", "interpret")
+)
+def hetero_fuse_coeffs(
+    preds: Array,     # (K, B, T) native predictions of the routed slots
+    x_t: Array,       # (B, T)
+    weights: Array,   # (B, K) fusion weights (rows sum to 1)
+    coef: Array,      # (5, K, B) unified (alpha, sigma, dalpha, dsigma, vscale)
+    *,
+    clamp: float = 20.0,
+    alpha_min: float = 0.01,
+    block_t: int = 1024,
+    interpret: bool = False,
+) -> Array:
+    k, b, t = preds.shape
+    block_t = min(block_t, t)
+    assert t % block_t == 0
+    kernel = functools.partial(
+        _fuse_coeffs_kernel, clamp=clamp, alpha_min=alpha_min
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, t // block_t),
+        in_specs=[
+            pl.BlockSpec((k, 1, block_t), lambda bi, ti: (0, bi, ti)),
+            pl.BlockSpec((1, block_t), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((1, k), lambda bi, ti: (bi, 0)),
+            pl.BlockSpec((5, k, 1), lambda bi, ti: (0, 0, bi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t), lambda bi, ti: (bi, ti)),
+        out_shape=jax.ShapeDtypeStruct((b, t), preds.dtype),
+        interpret=interpret,
+    )(preds, x_t, weights, coef.astype(jnp.float32))
 
 
 @functools.partial(

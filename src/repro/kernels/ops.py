@@ -21,6 +21,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.adaln_fuse import adaln_fuse as _adaln_fuse
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.hetero_fuse import hetero_fuse as _hetero_fuse
+from repro.kernels.hetero_fuse import hetero_fuse_coeffs as _hetero_fuse_coeffs
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 Array = jax.Array
@@ -85,6 +86,42 @@ def adaln_modulate(x, gamma, beta, *, eps=1e-6, **kw):
 
 
 # --- hetero fuse -------------------------------------------------------------
+
+
+def fused_velocity(
+    preds: Array,             # (K, B, *latent) routed-slot native predictions
+    x_t: Array,               # (B, *latent)
+    weights: Array,           # (B, K) fusion weights
+    coef: Array,              # (5, K, B) unified coefficient stack
+    *,
+    clamp: float = 20.0,
+    alpha_min: float = 0.01,
+) -> Array:
+    """Hot-path convert-and-fuse with precomputed unified coefficients.
+
+    The serving engine precomputes ``conversion.unified_coeff_tables`` once
+    per run and gathers the per-step ``(5, K, B)`` slice (per routed slot
+    when execution is compute-sparse); this op then does the entire per-step
+    fusion — ε→v conversion + Eq. 1 weighting — in one kernel launch
+    (Pallas on TPU, oracle elsewhere).
+    """
+    k, b = preds.shape[0], preds.shape[1]
+    latent_shape = preds.shape[2:]
+    tsize = 1
+    for s in latent_shape:
+        tsize *= s
+    pf = preds.reshape(k, b, tsize)
+    xf = x_t.reshape(b, tsize)
+    if use_pallas():
+        out = _hetero_fuse_coeffs(
+            pf, xf, weights, coef,
+            clamp=clamp, alpha_min=alpha_min, interpret=_interpret(),
+        )
+    else:
+        out = _ref.ref_hetero_fuse_coeffs(
+            pf, xf, weights, coef, clamp=clamp, alpha_min=alpha_min,
+        )
+    return out.reshape((b,) + latent_shape)
 
 
 def fused_convert_and_fuse(

@@ -93,3 +93,31 @@ def ref_hetero_fuse(
     v = jnp.where(is_ddpm[:, None, None], v_conv, preds)
     w = jnp.moveaxis(weights, -1, 0)[..., None]            # (K, B, 1)
     return jnp.sum(w * v, axis=0)
+
+
+def ref_hetero_fuse_coeffs(
+    preds: Array,        # (K, B, T) native predictions of the routed slots
+    x_t: Array,          # (B, T)
+    weights: Array,      # (B, K) fusion weights
+    coef: Array,         # (5, K, B) unified coefficient stack
+    *,
+    clamp: float = 20.0,
+    alpha_min: float = 0.01,
+) -> Array:
+    """Oracle for the coefficient-folded convert-and-fuse hot-path op.
+
+    FM slots carry the identity coefficients (1, 0, 0, 1, 1), under which
+    ``v = 0·x̂0 + 1·pred`` — exact pass-through without a flag select.
+    """
+    coef = coef.astype(jnp.float32)
+    alpha, sigma, dalpha, dsigma, vscale = (
+        coef[0], coef[1], coef[2], coef[3], coef[4]
+    )                                                      # each (K, B)
+    a = jnp.maximum(alpha, alpha_min)[..., None]
+    x0h = (x_t[None] - sigma[..., None] * preds) / a
+    x0h = jnp.clip(x0h, -clamp, clamp)
+    v = (dalpha[..., None] * x0h + dsigma[..., None] * preds) * vscale[
+        ..., None
+    ]
+    w = jnp.moveaxis(weights, -1, 0)[..., None]            # (K, B, 1)
+    return jnp.sum(w * v, axis=0)

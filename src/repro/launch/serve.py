@@ -3,8 +3,22 @@
 Loads a directory of self-describing expert checkpoints (each carries its
 objective / schedule / cluster metadata — §5 limitation iv) plus a router
 checkpoint, and serves batched text-to-image requests with the paper's
-Fig. 2 pipeline: router posterior → Top-K expert selection → native expert
-predictions → schedule-aware ε→v conversion → fused velocity → Euler step.
+Fig. 2 pipeline on the compute-sparse hot path: router posterior → Top-K
+expert selection → **routed-expert-only** native predictions (stacked
+params + gather dispatch; CFG batched along the batch axis) → one fused
+schedule-aware ε→v-and-combine kernel per Euler step.
+
+Serving properties:
+
+* **compute-sparse** — only the routed experts run each step (k forwards
+  instead of K; 1 forward with batched CFG instead of 2), matching the
+  paper's claim that Top-K routing pays single-model cost at ensemble
+  quality.  Heterogeneous-architecture expert sets fall back to the dense
+  fused path automatically.
+* **retrace-free** — ``ServingEngine`` caches a jitted sampling function
+  per (batch size, latent shape, sampler config, conditioning signature)
+  with the noise buffer donated, so repeated requests with the same shape
+  never recompile; ``engine.stats['traces']`` exposes the compile count.
 
 Also exposes ``ServingEngine`` programmatically (used by examples/ and the
 benchmark harness).
@@ -17,6 +31,7 @@ import dataclasses
 import glob
 import os
 import time
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +41,7 @@ from repro.core import (
     ConversionConfig,
     ExpertSpec,
     SamplerConfig,
+    params_are_stackable,
     sample_ensemble,
 )
 from repro.models import dit as D
@@ -40,12 +56,29 @@ class ServingEngine:
     router_fn: object | None
     latent_shape: tuple[int, int, int]
     sampler: SamplerConfig = SamplerConfig()
+    #: 'auto' | 'routed' | 'dense' | 'reference' (see core.sample_ensemble)
+    engine: str = "auto"
+
+    def __post_init__(self) -> None:
+        self._compiled: dict = {}
+        self.stats = {"traces": 0, "requests": 0}
+        self.homogeneous = len(self.experts) <= 1 or (
+            all(e.apply_fn is self.experts[0].apply_fn for e in self.experts)
+            and params_are_stackable(self.expert_params)
+        )
+        # Stacked single-pytree expert params: the routed engine's dispatch
+        # substrate (kept alongside the per-expert list for the fallback).
+        self.stacked_params = (
+            D.stack_expert_params(self.expert_params)
+            if self.homogeneous and self.expert_params else None
+        )
 
     @classmethod
     def from_checkpoint_dir(
         cls, ckpt_dir: str, *, dit_cfg: DiTConfig,
         router_cfg: DiTConfig | None = None,
         sampler: SamplerConfig = SamplerConfig(),
+        engine: str = "auto",
     ) -> "ServingEngine":
         experts, params = [], []
         apply_fn = D.make_expert_apply(dit_cfg)
@@ -70,22 +103,55 @@ class ServingEngine:
             experts=experts, expert_params=params, router_fn=router_fn,
             latent_shape=(dit_cfg.latent_size, dit_cfg.latent_size,
                           dit_cfg.latent_channels),
-            sampler=sampler,
+            sampler=sampler, engine=engine,
         )
+
+    # -- retrace-free compiled-sampler cache --------------------------------
+
+    def _get_compiled(self, batch_size: int, has_text: bool) -> Callable:
+        """Jitted sampler keyed by everything that changes the trace.
+
+        The initial-noise buffer is donated — XLA reuses it for the
+        evolving latent state instead of allocating a fresh buffer per
+        request.
+        """
+        cache_key = (batch_size, self.latent_shape, self.sampler,
+                     self.engine, has_text)
+        fn = self._compiled.get(cache_key)
+        if fn is None:
+            shape = (batch_size,) + self.latent_shape
+
+            def _sample(key, noise, text_emb):
+                self.stats["traces"] += 1      # runs at trace time only
+                cond = {"text_emb": text_emb} if has_text else None
+                null = {"text_emb": None} if has_text else None
+                return sample_ensemble(
+                    key, self.experts, self.expert_params, self.router_fn,
+                    shape, cond=cond, null_cond=null, config=self.sampler,
+                    engine=self.engine, init_noise=noise,
+                    stacked_params=self.stacked_params,
+                )
+
+            # donation is a no-op (with a warning) on CPU; only request it
+            # where XLA can actually alias the buffer.
+            donate = () if jax.default_backend() == "cpu" else (1,)
+            fn = jax.jit(_sample, donate_argnums=donate)
+            self._compiled[cache_key] = fn
+        return fn
 
     def generate(
         self, key, batch_text_emb: jnp.ndarray | None, batch_size: int,
         *, null_text_emb: jnp.ndarray | None = None,
     ) -> jnp.ndarray:
-        cond = {"text_emb": batch_text_emb} if batch_text_emb is not None \
-            else None
-        null = {"text_emb": None}
-        return sample_ensemble(
-            key, self.experts, self.expert_params, self.router_fn,
-            (batch_size,) + self.latent_shape,
-            cond=cond, null_cond=null if batch_text_emb is not None else None,
-            config=self.sampler,
+        self.stats["requests"] += 1
+        has_text = batch_text_emb is not None
+        fn = self._get_compiled(batch_size, has_text)
+        noise = jax.random.normal(
+            key, (batch_size,) + self.latent_shape, dtype=jnp.float32
         )
+        if not has_text:
+            batch_text_emb = jnp.zeros((0,), jnp.float32)   # static filler
+        return fn(key, noise, batch_text_emb)
 
 
 def main() -> None:
@@ -98,6 +164,8 @@ def main() -> None:
     ap.add_argument("--strategy", default="topk",
                     choices=("top1", "topk", "full", "threshold"))
     ap.add_argument("--top-k", type=int, default=2)
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "routed", "dense", "reference"))
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--latent-size", type=int, default=8)
     args = ap.parse_args()
@@ -113,9 +181,11 @@ def main() -> None:
             num_steps=args.steps, cfg_scale=args.cfg_scale,
             strategy=args.strategy, top_k=args.top_k,
         ),
+        engine=args.engine,
     )
     print(f"loaded {len(engine.experts)} experts "
-          f"({[e.objective for e in engine.experts]})")
+          f"({[e.objective for e in engine.experts]}) "
+          f"homogeneous={engine.homogeneous}")
     for r in range(args.requests):
         key = jax.random.PRNGKey(r)
         t0 = time.time()
@@ -123,9 +193,11 @@ def main() -> None:
             key, (args.batch, dit_cfg.text_len, dit_cfg.text_dim)
         )
         out = engine.generate(key, text, args.batch)
+        out = jax.block_until_ready(out)
         dt = time.time() - t0
         print(f"request {r}: {out.shape} in {dt:.2f}s "
               f"({args.batch / dt:.1f} img/s) "
+              f"traces={engine.stats['traces']} "
               f"finite={bool(np.isfinite(np.asarray(out)).all())}")
 
 

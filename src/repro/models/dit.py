@@ -312,6 +312,39 @@ def apply(
                       cfg.latent_channels).astype(jnp.float32)
 
 
+def stack_expert_params(params_list):
+    """Stack K homogeneous-architecture expert pytrees into one pytree.
+
+    Every leaf gains a leading expert axis ``(K, ...)``.  This is the
+    precondition for the sampler's routed-expert-only execution: per-step
+    dispatch becomes a gather (``gather_expert_params`` /
+    ``jax.lax.dynamic_index_in_dim``) instead of a Python loop over all
+    resident experts.  Raises if structures or leaf shapes differ — callers
+    should check ``repro.core.params_are_stackable`` first and fall back to
+    the dense path for heterogeneous expert sets.
+    """
+    if len(params_list) == 1:
+        return jax.tree.map(lambda x: jnp.asarray(x)[None], params_list[0])
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def gather_expert_params(stacked, expert_idx: Array):
+    """Gather per-sample expert params from a stacked pytree.
+
+    ``expert_idx`` is ``(B,)`` (per-sample routing — leaves become
+    ``(B, ...)``, for a vmapped apply) or a scalar (batch-uniform routing —
+    one expert's params, for a plain apply).
+    """
+    idx = jnp.asarray(expert_idx)
+    if idx.ndim == 0:
+        return jax.tree.map(
+            lambda s: jax.lax.dynamic_index_in_dim(s, idx, 0,
+                                                   keepdims=False),
+            stacked,
+        )
+    return jax.tree.map(lambda s: s[idx], stacked)
+
+
 def make_expert_apply(cfg: DiTConfig):
     """Adapter matching the ``ExpertSpec.apply_fn`` signature."""
 

@@ -1,0 +1,107 @@
+"""Minimal deterministic fallback for the ``hypothesis`` API we use.
+
+Registered by ``conftest.py`` as the ``hypothesis`` module when the real
+package is not installed (see ``requirements-dev.txt``), so the suite
+collects AND runs everywhere.  Supports the subset this repo's tests
+need: ``@settings(max_examples=..., deadline=...)``, ``@given`` with
+positional/keyword strategies, and ``strategies.integers / floats /
+sampled_from``.
+
+Examples are deterministic: boundary values first (min, max, midpoint /
+all elements for ``sampled_from``) followed by seeded pseudo-random draws
+— no shrinking, no database.
+"""
+
+from __future__ import annotations
+
+import functools
+import sys
+
+import numpy as np
+
+
+class settings:
+    def __init__(self, max_examples: int = 20, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+class SearchStrategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self._boundary = tuple(boundary)
+
+    def examples(self, rng):
+        for v in self._boundary:
+            yield v
+        while True:
+            yield self._draw(rng)
+
+
+def integers(min_value: int = 0, max_value: int = 2**31 - 1):
+    return SearchStrategy(
+        lambda rng: int(rng.randint(min_value, max_value + 1)),
+        (min_value, max_value),
+    )
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_ignored):
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        (min_value, max_value, 0.5 * (min_value + max_value)),
+    )
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: elements[rng.randint(len(elements))], elements
+    )
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            rng = np.random.RandomState(0)
+            pos = [s.examples(rng) for s in arg_strategies]
+            kws = {k: s.examples(rng) for k, s in kw_strategies.items()}
+            for _ in range(n):
+                args = [next(s) for s in pos]
+                kwargs = {k: next(s) for k, s in kws.items()}
+                try:
+                    fn(*args, **kwargs)
+                except _Unsatisfied:
+                    continue
+
+        # pytest resolves fixtures from the __wrapped__ signature; the
+        # strategy parameters are supplied here, not by fixtures.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate
+
+
+class HealthCheck:
+    """Placeholder so ``suppress_health_check=[...]`` doesn't crash."""
+
+    too_slow = data_too_large = filter_too_much = None
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Reject the current example when ``condition`` is falsy."""
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+#: ``from hypothesis import strategies as st`` resolves to this module.
+strategies = sys.modules[__name__]

@@ -4,6 +4,17 @@ import sys
 # NOTE: no XLA_FLAGS here on purpose — tests must see the single real CPU
 # device; only launch/dryrun.py requests 512 placeholder devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# Property-based tests use `hypothesis` when available (requirements-dev.txt)
+# and fall back to the deterministic stub so collection works everywhere.
+try:  # noqa: SIM105
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
 
 import jax  # noqa: E402
 
