@@ -20,9 +20,32 @@ future PRs can track the perf trajectory.
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
+import sys
 import time
+
+
+def _peek_shards() -> int:
+    """Parse --shards from argv BEFORE importing jax: the sharded mode
+    needs that many host devices, and jax locks the device count at first
+    init (same constraint as launch/dryrun.py)."""
+    for i, a in enumerate(sys.argv):
+        if a == "--shards" and i + 1 < len(sys.argv):
+            return int(sys.argv[i + 1])
+        if a.startswith("--shards="):
+            return int(a.split("=", 1)[1])
+    return 1
+
+
+_SHARDS = _peek_shards()
+if _SHARDS > 1 and "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_SHARDS}"
+    ).strip()
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +65,7 @@ LATENT = int(os.environ.get("REPRO_BENCH_SAMPLER_LATENT", 16))
 REPS = int(os.environ.get("REPRO_BENCH_SAMPLER_REPS", 5))
 
 
+@functools.lru_cache(maxsize=1)
 def _build():
     """8 heterogeneous (DDPM/FM) experts sharing one instrumented apply.
 
@@ -168,6 +192,83 @@ def collect() -> dict:
     }
 
 
+def collect_sharded(shards: int) -> dict:
+    """Expert-parallel serving benchmark on a forced multi-device host.
+
+    Places the stacked 8-expert pytree on an ("expert", "data") mesh with
+    ``shards`` expert shards (run with ``--shards N`` so the module forces
+    N host devices) and reports per-shard forwards/step — each shard
+    holds K/N resident experts and owns 1/N of the routed gather — plus
+    end-to-end img/s against the unsharded engine on the same host.
+    """
+    ndev = jax.device_count()
+    if ndev < shards:
+        raise RuntimeError(
+            f"--shards {shards} needs {shards} devices, have {ndev} "
+            f"(pass --shards on the command line so XLA_FLAGS is set "
+            f"before jax initializes)"
+        )
+    if NUM_EXPERTS % shards:
+        # ServingEngine would raise too; fail here with bench context so
+        # BENCH_sampler.json never records fictitious per-shard stats.
+        raise RuntimeError(
+            f"--shards {shards} must divide NUM_EXPERTS={NUM_EXPERTS}"
+        )
+    cfg, experts, params, router_fn, text, counter = _build()
+    sampler = SamplerConfig(
+        num_steps=STEPS, cfg_scale=CFG_SCALE, strategy="topk", top_k=TOP_K,
+    )
+
+    def make_engine(**shard_kw):
+        return ServingEngine(
+            experts=experts, expert_params=params, router_fn=router_fn,
+            latent_shape=(LATENT, LATENT, 4), sampler=sampler, **shard_kw,
+        )
+
+    engines = [
+        make_engine(),
+        make_engine(n_expert_shards=shards,
+                    n_data_shards=max(1, ndev // shards)),
+    ]
+    # compile each (scan body traces once -> counter == forwards/step),
+    # then interleave the timed reps (min is robust to load spikes, and
+    # interleaving keeps the sharded-vs-unsharded ratio fair under load —
+    # same policy as _time_imgs_per_s).
+    fwds, outs = [], []
+    for engine in engines:
+        counter["n"] = 0
+        outs.append(jax.block_until_ready(
+            engine.generate(jax.random.PRNGKey(0), text, BATCH)
+        ))
+        fwds.append(float(counter["n"]))
+    times = [[] for _ in engines]
+    for r in range(REPS):
+        for i, engine in enumerate(engines):
+            t0 = time.time()
+            outs[i] = jax.block_until_ready(
+                engine.generate(jax.random.PRNGKey(r + 1), text, BATCH)
+            )
+            times[i].append(time.time() - t0)
+    (base_fwd, sh_fwd) = fwds
+    base_ips, sh_ips = (BATCH / float(np.min(ts)) for ts in times)
+    base_ok, sh_ok = (bool(np.isfinite(np.asarray(o)).all()) for o in outs)
+    engine = engines[1]
+    return {
+        "shards": shards,
+        "devices": ndev,
+        "mesh": {k: int(v) for k, v in engine.mesh.shape.items()},
+        "resident_experts_per_shard": NUM_EXPERTS / shards,
+        "expert_forwards_per_step_global": sh_fwd,
+        "expert_forwards_per_step_unsharded": base_fwd,
+        "per_shard_forwards_per_step": sh_fwd / shards,
+        "img_per_s": sh_ips,
+        "img_per_s_unsharded_same_host": base_ips,
+        "finite": sh_ok and base_ok,
+        "parity_note": "outputs asserted equal in tests/"
+                       "test_sharded_serving.py + launch/sharded_parity.py",
+    }
+
+
 _LAST: dict = {}
 
 
@@ -197,9 +298,31 @@ def write_json(path: str, res: dict | None = None) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json-out", default="BENCH_sampler.json")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="expert-parallel shards; > 1 forces that many "
+                         "host devices (must be a command-line arg so it "
+                         "is seen before jax initializes)")
     args = ap.parse_args()
+    if args.shards > 1:
+        # fail fast on a bad flag BEFORE the ~1 min unsharded benchmark
+        if jax.device_count() < args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} needs that many devices, have "
+                f"{jax.device_count()}"
+            )
+        if NUM_EXPERTS % args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} must divide NUM_EXPERTS="
+                f"{NUM_EXPERTS}"
+            )
     for row in run():
         print(",".join(str(x) for x in row))
+    if args.shards > 1:
+        sharded = collect_sharded(args.shards)
+        _LAST["sharded"] = sharded
+        yield_us = 1e6 / max(sharded["img_per_s"], 1e-9)
+        print(f"sampler_sharded_{args.shards}x,{yield_us:.1f},"
+              f"fwd/step/shard={sharded['per_shard_forwards_per_step']:.2f}")
     path = write_json(args.json_out)
     print(f"# wrote {path}")
 

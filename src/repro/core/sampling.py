@@ -66,7 +66,13 @@ class SamplerConfig:
     strategy: str = "topk"          # 'top1' | 'topk' | 'full' | 'threshold'
     top_k: int = 2
     threshold: float = 0.5          # for strategy='threshold'
-    conversion: ConversionConfig = ConversionConfig()
+    #: default_factory (not a class-level instance) so every config owns
+    #: its conversion settings; with frozen=True on both dataclasses the
+    #: pair stays hashable by construction — serving jit-cache keys depend
+    #: on that.
+    conversion: ConversionConfig = dataclasses.field(
+        default_factory=ConversionConfig
+    )
     #: identity (paper) or snr_match (beyond-paper time alignment)
     time_map: str = "identity"
     #: §7.3 finding: ε→v conversion is only stable at low noise.  If > 0,
@@ -243,6 +249,7 @@ def _sample_fused(
     mode: str,
     init_noise: Array | None,
     stacked_params=None,
+    latent_sharding=None,
 ) -> Array:
     K = len(experts)
     B = shape[0]
@@ -276,6 +283,8 @@ def _sample_fused(
 
     x = init_noise if init_noise is not None \
         else jax.random.normal(key, shape, dtype=jnp.float32)
+    if latent_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, latent_sharding)
     ts = jnp.linspace(1.0, 0.0, config.num_steps + 1)
     # Schedule-coefficient tables: computed ONCE per run, gathered per step.
     tables = unified_coeff_tables(
@@ -406,7 +415,14 @@ def _sample_fused(
             u = cfg_combine(u_c, u_u, config.cfg_scale)
         else:
             u = concat_velocity(x, tb, cond, slot_idx, slot_w, tab)
-        return x - u * dt, None
+        x = x - u * dt
+        if latent_sharding is not None:
+            # Sharded serving: pin the evolving latent's batch dim to the
+            # mesh "data" axis every step — without the constraint GSPMD
+            # may re-replicate the batch through the routed gather's
+            # all-gather and serialize the data-parallel shards.
+            x = jax.lax.with_sharding_constraint(x, latent_sharding)
+        return x, None
 
     x, _ = jax.lax.scan(step, x, jnp.arange(config.num_steps))
     return x
@@ -488,10 +504,11 @@ def sample_ensemble(
     *,
     cond: dict | None = None,
     null_cond: dict | None = None,
-    config: SamplerConfig = SamplerConfig(),
+    config: SamplerConfig | None = None,
     engine: str = "auto",
     init_noise: Array | None = None,
     stacked_params=None,
+    latent_sharding=None,
 ) -> Array:
     """Euler-ODE sampling with router-weighted heterogeneous fusion.
 
@@ -508,11 +525,18 @@ def sample_ensemble(
         serving donate the buffer); drawn from ``key`` when omitted.
       stacked_params: optional pre-stacked expert params (leaves
         ``(K, ...)``, see ``models.dit.stack_expert_params``) so
-        long-lived engines don't re-stack per compiled cache entry.
+        long-lived engines don't re-stack per compiled cache entry.  May
+        arrive device_put on an ("expert", "data") mesh — the routed
+        gather then resolves via an all-gather of the selected experts'
+        shards (expert-parallel serving, ``launch.serve``).
+      latent_sharding: optional ``NamedSharding`` for the evolving latent
+        state; the fused engine re-constrains x to it every Euler step so
+        the batch stays on the mesh "data" axis under sharded serving.
 
     Returns samples at t=0 (clean latents).
     """
     cond = cond or {}
+    config = config if config is not None else SamplerConfig()
     mode = _resolve_engine(engine, experts, params, config)
     if mode == "reference":
         return _sample_reference(
@@ -521,7 +545,7 @@ def sample_ensemble(
         )
     return _sample_fused(
         key, experts, params, router_fn, shape, cond, null_cond, config,
-        mode, init_noise, stacked_params,
+        mode, init_noise, stacked_params, latent_sharding,
     )
 
 
@@ -533,9 +557,10 @@ def sample_single_expert(
     *,
     cond: dict | None = None,
     null_cond: dict | None = None,
-    config: SamplerConfig = SamplerConfig(),
+    config: SamplerConfig | None = None,
 ) -> Array:
     """Single-expert ODE sampling (Table 3 'FM' and 'DDPM→FM' rows)."""
+    config = config if config is not None else SamplerConfig()
     return sample_ensemble(
         key, [expert], [params], None, shape,
         cond=cond, null_cond=null_cond,

@@ -19,6 +19,35 @@ Serving properties:
   per (batch size, latent shape, sampler config, conditioning signature)
   with the noise buffer donated, so repeated requests with the same shape
   never recompile; ``engine.stats['traces']`` exposes the compile count.
+* **sharded** — ``n_expert_shards`` / ``n_data_shards`` place the engine
+  on an expert-parallel mesh (topology below) so a host never needs to
+  hold the full ensemble's parameters per device.
+* **cross-request batching** — ``submit()`` enqueues requests and
+  ``flush()`` coalesces compatible ones (same latent shape and sampler
+  config — engine invariants — plus the same conditioning signature) into
+  one sharded batch, slicing per-request outputs back out, so concurrent
+  small requests share a single compiled sampler dispatch.
+
+Topology
+--------
+The sharded engine lives on an ``("expert", "data")`` mesh
+(``launch.mesh.make_expert_mesh``):
+
+* the stacked expert pytree (leaves ``(K, ...)``,
+  ``models.dit.stack_expert_params``) shards its leading K axis over
+  "expert" — each device group holds ``K / n_expert_shards`` resident
+  experts (DDM/Paris-style placement: experts are *placed across*
+  devices, not replicated per host);
+* request batches (initial noise, text embeddings, the evolving latent
+  state) shard their leading batch dim over "data";
+* per-step routed dispatch gathers the k selected experts' params from
+  their owning shards — GSPMD lowers the stacked-axis gather to an
+  all-gather of just those slices over the "expert" axis — and the fused
+  velocity/Euler update runs data-parallel on the batch shards
+  (``core.sampling`` re-constrains the latent to the "data" axis every
+  step);
+* the single-host path is the degenerate 1×1 mesh (or ``mesh=None``) and
+  is bit-identical to unsharded serving.
 
 Also exposes ``ServingEngine`` programmatically (used by examples/ and the
 benchmark harness).
@@ -30,23 +59,48 @@ import argparse
 import dataclasses
 import glob
 import os
+import re
 import time
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import (
-    ConversionConfig,
     ExpertSpec,
     SamplerConfig,
     params_are_stackable,
     sample_ensemble,
 )
+from repro.launch.mesh import make_expert_mesh
+from repro.launch.sharding import expert_param_shardings, serve_batch_spec
 from repro.models import dit as D
 from repro.models.config import DiTConfig, dit_b2, router_b2
 from repro.training import load_checkpoint
+
+#: ``expert7.npz`` / ``expert_07.npz`` → checkpoint index 7 (ordering
+#: fallback when the metadata carries no ``cluster_id``).
+_EXPERT_IDX_RE = re.compile(r"expert[_-]?(\d+)")
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    """Handle returned by ``ServingEngine.submit``; resolved by ``flush``."""
+
+    key: jax.Array
+    text_emb: jnp.ndarray | None
+    batch_size: int
+    _result: jnp.ndarray | None = None
+    done: bool = False
+
+    def result(self) -> jnp.ndarray:
+        if not self.done:
+            raise RuntimeError(
+                "request not yet executed — call ServingEngine.flush()"
+            )
+        return self._result
 
 
 @dataclasses.dataclass
@@ -55,13 +109,21 @@ class ServingEngine:
     expert_params: list
     router_fn: object | None
     latent_shape: tuple[int, int, int]
-    sampler: SamplerConfig = SamplerConfig()
+    sampler: SamplerConfig = dataclasses.field(default_factory=SamplerConfig)
     #: 'auto' | 'routed' | 'dense' | 'reference' (see core.sample_ensemble)
     engine: str = "auto"
+    #: expert-parallel mesh placement (see module docstring "Topology").
+    #: Defaults (1, None) keep the classic unsharded single-device path;
+    #: setting either stands up an ("expert", "data") mesh — a forced 1×1
+    #: mesh is the degenerate case and stays bit-identical.
+    n_expert_shards: int = 1
+    n_data_shards: int | None = None
 
     def __post_init__(self) -> None:
         self._compiled: dict = {}
-        self.stats = {"traces": 0, "requests": 0}
+        self._queue: list[PendingRequest] = []
+        self.stats = {"traces": 0, "requests": 0,
+                      "merged_batches": 0, "batched_requests": 0}
         self.homogeneous = len(self.experts) <= 1 or (
             all(e.apply_fn is self.experts[0].apply_fn for e in self.experts)
             and params_are_stackable(self.expert_params)
@@ -72,28 +134,90 @@ class ServingEngine:
             D.stack_expert_params(self.expert_params)
             if self.homogeneous and self.expert_params else None
         )
+        self.mesh = None
+        if self.n_expert_shards != 1 or self.n_data_shards is not None:
+            if self.n_expert_shards > 1 and \
+                    len(self.experts) % self.n_expert_shards != 0:
+                # sanitize_spec would silently fall back to replicating
+                # the expert axis — zero memory savings while reporting a
+                # sharded mesh; make the misconfiguration loud instead.
+                raise ValueError(
+                    f"n_expert_shards={self.n_expert_shards} does not "
+                    f"divide the {len(self.experts)}-expert ensemble; "
+                    f"expert placement would silently replicate"
+                )
+            self.mesh = make_expert_mesh(self.n_expert_shards,
+                                         self.n_data_shards)
+            if self.stacked_params is not None:
+                self.stacked_params = jax.device_put(
+                    self.stacked_params,
+                    expert_param_shardings(
+                        self.stacked_params, self.mesh,
+                        logical_axes=D.stacked_param_logical_axes(
+                            self.stacked_params),
+                    ),
+                )
 
     @classmethod
     def from_checkpoint_dir(
         cls, ckpt_dir: str, *, dit_cfg: DiTConfig,
         router_cfg: DiTConfig | None = None,
-        sampler: SamplerConfig = SamplerConfig(),
+        sampler: SamplerConfig | None = None,
         engine: str = "auto",
+        n_expert_shards: int = 1,
+        n_data_shards: int | None = None,
     ) -> "ServingEngine":
-        experts, params = [], []
+        """Assemble an engine from a directory of expert checkpoints.
+
+        Experts are ordered **numerically by cluster id** (from each
+        checkpoint's metadata, falling back to the ``expert<N>.npz``
+        filename index), never lexicographically — with ≥10 experts
+        ``sorted(glob(...))`` would load ``expert10`` before ``expert2``
+        and silently scramble the router's positional cluster→expert
+        mapping.  Duplicate or non-contiguous cluster ids raise.
+        """
         apply_fn = D.make_expert_apply(dit_cfg)
-        for path in sorted(glob.glob(os.path.join(ckpt_dir, "expert*.npz"))):
+        paths = glob.glob(os.path.join(ckpt_dir, "expert*.npz"))
+        if not paths:
+            raise FileNotFoundError(f"no expert*.npz under {ckpt_dir}")
+        loaded: list[tuple[int, str, object, dict]] = []
+        for path in paths:
             p, meta = load_checkpoint(path)
+            cid = int(meta.get("cluster_id", -1))
+            if cid < 0:
+                m = _EXPERT_IDX_RE.search(os.path.basename(path))
+                if m is None:
+                    raise ValueError(
+                        f"{path}: no cluster_id metadata and no numeric "
+                        f"index in the filename — cannot place this expert"
+                    )
+                cid = int(m.group(1))
+            loaded.append((cid, path, p, meta))
+        seen: dict[int, str] = {}
+        for cid, path, _, _ in loaded:
+            if cid in seen:
+                raise ValueError(
+                    f"duplicate cluster_id {cid}: {seen[cid]} and {path}"
+                )
+            seen[cid] = path
+        want = range(len(loaded))
+        if set(seen) != set(want):
+            raise ValueError(
+                f"expert checkpoints must cover cluster ids 0..{len(loaded) - 1} "
+                f"exactly (the router posterior's columns are positional); "
+                f"got {sorted(seen)} — missing {sorted(set(want) - set(seen))}"
+            )
+        loaded.sort(key=lambda item: item[0])
+        experts, params = [], []
+        for cid, path, p, meta in loaded:
             experts.append(ExpertSpec(
                 name=meta.get("name", os.path.basename(path)),
                 objective=meta["objective"],
                 schedule=meta["schedule"],
                 apply_fn=apply_fn,
-                cluster_id=int(meta.get("cluster_id", -1)),
+                cluster_id=cid,
             ))
             params.append(p)
-        if not experts:
-            raise FileNotFoundError(f"no expert*.npz under {ckpt_dir}")
         router_fn = None
         router_path = os.path.join(ckpt_dir, "router.npz")
         if router_cfg is not None and os.path.exists(router_path):
@@ -103,7 +227,9 @@ class ServingEngine:
             experts=experts, expert_params=params, router_fn=router_fn,
             latent_shape=(dit_cfg.latent_size, dit_cfg.latent_size,
                           dit_cfg.latent_channels),
-            sampler=sampler, engine=engine,
+            sampler=sampler if sampler is not None else SamplerConfig(),
+            engine=engine,
+            n_expert_shards=n_expert_shards, n_data_shards=n_data_shards,
         )
 
     # -- retrace-free compiled-sampler cache --------------------------------
@@ -113,13 +239,27 @@ class ServingEngine:
 
         The initial-noise buffer is donated — XLA reuses it for the
         evolving latent state instead of allocating a fresh buffer per
-        request.
+        request.  On a sharded engine the noise/text inputs carry
+        explicit "data"-axis shardings and the latent state is pinned to
+        them throughout the scan.
         """
         cache_key = (batch_size, self.latent_shape, self.sampler,
                      self.engine, has_text)
         fn = self._compiled.get(cache_key)
         if fn is None:
             shape = (batch_size,) + self.latent_shape
+            latent_sharding = None
+            jit_kwargs: dict = {}
+            if self.mesh is not None:
+                lat_spec = serve_batch_spec(self.mesh, shape)
+                latent_sharding = NamedSharding(self.mesh, lat_spec)
+                batch_sharded = len(lat_spec) > 0 and lat_spec[0] is not None
+                text_spec = P("data") if (has_text and batch_sharded) else P()
+                jit_kwargs["in_shardings"] = (
+                    NamedSharding(self.mesh, P()),        # PRNG key
+                    latent_sharding,                      # initial noise
+                    NamedSharding(self.mesh, text_spec),  # text embeddings
+                )
 
             def _sample(key, noise, text_emb):
                 self.stats["traces"] += 1      # runs at trace time only
@@ -130,18 +270,18 @@ class ServingEngine:
                     shape, cond=cond, null_cond=null, config=self.sampler,
                     engine=self.engine, init_noise=noise,
                     stacked_params=self.stacked_params,
+                    latent_sharding=latent_sharding,
                 )
 
             # donation is a no-op (with a warning) on CPU; only request it
             # where XLA can actually alias the buffer.
             donate = () if jax.default_backend() == "cpu" else (1,)
-            fn = jax.jit(_sample, donate_argnums=donate)
+            fn = jax.jit(_sample, donate_argnums=donate, **jit_kwargs)
             self._compiled[cache_key] = fn
         return fn
 
     def generate(
         self, key, batch_text_emb: jnp.ndarray | None, batch_size: int,
-        *, null_text_emb: jnp.ndarray | None = None,
     ) -> jnp.ndarray:
         self.stats["requests"] += 1
         has_text = batch_text_emb is not None
@@ -153,9 +293,113 @@ class ServingEngine:
             batch_text_emb = jnp.zeros((0,), jnp.float32)   # static filler
         return fn(key, noise, batch_text_emb)
 
+    # -- cross-request batching queue ---------------------------------------
+
+    def submit(
+        self, key, text_emb: jnp.ndarray | None = None,
+        batch_size: int | None = None,
+    ) -> PendingRequest:
+        """Enqueue a request; returns a handle resolved by ``flush()``.
+
+        Noise is derived from the request's own key at flush time, so a
+        coalesced request produces the same samples it would have produced
+        through ``generate`` with that key.
+        """
+        if batch_size is None:
+            batch_size = text_emb.shape[0] if text_emb is not None else 1
+        if text_emb is not None and text_emb.shape[0] != batch_size:
+            raise ValueError(
+                f"text_emb batch {text_emb.shape[0]} != batch_size "
+                f"{batch_size}"
+            )
+        req = PendingRequest(key=key, text_emb=text_emb,
+                             batch_size=batch_size)
+        self._queue.append(req)
+        self.stats["requests"] += 1
+        return req
+
+    def flush(self) -> int:
+        """Run all queued requests, coalescing compatible ones.
+
+        Latent shape and sampler config are engine invariants, so within
+        one engine compatibility reduces to the conditioning signature
+        (text present + trailing text shape).  Each group becomes ONE
+        batched sampler dispatch; the merged batch is padded up to a
+        power-of-two bucket (bounding compile count under varying request
+        mixes) that is also a multiple of the mesh "data" axis on a
+        sharded engine (so the batch dim always shards cleanly), and
+        per-request slices (padding dropped) are written back to the
+        handles.  Returns the number of merged dispatches.
+        """
+        if not self._queue:
+            return 0
+        groups: dict[tuple, list[PendingRequest]] = {}
+        for req in self._queue:
+            sig = (req.text_emb is not None,
+                   tuple(req.text_emb.shape[1:])
+                   if req.text_emb is not None else ())
+            groups.setdefault(sig, []).append(req)
+        self._queue = []
+        pending = list(groups.items())
+        for gi, ((has_text, text_tail), reqs) in enumerate(pending):
+            try:
+                self._dispatch_group(has_text, text_tail, reqs)
+            except Exception:
+                # re-queue this and every unprocessed group so a failed
+                # dispatch (compile error, OOM on a new bucket size)
+                # doesn't strand the other handles undone forever.
+                for _, rs in pending[gi:]:
+                    self._queue.extend(rs)
+                raise
+        return len(pending)
+
+    def _dispatch_group(
+        self, has_text: bool, text_tail: tuple, reqs: list[PendingRequest],
+    ) -> None:
+        total = sum(r.batch_size for r in reqs)
+        # Bucket the merged batch to the next power of two (and a
+        # "data"-axis multiple on a sharded engine): varying request
+        # mixes then land on O(log max_batch) compiled sizes instead
+        # of one compile per distinct total, keeping the engine
+        # retrace-free under real traffic.
+        bucket = 1 << (total - 1).bit_length()
+        if self.mesh is not None:
+            nd = self.mesh.shape["data"]
+            bucket += (-bucket) % nd
+        pad = bucket - total
+        noise = [
+            jax.random.normal(
+                r.key, (r.batch_size,) + self.latent_shape, jnp.float32
+            )
+            for r in reqs
+        ]
+        if pad:
+            noise.append(jnp.zeros((pad,) + self.latent_shape, jnp.float32))
+        noise = jnp.concatenate(noise, axis=0)
+        if has_text:
+            text = [jnp.asarray(r.text_emb) for r in reqs]
+            if pad:
+                text.append(jnp.zeros((pad,) + text_tail, text[0].dtype))
+            text = jnp.concatenate(text, axis=0)
+        else:
+            text = jnp.zeros((0,), jnp.float32)             # static filler
+        fn = self._get_compiled(total + pad, has_text)
+        out = fn(reqs[0].key, noise, text)
+        self.stats["merged_batches"] += 1
+        self.stats["batched_requests"] += len(reqs)
+        off = 0
+        for r in reqs:
+            r._result = out[off:off + r.batch_size]
+            r.done = True
+            off += r.batch_size
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog="shards > 1 need that many visible devices — on a CPU host "
+               "set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+               "before launching (as launch/dryrun.py does)."
+    )
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--requests", type=int, default=2)
@@ -168,6 +412,11 @@ def main() -> None:
                     choices=("auto", "routed", "dense", "reference"))
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--latent-size", type=int, default=8)
+    ap.add_argument("--expert-shards", type=int, default=1)
+    ap.add_argument("--data-shards", type=int, default=None)
+    ap.add_argument("--coalesce", action="store_true",
+                    help="drive requests through submit()/flush() instead "
+                         "of per-request generate()")
     args = ap.parse_args()
 
     dit_cfg = dit_b2()
@@ -182,10 +431,30 @@ def main() -> None:
             strategy=args.strategy, top_k=args.top_k,
         ),
         engine=args.engine,
+        n_expert_shards=args.expert_shards, n_data_shards=args.data_shards,
     )
     print(f"loaded {len(engine.experts)} experts "
           f"({[e.objective for e in engine.experts]}) "
-          f"homogeneous={engine.homogeneous}")
+          f"homogeneous={engine.homogeneous} "
+          f"mesh={dict(engine.mesh.shape) if engine.mesh else None}")
+    if args.coalesce:
+        t0 = time.time()
+        handles = []
+        for r in range(args.requests):
+            key = jax.random.PRNGKey(r)
+            text = jax.random.normal(
+                key, (args.batch, dit_cfg.text_len, dit_cfg.text_dim)
+            )
+            handles.append(engine.submit(key, text))
+        engine.flush()
+        outs = [jax.block_until_ready(h.result()) for h in handles]
+        dt = time.time() - t0
+        n = sum(o.shape[0] for o in outs)
+        print(f"coalesced {len(handles)} requests -> "
+              f"{engine.stats['merged_batches']} dispatch(es): "
+              f"{n} imgs in {dt:.2f}s ({n / dt:.1f} img/s) "
+              f"traces={engine.stats['traces']}")
+        return
     for r in range(args.requests):
         key = jax.random.PRNGKey(r)
         t0 = time.time()

@@ -1,0 +1,177 @@
+"""Multi-device parity check for the sharded serving engine.
+
+Runs in a subprocess with a forced multi-device CPU host (the in-process
+test suite must keep the single real CPU device — see tests/conftest.py)
+and asserts, for the same seed:
+
+  1. degenerate 1×1 mesh  == unsharded engine   (bit-identical)
+  2. expert-sharded mesh  (N, 1)  == unsharded  (numerical, atol 1e-5)
+  3. data-sharded mesh    (1, N)  == unsharded  (numerical, atol 1e-5)
+  4. cross-request batching on the sharded engine: coalesced
+     submit()/flush() slices == per-request generate() outputs
+
+``--dit`` swaps the toy closed-form experts for real (reduced) DiT
+experts — slower, exercised by the slow-marked test variant.
+
+Usage (standalone):
+  PYTHONPATH=src REPRO_PARITY_DEVICES=2 python -m repro.launch.sharded_parity
+"""
+
+import os
+import sys
+
+# MUST precede any jax import: jax locks the device count at first init.
+# (Same trick as launch/dryrun.py.)  Guarded on jax being absent so the
+# test suite can import the toy-ensemble helpers below without mutating
+# XLA_FLAGS in a process whose device count is already locked.
+if "jax" not in sys.modules:
+    _N_DEV = int(os.environ.get("REPRO_PARITY_DEVICES", "2"))
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + f" --xla_force_host_platform_device_count={_N_DEV}"
+        ).strip()
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ExpertSpec, SamplerConfig
+from repro.launch.serve import ServingEngine
+from repro.models import dit as D
+from repro.models.config import dit_b2, router_b2
+
+KEY = jax.random.PRNGKey(0)
+
+
+def toy_apply(params, x, t, *, text_emb=None, drop_mask=None, **_):
+    null = jnp.float32(0.07)
+    if text_emb is None:
+        cond_term = null
+    else:
+        ct = text_emb.mean(axis=(1, 2))[:, None, None, None]
+        if drop_mask is not None:
+            ct = jnp.where(drop_mask[:, None, None, None], null, ct)
+        cond_term = ct
+    return x * params["a"] + params["b"] + cond_term
+
+
+def toy_ensemble(k=4):
+    """Closed-form stackable ensemble shared with tests/test_sharded_serving."""
+    params = [
+        {"a": jnp.float32(0.7 + 0.06 * i), "b": jnp.float32(0.01 * i)}
+        for i in range(k)
+    ]
+    experts = [
+        ExpertSpec(
+            f"e{i}", "ddpm" if i % 2 == 0 else "fm",
+            "cosine" if i % 2 == 0 else "linear", toy_apply, i,
+        )
+        for i in range(k)
+    ]
+
+    def router_fn(x, t):
+        logits = (
+            jnp.tile(jnp.arange(float(k))[None], (x.shape[0], 1))
+            + x.mean(axis=(1, 2, 3))[:, None]
+        )
+        return jax.nn.softmax(logits, axis=-1)
+
+    return experts, params, router_fn, (4, 4, 2)
+
+
+def _dit_ensemble(k=4):
+    cfg = dit_b2().reduced(latent_size=8)
+    apply_fn = D.make_expert_apply(cfg)
+    experts, params = [], []
+    for i in range(k):
+        obj = "ddpm" if i % 2 == 0 else "fm"
+        experts.append(ExpertSpec(
+            f"e{i}", obj, "cosine" if obj == "ddpm" else "linear",
+            apply_fn, i,
+        ))
+        params.append(D.init(cfg, jax.random.PRNGKey(10 + i)))
+    rcfg = router_b2(num_clusters=k).reduced(latent_size=8)
+    router_fn = D.make_router_fn(rcfg, D.init(rcfg, jax.random.PRNGKey(99)))
+    latent = (cfg.latent_size, cfg.latent_size, cfg.latent_channels)
+    return experts, params, router_fn, latent, cfg
+
+
+def _engine(experts, params, router_fn, latent, sampler, **shards):
+    return ServingEngine(
+        experts=experts, expert_params=params, router_fn=router_fn,
+        latent_shape=latent, sampler=sampler, **shards,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dit", action="store_true",
+                    help="use real reduced-DiT experts instead of the toy "
+                         "closed-form ensemble")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=4)
+    args = ap.parse_args()
+
+    ndev = jax.device_count()
+    assert ndev >= 2, f"need a forced multi-device host, got {ndev}"
+
+    if args.dit:
+        experts, params, router_fn, latent, cfg = _dit_ensemble()
+        text = jax.random.normal(
+            KEY, (args.batch, cfg.text_len, cfg.text_dim)
+        )
+    else:
+        experts, params, router_fn, latent = toy_ensemble()
+        text = jax.random.normal(KEY, (args.batch, 5, 6))
+    sampler = SamplerConfig(num_steps=args.steps, cfg_scale=3.0,
+                            strategy="topk", top_k=2)
+
+    base = _engine(experts, params, router_fn, latent, sampler)
+    ref = np.asarray(base.generate(KEY, text, args.batch))
+    assert np.isfinite(ref).all()
+
+    # 1. degenerate 1×1 mesh: the single-host path is the 1-shard case.
+    degen = _engine(experts, params, router_fn, latent, sampler,
+                    n_expert_shards=1, n_data_shards=1)
+    out = np.asarray(degen.generate(KEY, text, args.batch))
+    assert np.array_equal(out, ref), "1x1 mesh must be bit-identical"
+
+    # 2. expert-parallel placement: K/ndev resident experts per device.
+    esh = _engine(experts, params, router_fn, latent, sampler,
+                  n_expert_shards=ndev, n_data_shards=1)
+    out = np.asarray(esh.generate(KEY, text, args.batch))
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    # 3. data-parallel batch sharding.
+    dsh = _engine(experts, params, router_fn, latent, sampler,
+                  n_expert_shards=1, n_data_shards=ndev)
+    out = np.asarray(dsh.generate(KEY, text, args.batch))
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    # 4. cross-request batching on the expert-sharded engine: coalesced
+    #    slices must match what each request would get from generate().
+    k1, k2 = jax.random.PRNGKey(7), jax.random.PRNGKey(8)
+    h1 = esh.submit(k1, text[:1], 1)
+    h2 = esh.submit(k2, text[1:], args.batch - 1)
+    dispatches = esh.flush()
+    assert dispatches == 1, f"expected 1 merged dispatch, got {dispatches}"
+    r1 = np.asarray(base.generate(k1, text[:1], 1))
+    r2 = np.asarray(base.generate(k2, text[1:], args.batch - 1))
+    np.testing.assert_allclose(np.asarray(h1.result()), r1, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h2.result()), r2, atol=1e-5)
+
+    print(json.dumps({
+        "devices": ndev, "dit": bool(args.dit),
+        "batch": args.batch, "steps": args.steps,
+        "parity": "ok",
+        "coalesced_requests": esh.stats["batched_requests"],
+        "merged_batches": esh.stats["merged_batches"],
+    }))
+
+
+if __name__ == "__main__":
+    main()

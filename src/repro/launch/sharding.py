@@ -241,6 +241,71 @@ def cache_specs(cfg: LMConfig, mesh: Mesh, cache: dict, batch: int) -> dict:
     return {k: spec_for(k, v) for k, v in cache.items()}
 
 
+# ---------------------------------------------------------------------------
+# Expert-parallel serving specs (("expert", "data") mesh, launch.serve)
+# ---------------------------------------------------------------------------
+
+
+def expert_param_specs(
+    stacked: Any, mesh: Mesh, *, logical_axes: Any = None
+) -> Any:
+    """PartitionSpec pytree for a *stacked* expert pytree (leaves ``(K, ...)``).
+
+    The leading expert axis shards over the mesh's "expert" axis so each
+    device group holds only ``K / n_expert_shards`` resident experts; all
+    trailing (weight) dims replicate — the routed engine's per-step gather
+    of the k selected experts' params then lowers to an all-gather over
+    the expert axis of just those slices.
+
+    ``logical_axes`` optionally supplies per-leaf axis-name annotations
+    (see ``models.dit.stacked_param_logical_axes``); by default every leaf
+    is assumed to carry the stacked layout's leading "expert" axis.
+    Non-divisible K falls back to replication (``sanitize_spec``), which
+    keeps the degenerate 1-shard mesh bit-identical to unsharded serving.
+    """
+    leaves, treedef = jax.tree.flatten(stacked)
+    if logical_axes is None:
+        ax_leaves = [("expert",) + (None,) * (x.ndim - 1) for x in leaves]
+    else:
+        # annotation leaves are axis-name tuples — themselves pytrees, so
+        # flatten with an explicit is_leaf instead of zipping tree_maps.
+        ax_leaves = jax.tree.leaves(
+            logical_axes, is_leaf=lambda n: isinstance(n, tuple)
+        )
+        if len(ax_leaves) != len(leaves):
+            raise ValueError("logical_axes does not match the stacked pytree")
+
+    def leaf(x, axes):
+        spec = P(*[a if a in mesh.axis_names else None for a in axes])
+        return sanitize_spec(spec, x.shape, mesh)
+
+    return jax.tree.unflatten(
+        treedef, [leaf(x, a) for x, a in zip(leaves, ax_leaves)]
+    )
+
+
+def expert_param_shardings(
+    stacked: Any, mesh: Mesh, *, logical_axes: Any = None
+) -> Any:
+    return to_shardings(
+        mesh, expert_param_specs(stacked, mesh, logical_axes=logical_axes)
+    )
+
+
+def serve_batch_spec(mesh: Mesh, shape: tuple[int, ...]) -> P:
+    """Request-batch spec on the expert mesh: leading dim over "data".
+
+    Falls back to replication when the batch doesn't divide the data axis
+    (jit in_shardings need exact divisibility).  Rank-0/size-0 leaves
+    (PRNG keys, the no-text static filler) replicate.
+    """
+    if not shape or 0 in shape:
+        return P(*([None] * len(shape)))
+    return sanitize_spec(
+        P("data", *([None] * (len(shape) - 1))), shape, mesh
+    )
+
+
 def dit_batch_specs(mesh: Mesh, batch: dict) -> dict:
     dp = data_axes(mesh)
     dpa = dp if len(dp) > 1 else dp[0]

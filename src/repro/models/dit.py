@@ -328,6 +328,27 @@ def stack_expert_params(params_list):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
 
 
+#: Mesh-axis name carrying the stacked pytree's leading expert dimension
+#: (see ``launch.mesh.make_expert_mesh`` / ``launch.sharding.
+#: expert_param_specs``).
+EXPERT_AXIS = "expert"
+
+
+def stacked_param_logical_axes(stacked):
+    """Logical sharding annotation for a stacked expert pytree.
+
+    Every leaf of ``stack_expert_params`` output is ``(K, ...)`` with the
+    leading dim indexing experts: annotate it with ``EXPERT_AXIS`` and
+    replicate the trailing weight dims.  ``launch.sharding.
+    expert_param_specs`` turns these names into mesh ``PartitionSpec``s;
+    keeping the annotation next to the stacking code means a layout change
+    here cannot silently diverge from the serving placement rules.
+    """
+    return jax.tree.map(
+        lambda x: (EXPERT_AXIS,) + (None,) * (x.ndim - 1), stacked
+    )
+
+
 def gather_expert_params(stacked, expert_idx: Array):
     """Gather per-sample expert params from a stacked pytree.
 

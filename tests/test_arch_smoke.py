@@ -32,6 +32,7 @@ def _make_batch(cfg, key):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_forward_and_train_step(arch):
     cfg = get_config(arch).reduced()

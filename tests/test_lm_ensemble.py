@@ -16,6 +16,8 @@ from repro.models import zoo
 from repro.training import AdamWConfig, adamw_init
 from repro.training.trainer import make_lm_train_step
 
+pytestmark = pytest.mark.slow  # module fixture trains experts/router
+
 KEY = jax.random.PRNGKey(0)
 B, S = 4, 32
 

@@ -25,6 +25,8 @@ from repro.training import (
     save_checkpoint,
 )
 
+pytestmark = pytest.mark.slow  # module fixture trains experts/router
+
 KEY = jax.random.PRNGKey(0)
 NUM_CLUSTERS = 2
 STEPS = 15

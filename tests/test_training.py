@@ -73,6 +73,7 @@ def test_ema_converges_to_params():
     np.testing.assert_allclose(ema["w"], 1.0, atol=1e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("objective,schedule",
                          [("ddpm", "cosine"), ("fm", "linear")])
 def test_expert_loss_decreases(objective, schedule):
@@ -95,6 +96,7 @@ def test_expert_loss_decreases(objective, schedule):
     assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
 
 
+@pytest.mark.slow
 def test_router_trains_above_chance():
     spec = SyntheticSpec(num_categories=4, latent_size=8, separation=3.5)
     cm, _ = fit_clusters(spec, corpus_size=512, num_clusters=4, num_fine=64)
