@@ -12,14 +12,27 @@ Measures, for the paper's 8-expert top-2 + CFG serving configuration:
 * **retrace count** — ``ServingEngine.stats['traces']`` across repeated
   same-shape requests (must stay at 1).
 
+* **dispatch backends** (``--dispatch grouped``) — the ``core.dispatch``
+  executor axis: sort-based grouped execution is measured against the
+  per-sample gathered baseline on the same ensemble.  Grouped forwards
+  are counted at *runtime* (``jax.debug.callback``): the grouped trace
+  compiles one bucket branch per power-of-two segment size, so a
+  trace-time count would tally every branch while only one executes per
+  expert per step.  Budget: executed segment passes ≤ resident experts,
+  vs ``B·k·2`` gathered model-rows with batched CFG.
+
 Emits ``name,us_per_call,derived`` CSV rows for the harness and a JSON
 artifact (``BENCH_sampler.json``) via ``--json-out`` / ``write_json`` so
-future PRs can track the perf trajectory.
+future PRs can track the perf trajectory.  ``write_json`` merges into an
+existing artifact by top-level section, so a ``--shards``-only or
+``--dispatch``-only rerun refreshes its own section without dropping the
+others.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import functools
 import json
 import os
@@ -98,9 +111,10 @@ def _build():
     return cfg, experts, params, router_fn, text, counter
 
 
-def _sampler_fn(experts, params, router_fn, text, engine):
+def _sampler_fn(experts, params, router_fn, text, engine, dispatch="auto"):
     sampler = SamplerConfig(
         num_steps=STEPS, cfg_scale=CFG_SCALE, strategy="topk", top_k=TOP_K,
+        dispatch=dispatch,
     )
 
     def fn(key):
@@ -269,6 +283,89 @@ def collect_sharded(shards: int) -> dict:
     }
 
 
+def collect_dispatch(dispatch: str) -> dict:
+    """Executor-backend section (``core.dispatch``), vs the gathered path.
+
+    Measures, for the same 8-expert top-2 + CFG ensemble:
+
+    * **executed forwards/step** — counted at runtime via
+      ``jax.debug.callback`` (fires only in the bucket branch that
+      actually runs), since the grouped trace contains every power-of-two
+      bucket branch and a trace-time count would tally all of them;
+    * **model-rows/step** — total latent rows pushed through expert
+      forwards (grouped: padded segment rows; gathered reference:
+      ``B·k·2`` with batched CFG);
+    * **img/s** vs the gathered backend, interleaved timing;
+    * **parity** — max |grouped − gathered| on the same key.
+    """
+    cfg, experts, params, router_fn, text, counter = _build()
+    shared_apply = experts[0].apply_fn
+
+    runtime = {"calls": 0, "rows": 0}
+
+    def _bump(rows):
+        runtime["calls"] += 1
+        runtime["rows"] += int(rows)
+
+    def rt_apply(p, x, t, **cond):
+        jax.debug.callback(_bump, x.shape[0])
+        return shared_apply(p, x, t, **cond)
+
+    rt_experts = [dataclasses.replace(e, apply_fn=rt_apply)
+                  for e in experts]
+
+    base_fn = jax.jit(_sampler_fn(experts, params, router_fn, text,
+                                  "routed", dispatch="gathered"))
+    disp_fn = jax.jit(_sampler_fn(experts, params, router_fn, text,
+                                  "routed", dispatch=dispatch))
+    # compile (once per backend) + parity on the same key
+    out_b = jax.block_until_ready(base_fn(jax.random.PRNGKey(0)))
+    out_d = jax.block_until_ready(disp_fn(jax.random.PRNGKey(0)))
+    max_diff = float(jnp.abs(out_d - out_b).max())
+    times: list[list[float]] = [[], []]
+    for r in range(REPS):
+        for i, f in enumerate((base_fn, disp_fn)):
+            t0 = time.time()
+            out = jax.block_until_ready(f(jax.random.PRNGKey(r + 1)))
+            times[i].append(time.time() - t0)
+            if i:
+                out_d = out
+            else:
+                out_b = out
+    base_ips, disp_ips = (BATCH / float(np.min(ts)) for ts in times)
+    base_ok = bool(np.isfinite(np.asarray(out_b)).all())
+    disp_ok = bool(np.isfinite(np.asarray(out_d)).all())
+
+    # runtime forward count: one warm-up compile, then a counted run.
+    # block_until_ready only waits for array outputs; on asynchronous
+    # backends debug callbacks can still be in flight, so fence with
+    # effects_barrier before touching the host-side counters.
+    rt_fn = jax.jit(_sampler_fn(rt_experts, params, router_fn, text,
+                                "routed", dispatch=dispatch))
+    jax.block_until_ready(rt_fn(jax.random.PRNGKey(0)))
+    jax.effects_barrier()
+    runtime["calls"] = runtime["rows"] = 0
+    jax.block_until_ready(rt_fn(jax.random.PRNGKey(1)))
+    jax.effects_barrier()
+    fwd_per_step = runtime["calls"] / STEPS
+    rows_per_step = runtime["rows"] / STEPS
+
+    gathered_rows = BATCH * TOP_K * 2           # B·k lanes × batched CFG
+    return {
+        "dispatch": dispatch,
+        "expert_forwards_per_step_executed": fwd_per_step,
+        "model_rows_per_step": rows_per_step,
+        "resident_experts": NUM_EXPERTS,
+        "meets_resident_forward_budget": fwd_per_step <= NUM_EXPERTS,
+        "gathered_rows_per_step": gathered_rows,
+        "img_per_s": disp_ips,
+        "img_per_s_gathered": base_ips,
+        "speedup_vs_gathered": disp_ips / max(base_ips, 1e-9),
+        "finite": disp_ok and base_ok,
+        "parity_max_abs_diff_vs_gathered": max_diff,
+    }
+
+
 _LAST: dict = {}
 
 
@@ -288,9 +385,23 @@ def run():
 
 
 def write_json(path: str, res: dict | None = None) -> str:
+    """Write (merging by top-level section into any existing artifact).
+
+    The baseline, ``sharded`` and dispatch sections are produced by
+    different invocations (``--shards`` needs a forced multi-device
+    host); merging keeps one ``BENCH_sampler.json`` tracking all axes.
+    """
     res = res or _LAST or collect()
+    merged: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(res)
     with open(path, "w") as f:
-        json.dump(res, f, indent=2, sort_keys=True)
+        json.dump(merged, f, indent=2, sort_keys=True)
         f.write("\n")
     return path
 
@@ -302,6 +413,11 @@ def main() -> None:
                     help="expert-parallel shards; > 1 forces that many "
                          "host devices (must be a command-line arg so it "
                          "is seen before jax initializes)")
+    ap.add_argument("--dispatch", default=None,
+                    choices=("gathered", "grouped"),
+                    help="benchmark a core.dispatch executor backend "
+                         "against the gathered baseline and record it as "
+                         "a JSON section")
     args = ap.parse_args()
     if args.shards > 1:
         # fail fast on a bad flag BEFORE the ~1 min unsharded benchmark
@@ -323,6 +439,12 @@ def main() -> None:
         yield_us = 1e6 / max(sharded["img_per_s"], 1e-9)
         print(f"sampler_sharded_{args.shards}x,{yield_us:.1f},"
               f"fwd/step/shard={sharded['per_shard_forwards_per_step']:.2f}")
+    if args.dispatch:
+        sec = collect_dispatch(args.dispatch)
+        _LAST[args.dispatch] = sec
+        us = 1e6 / max(sec["img_per_s"], 1e-9)
+        print(f"sampler_dispatch_{args.dispatch},{us:.1f},"
+              f"fwd/step={sec['expert_forwards_per_step_executed']:.1f}")
     path = write_json(args.json_out)
     print(f"# wrote {path}")
 

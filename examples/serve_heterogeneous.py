@@ -28,6 +28,13 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--requests", type=int, default=3)
     ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--dispatch", default="gathered",
+                    choices=("gathered", "grouped"),
+                    help="expert-dispatch executor for the routed "
+                         "strategies (core.dispatch): 'gathered' = "
+                         "per-sample param gather + vmap, 'grouped' = "
+                         "sort-based grouped segment execution (one "
+                         "forward per resident expert)")
     args = ap.parse_args()
 
     if not os.path.exists(os.path.join(args.ckpt, "expert0.npz")):
@@ -46,10 +53,15 @@ def main() -> None:
     rcfg = router_b2(num_clusters=4).reduced(latent_size=8)
 
     for strategy in ("top1", "topk", "full"):
+        # routed strategies go through the selected executor backend; the
+        # 'full' strategy runs every expert, where only the dense
+        # executor applies, so it stays on auto.
+        dispatch = args.dispatch if strategy in ("top1", "topk") else "auto"
         engine = ServingEngine.from_checkpoint_dir(
             args.ckpt, dit_cfg=dit_cfg, router_cfg=rcfg,
             sampler=SamplerConfig(num_steps=args.steps, cfg_scale=1.0,
-                                  strategy=strategy, top_k=2),
+                                  strategy=strategy, top_k=2,
+                                  dispatch=dispatch),
         )
         objectives = [e.objective for e in engine.experts]
         lat = []
@@ -66,7 +78,8 @@ def main() -> None:
             assert np.isfinite(np.asarray(out)).all()
         # first request includes compile; report steady-state
         steady = np.mean(lat[1:]) if len(lat) > 1 else lat[0]
-        print(f"strategy={strategy:5s} experts={objectives} "
+        print(f"strategy={strategy:5s} dispatch={dispatch:8s} "
+              f"experts={objectives} "
               f"first={lat[0]:.2f}s steady={steady:.2f}s "
               f"({args.batch/steady:.1f} img/s)")
 

@@ -37,6 +37,21 @@ from repro.core.conversion import (
     velocity_scale,
     velocity_to_x0,
 )
+from repro.core.dispatch import (
+    DISPATCH_BACKENDS,
+    DenseExecutor,
+    DispatchPlan,
+    ExpertExecutor,
+    GatheredExecutor,
+    GroupedExecutor,
+    full_dispatch_plan,
+    make_dispatch_plan,
+    make_executor,
+    plan_from_slots,
+    resolve_dispatch,
+    tile_plan,
+    topk_slots,
+)
 from repro.core.fusion import (
     ExpertSpec,
     fuse_predictions,
@@ -45,7 +60,6 @@ from repro.core.fusion import (
     routing_weights,
     select_topk,
     threshold_router_weights,
-    topk_slots,
     unified_expert_velocities,
 )
 from repro.core.sampling import (

@@ -1,0 +1,564 @@
+"""Pluggable expert-dispatch API: ``DispatchPlan`` + executor backends.
+
+The paper's inference-time fusion routes each sample to its top-k experts
+(§3.1); *how* those routed forwards execute is a serving-engine decision
+that every perf rung (grouped dispatch, quantized experts, cross-host
+routing) needs to plug into.  This module is that seam:
+
+* ``DispatchPlan`` — a traced, batch-shaped description of one step's
+  routing decisions, computed once per step from the router posterior:
+  per-sample expert slots and fusion weights, plus the sort-based *group*
+  view of the same assignments (flat sort order, its inverse, and
+  per-expert segment offsets).
+* ``ExpertExecutor`` — the protocol every backend implements: turn a plan
+  plus the step inputs into the fused velocity (Eq. 1 combine through the
+  ``kernels.ops.fused_velocity`` convert-and-fuse kernel).
+* Three backends:
+
+  - ``GatheredExecutor`` — per-sample param gather + ``vmap`` (the
+    original compute-sparse path, extracted): each routed slot gathers
+    its expert's params per sample and runs one vmapped lane per sample.
+    Batch-uniform plans (threshold router) collapse to a scalar gather.
+  - ``GroupedExecutor`` — sort-based grouped execution (DDM/Paris-style):
+    argsort the ``B·k`` assignments by expert, run each expert **once**
+    over its contiguous segment (padded to a power-of-two bucket so the
+    trace stays static-shaped; ``lax.switch`` picks the bucket at run
+    time and empty segments skip the forward entirely), then unsort.
+    Per-expert params come from *static* slices of the stacked pytree, so
+    on an ``("expert", "data")`` mesh each expert's weights resolve from
+    their resident shard instead of a per-sample dynamic-gather
+    (all-gather) of ``B·k`` param copies.
+  - ``DenseExecutor`` — the heterogeneous-``apply_fn`` fallback: every
+    expert runs through its own apply (no stacking required); batch-
+    uniform plans run only the routed expert via ``lax.switch``.
+
+Plan invariants (tested in ``tests/test_dispatch.py``):
+
+* ``segment_offsets`` is monotone with ``segment_offsets[0] == 0`` and
+  ``segment_offsets[-1] == B·k`` (every assignment lands in exactly one
+  expert's segment);
+* ``unsort_order`` is the true inverse permutation of ``sort_order``;
+* sorted assignment ``r`` belongs to expert ``e`` iff
+  ``segment_offsets[e] <= r < segment_offsets[e+1]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conversion import ConversionConfig
+from repro.kernels import ops
+
+Array = jax.Array
+
+#: valid ``SamplerConfig.dispatch`` values (``auto`` resolves per engine
+#: mode and expert-set shape, see ``resolve_dispatch``).
+DISPATCH_BACKENDS = ("auto", "gathered", "grouped", "dense")
+
+
+# ---------------------------------------------------------------------------
+# DispatchPlan
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("slot_idx", "slot_w", "sort_order", "unsort_order",
+                 "segment_offsets"),
+    meta_fields=("num_experts", "uniform"),
+)
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """Traced, batch-shaped routing decisions for one sampling step.
+
+    With ``B`` samples, ``k`` routed slots per sample and ``K`` experts,
+    the ``N = B·k`` flat *assignments* are numbered ``a = s·k + j``
+    (sample ``s``, slot ``j``).
+
+    Attributes:
+      slot_idx: ``(B, k)`` int32 — expert id per routed slot.
+      slot_w: ``(B, k)`` — fusion weight per slot (zero-weight slots are
+        legal; their forward is wasted but the fused result is exact).
+      sort_order: ``(N,)`` int32 — assignment ids in expert-grouped order
+        (stable argsort of the flattened ``slot_idx``; ties keep
+        assignment order, so the plan is deterministic).
+      unsort_order: ``(N,)`` int32 — inverse permutation:
+        ``unsort_order[a]`` is assignment ``a``'s position in the sorted
+        view; ``sort_order[unsort_order] == arange(N)``.
+      segment_offsets: ``(K+1,)`` int32 — expert ``e``'s sorted segment is
+        ``sort_order[segment_offsets[e]:segment_offsets[e+1]]``.
+      num_experts: static ``K``.
+      uniform: static flag — every sample routes to the same expert(s)
+        (the §3.3 threshold router); executors may collapse the batch to
+        a single expert forward.
+    """
+
+    slot_idx: Array
+    slot_w: Array
+    sort_order: Array
+    unsort_order: Array
+    segment_offsets: Array
+    num_experts: int
+    uniform: bool = False
+
+    @property
+    def batch(self) -> int:
+        return self.slot_idx.shape[0]
+
+    @property
+    def slots_per_sample(self) -> int:
+        return self.slot_idx.shape[1]
+
+    @property
+    def num_assignments(self) -> int:
+        return self.sort_order.shape[0]
+
+
+def topk_slots(weights: Array, k: int) -> tuple[Array, Array]:
+    """Expert slots for routed-only execution.
+
+    Args:
+      weights: ``(B, K)`` final fusion weights (≤ k nonzero per row).
+      k: number of slots to run.
+
+    Returns:
+      ``(slot_idx, slot_w)`` both ``(B, k)`` — the expert index and fusion
+      weight per slot.  Slots beyond the nonzero support carry zero weight
+      (their forward is wasted but the fused result is exact).
+    """
+    slot_w, slot_idx = jax.lax.top_k(weights, min(k, weights.shape[-1]))
+    return slot_idx, slot_w
+
+
+def plan_from_slots(
+    slot_idx: Array,
+    slot_w: Array,
+    num_experts: int,
+    *,
+    uniform: bool = False,
+) -> DispatchPlan:
+    """Build a plan (including the sorted group view) from routed slots.
+
+    The group view costs one stable argsort over the ``B·k`` assignments
+    plus a scatter for the inverse permutation and a bincount-cumsum for
+    the segment offsets; executors that never touch it (gathered, dense)
+    let XLA dead-code-eliminate it.
+    """
+    flat = slot_idx.reshape(-1).astype(jnp.int32)
+    n = flat.shape[0]
+    sort_order = jnp.argsort(flat, stable=True).astype(jnp.int32)
+    unsort_order = (
+        jnp.zeros((n,), jnp.int32).at[sort_order].set(
+            jnp.arange(n, dtype=jnp.int32))
+    )
+    counts = jnp.zeros((num_experts,), jnp.int32).at[flat].add(1)
+    segment_offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    return DispatchPlan(
+        slot_idx=slot_idx.astype(jnp.int32),
+        slot_w=slot_w,
+        sort_order=sort_order,
+        unsort_order=unsort_order,
+        segment_offsets=segment_offsets,
+        num_experts=num_experts,
+        uniform=uniform,
+    )
+
+
+def make_dispatch_plan(
+    weights: Array,
+    k: int,
+    *,
+    uniform: bool = False,
+) -> DispatchPlan:
+    """Plan for routed execution: top-``k`` slots of the fusion weights.
+
+    This is the §3.1 slot selection (formerly ``fusion.topk_slots``)
+    folded into plan construction — the single per-step entry point for
+    every routed backend.
+    """
+    slot_idx, slot_w = topk_slots(weights, k)
+    return plan_from_slots(slot_idx, slot_w, weights.shape[-1],
+                           uniform=uniform)
+
+
+def full_dispatch_plan(weights: Array) -> DispatchPlan:
+    """Plan with one slot per expert (dense execution, strategy='full').
+
+    ``slot_idx`` is ``arange(K)`` per row and ``slot_w`` the full weight
+    matrix, so slot ``j`` *is* expert ``j`` and the dense executor's
+    expert-order prediction stack lines up with the fused-kernel slots.
+    """
+    b, num_experts = weights.shape
+    slot_idx = jnp.broadcast_to(
+        jnp.arange(num_experts, dtype=jnp.int32)[None], (b, num_experts)
+    )
+    return plan_from_slots(slot_idx, weights, num_experts)
+
+
+def tile_plan(plan: DispatchPlan, g: int) -> DispatchPlan:
+    """Plan for ``g`` stacked guidance branches of the same batch.
+
+    Batched CFG concatenates the cond/uncond branches along the batch
+    axis; both branches share each sample's routing, so the tiled plan
+    just repeats the slots ``g`` times and rebuilds the group view over
+    the ``g·B·k`` assignments.
+    """
+    if g == 1:
+        return plan
+    return plan_from_slots(
+        jnp.concatenate([plan.slot_idx] * g, axis=0),
+        jnp.concatenate([plan.slot_w] * g, axis=0),
+        plan.num_experts,
+        uniform=plan.uniform,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Executor protocol + shared helpers
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class ExpertExecutor(Protocol):
+    """Backend turning a plan + step inputs into the fused velocity.
+
+    ``velocity`` receives the pre-CFG batch ``x``/``tb`` of size ``B``
+    with grouped conditioning ``cond_g`` (leaves ``(B, g, ...)`` from
+    ``sampling._cfg_grouped_cond``; ``g=2`` when CFG branches are batched,
+    else 1) plus the step's ``(5, K)`` unified-coefficient table, and
+    returns the fused velocity ``(g·B, *latent)`` in ``[cond; uncond]``
+    concat order.  CFG combination happens in the sampler, shared across
+    backends.
+    """
+
+    name: str
+
+    def velocity(
+        self,
+        plan: DispatchPlan,
+        x: Array,
+        tb: Array,
+        cond_g: dict,
+        g: int,
+        tab: Array,
+    ) -> Array:
+        ...
+
+
+def _tile(a: Array, g: int) -> Array:
+    return a if g == 1 else jnp.concatenate([a] * g, axis=0)
+
+
+def _flatten_groups(cond_g: dict, g: int) -> dict:
+    """``(B, g, ...)`` grouped cond -> ``(g·B, ...)`` branch-major flat."""
+    return {
+        key: jnp.moveaxis(v, 1, 0).reshape((g * v.shape[0],) + v.shape[2:])
+        for key, v in cond_g.items()
+    }
+
+
+def _fused(
+    preds: Array,        # (k, Bx, *latent) per-slot native predictions
+    x_all: Array,        # (Bx, *latent)
+    w_all: Array,        # (Bx, k)
+    idx_all: Array,      # (Bx, k)
+    tab: Array,          # (5, K)
+    conv: ConversionConfig,
+) -> Array:
+    """Per-slot coefficient gather + fused convert-and-fuse kernel."""
+    coef = jnp.moveaxis(tab[:, idx_all], 1, 2)           # (5, k, Bx)
+    return ops.fused_velocity(
+        preds, x_all, w_all, coef,
+        clamp=conv.clamp, alpha_min=conv.alpha_min,
+    )
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# GatheredExecutor — per-sample gather + vmap (the original routed path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GatheredExecutor:
+    """Per-sample param gather + vmap over routed slots.
+
+    Each of the ``k`` slots gathers its expert's params per sample
+    (``stacked`` leaves ``(K, ...)`` indexed by ``slot_idx[:, j]``) and
+    runs one vmapped model instance per sample; the ``g`` guidance
+    branches share the sample's latent *and* routed expert, so they run
+    inside the same vmapped instance and the params are gathered once,
+    not per branch.  Batch-uniform plans collapse to a scalar
+    ``dynamic_index_in_dim`` gather and a single plain forward.
+    """
+
+    apply_fn: Callable[..., Array]
+    stacked_params: object
+    conv: ConversionConfig
+    name: str = "gathered"
+
+    def _vmapped(self, g: int):
+        apply_fn = self.apply_fn
+
+        def one(p1, x1, t1, c1):
+            xg = jnp.broadcast_to(x1[None], (g,) + x1.shape)
+            tg = jnp.full((g,), t1)
+            return apply_fn(p1, xg, tg, **c1)             # (g, *latent)
+
+        return jax.vmap(one)
+
+    def velocity(self, plan, x, tb, cond_g, g, tab):
+        b = x.shape[0]
+        k = plan.slots_per_sample
+        x_all = _tile(x, g)
+        w_all = _tile(plan.slot_w, g)
+        idx_all = _tile(plan.slot_idx, g)
+        if plan.uniform:
+            # Whole batch routes to one expert: scalar gather, one forward.
+            idx0 = plan.slot_idx[0, 0]
+            p = jax.tree.map(
+                lambda s: jax.lax.dynamic_index_in_dim(
+                    s, idx0, 0, keepdims=False),
+                self.stacked_params,
+            )
+            cond_all = _flatten_groups(cond_g, g)
+            preds = self.apply_fn(p, x_all, _tile(tb, g), **cond_all)[None]
+            return _fused(preds, x_all, w_all, idx_all, tab, self.conv)
+        vmapped = self._vmapped(g)
+        cols = []
+        for j in range(k):
+            pj = jax.tree.map(
+                lambda s: s[plan.slot_idx[:, j]], self.stacked_params
+            )
+            cols.append(vmapped(pj, x, tb, cond_g))       # (B, g, *latent)
+        preds = jnp.moveaxis(jnp.stack(cols), 2, 1)       # (k, g, B, ...)
+        preds = preds.reshape((k, g * b) + preds.shape[3:])
+        return _fused(preds, x_all, w_all, idx_all, tab, self.conv)
+
+
+# ---------------------------------------------------------------------------
+# GroupedExecutor — sort-based grouped execution (DDM/Paris-style)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GroupedExecutor:
+    """Sort assignments by expert; one segment pass per resident expert.
+
+    Pipeline per step (all static-shaped so it traces once under scan):
+
+    1. flatten the ``g`` guidance branches to ``Bx = g·B`` rows and tile
+       the plan (both branches share each sample's routing);
+    2. gather the ``N = Bx·k`` assignment rows into expert-sorted order
+       (a cheap gather of *latents*, not params) and zero-pad the sorted
+       buffer to the next power of two ``Np``;
+    3. for each expert ``e`` (static Python loop): pick the padded
+       power-of-two bucket covering its segment length with
+       ``lax.switch`` and run ONE forward over that bucket slice — empty
+       segments take the 0-bucket branch and skip the forward entirely.
+       Params come from a *static* slice ``stacked[e]``, so on an
+       ``("expert", "data")`` mesh the weights resolve from the shard
+       that owns expert ``e`` instead of a per-sample dynamic-gather
+       (expert-axis all-gather) of ``B·k`` param copies;
+    4. scatter each bucket's valid rows back into a flat prediction
+       buffer (out-of-segment bucket rows are dropped), unsort, and fuse
+       through the same ``fused_velocity`` kernel as every other backend.
+
+    Per-step expert forwards: at most one per expert with a non-empty
+    segment — ≤ ``K`` resident experts, vs ``B·k`` vmapped per-sample
+    lanes on the gathered path.  Bucket overshoot bounds wasted rows at
+    < 2× the true segment length.
+    """
+
+    apply_fn: Callable[..., Array]
+    stacked_params: object
+    conv: ConversionConfig
+    name: str = "grouped"
+
+    def velocity(self, plan, x, tb, cond_g, g, tab):
+        b = x.shape[0]
+        k = plan.slots_per_sample
+        n_experts = plan.num_experts
+        x_all = _tile(x, g)
+        t_all = _tile(tb, g)
+        cond_all = _flatten_groups(cond_g, g)
+        p = tile_plan(plan, g)
+        n = p.num_assignments                              # g·B·k
+        np2 = _next_pow2(n)
+        off = p.segment_offsets
+
+        # Sorted assignment rows (gathers of latents/cond, not params).
+        sample_ids = p.sort_order // k                     # (N,)
+        xs = x_all[sample_ids]
+        ts = t_all[sample_ids]
+        cs = {key: v[sample_ids] for key, v in cond_all.items()}
+        if np2 > n:
+            pad = [(0, np2 - n)]
+            xs = jnp.pad(xs, pad + [(0, 0)] * (xs.ndim - 1))
+            ts = jnp.pad(ts, pad)
+            cs = {key: jnp.pad(v, pad + [(0, 0)] * (v.ndim - 1))
+                  for key, v in cs.items()}
+
+        out_sd = jax.eval_shape(
+            lambda p_, x_, t_, c_: self.apply_fn(p_, x_, t_, **c_),
+            jax.tree.map(lambda s: s[0], self.stacked_params),
+            xs[:1], ts[:1], {key: v[:1] for key, v in cs.items()},
+        )
+        buf = jnp.zeros((np2,) + out_sd.shape[1:], out_sd.dtype)
+
+        sizes = [1 << j for j in range(np2.bit_length())]  # 1..np2
+        thresholds = jnp.array([0] + sizes[:-1], jnp.int32)
+
+        def _branches(e, params_e):
+            def run(size):
+                def branch(buf):
+                    start = jnp.minimum(off[e], np2 - size)
+                    xb = jax.lax.dynamic_slice_in_dim(xs, start, size)
+                    tb_ = jax.lax.dynamic_slice_in_dim(ts, start, size)
+                    cb = {
+                        key: jax.lax.dynamic_slice_in_dim(v, start, size)
+                        for key, v in cs.items()
+                    }
+                    pred = self.apply_fn(params_e, xb, tb_, **cb)
+                    pos = start + jnp.arange(size, dtype=jnp.int32)
+                    valid = (pos >= off[e]) & (pos < off[e + 1])
+                    # invalid rows target index np2 -> dropped by scatter
+                    tgt = jnp.where(valid, pos, np2)
+                    return buf.at[tgt].set(pred.astype(buf.dtype),
+                                           mode="drop")
+                return branch
+
+            # branch 0: empty segment — no forward at all.
+            return [lambda buf: buf] + [run(s) for s in sizes]
+
+        for e in range(n_experts):
+            params_e = jax.tree.map(
+                lambda s: jax.lax.index_in_dim(s, e, 0, keepdims=False),
+                self.stacked_params,
+            )
+            seg_len = off[e + 1] - off[e]
+            bucket_id = jnp.sum(seg_len > thresholds)
+            buf = jax.lax.switch(bucket_id, _branches(e, params_e), buf)
+
+        preds_flat = buf[p.unsort_order]                   # (N, *latent)
+        preds = preds_flat.reshape((g * b, k) + preds_flat.shape[1:])
+        preds = jnp.moveaxis(preds, 1, 0)                  # (k, g·B, ...)
+        return _fused(preds, x_all, p.slot_w, p.slot_idx, tab, self.conv)
+
+
+# ---------------------------------------------------------------------------
+# DenseExecutor — heterogeneous apply_fn fallback
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DenseExecutor:
+    """Run every expert through its own ``apply_fn`` (no stacking needed).
+
+    The fallback for expert sets the sparse backends cannot stack
+    (heterogeneous architectures / param structures).  Batch-uniform
+    plans (threshold router) still run only the routed expert, via
+    ``lax.switch`` over the expert closures.
+    """
+
+    apply_fns: Sequence[Callable[..., Array]]
+    params: Sequence
+    conv: ConversionConfig
+    name: str = "dense"
+
+    def velocity(self, plan, x, tb, cond_g, g, tab):
+        x_all = _tile(x, g)
+        t_all = _tile(tb, g)
+        cond_all = _flatten_groups(cond_g, g)
+        w_all = _tile(plan.slot_w, g)
+        idx_all = _tile(plan.slot_idx, g)
+        if plan.uniform:
+            idx0 = plan.slot_idx[0, 0]
+            branches = [
+                functools.partial(
+                    lambda fn, p, op: fn(p, op[0], op[1], **op[2]), fn, p,
+                )
+                for fn, p in zip(self.apply_fns, self.params)
+            ]
+            preds = jax.lax.switch(
+                idx0, branches, (x_all, t_all, cond_all)
+            )[None]
+        else:
+            preds = jnp.stack([
+                fn(p, x_all, t_all, **cond_all)
+                for fn, p in zip(self.apply_fns, self.params)
+            ])
+        return _fused(preds, x_all, w_all, idx_all, tab, self.conv)
+
+
+# ---------------------------------------------------------------------------
+# Backend selection
+# ---------------------------------------------------------------------------
+
+
+def resolve_dispatch(dispatch: str, mode: str, stackable: bool) -> str:
+    """Map a ``SamplerConfig.dispatch`` request to a concrete backend.
+
+    Args:
+      dispatch: requested backend (``DISPATCH_BACKENDS``).
+      mode: resolved engine mode (``'routed'`` or ``'dense'`` — the
+        reference engine never reaches executor selection).
+      stackable: stacked single-pytree params are available (homogeneous
+        apply_fn + identical param structure).
+
+    ``auto`` keeps the engine's historical choices: per-sample/uniform
+    routed execution via the gathered backend when params stack, the
+    dense fallback otherwise.  Explicit ``gathered``/``grouped`` raise a
+    clear error when the expert set cannot stack, instead of silently
+    degrading.
+    """
+    if dispatch not in DISPATCH_BACKENDS:
+        raise ValueError(
+            f"unknown dispatch backend {dispatch!r}; "
+            f"expected one of {DISPATCH_BACKENDS}"
+        )
+    if mode == "dense":
+        if dispatch in ("gathered", "grouped"):
+            raise ValueError(
+                f"dispatch={dispatch!r} requires routed execution "
+                f"(strategy in top1/topk/threshold with a routable expert "
+                f"set); this configuration resolved to the dense engine"
+            )
+        return "dense"
+    if dispatch == "auto":
+        return "gathered" if stackable else "dense"
+    if dispatch in ("gathered", "grouped") and not stackable:
+        raise ValueError(
+            f"dispatch={dispatch!r} needs a shared apply_fn with stackable "
+            f"params (see models.dit.stack_expert_params); heterogeneous "
+            f"expert sets must use dispatch='dense'"
+        )
+    return dispatch
+
+
+def make_executor(
+    backend: str,
+    *,
+    apply_fns: Sequence[Callable[..., Array]],
+    params: Sequence,
+    stacked_params,
+    conv: ConversionConfig,
+) -> ExpertExecutor:
+    """Instantiate the executor for a resolved backend name."""
+    if backend == "gathered":
+        return GatheredExecutor(apply_fns[0], stacked_params, conv)
+    if backend == "grouped":
+        return GroupedExecutor(apply_fns[0], stacked_params, conv)
+    if backend == "dense":
+        return DenseExecutor(tuple(apply_fns), tuple(params), conv)
+    raise ValueError(f"unknown executor backend {backend!r}")

@@ -23,6 +23,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.conversion import ConversionConfig, unify_prediction
+# Slot selection moved into the dispatch-plan API (core.dispatch); the
+# re-export keeps the historical ``fusion.topk_slots`` import path alive.
+from repro.core.dispatch import topk_slots  # noqa: F401  (re-export)
 from repro.core.schedules import Schedule, get_schedule
 
 Array = jax.Array
@@ -66,22 +69,6 @@ def select_topk(probs: Array, k: int) -> tuple[Array, Array]:
     w = probs * mask
     w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-12)
     return w, mask
-
-
-def topk_slots(weights: Array, k: int) -> tuple[Array, Array]:
-    """Expert slots for routed-only execution.
-
-    Args:
-      weights: ``(B, K)`` final fusion weights (≤ k nonzero per row).
-      k: number of slots to run.
-
-    Returns:
-      ``(slot_idx, slot_w)`` both ``(B, k)`` — the expert index and fusion
-      weight per slot.  Slots beyond the nonzero support carry zero weight
-      (their forward is wasted but the fused result is exact).
-    """
-    slot_w, slot_idx = jax.lax.top_k(weights, min(k, weights.shape[-1]))
-    return slot_idx, slot_w
 
 
 def routing_weights(probs: Array, strategy: str, k: int = 2) -> Array:

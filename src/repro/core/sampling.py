@@ -13,10 +13,11 @@ Three mechanisms realize that here:
   ``drop_mask``), so guidance costs one expert forward instead of two;
 * **routed-expert-only execution** — homogeneous-architecture expert
   params are stacked into one pytree (``models.dit.stack_expert_params``)
-  and each sampling step gathers and runs only the routed experts
-  (per-sample gather + vmap for ``top1``/``topk``; scalar gather or
-  ``jax.lax.switch`` for the batch-uniform ``threshold`` router) — k
-  forwards per step instead of K;
+  and each step builds a ``core.dispatch.DispatchPlan`` from the router
+  posterior, then executes only the routed experts through a pluggable
+  ``ExpertExecutor`` backend (``SamplerConfig.dispatch``): per-sample
+  gather+vmap (``gathered``), sort-based grouped segment execution
+  (``grouped``), or the heterogeneous dense fallback (``dense``);
 * **fused convert-and-fuse** — the per-step (alpha, sigma, dalpha, dsigma,
   vscale) conversion coefficients are tabulated once per run
   (``conversion.unified_coeff_tables``) and the ε→v conversion + Eq. 1
@@ -36,22 +37,25 @@ DDPM" row), and the deterministic two-expert threshold sampler (§3.3).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.conversion import ConversionConfig, unified_coeff_tables
+from repro.core.dispatch import (
+    full_dispatch_plan,
+    make_dispatch_plan,
+    make_executor,
+    resolve_dispatch,
+)
 from repro.core.fusion import (
     ExpertSpec,
     fuse_predictions,
     fusion_weights,
-    topk_slots,
     unified_expert_velocities,
 )
 from repro.core.schedules import get_schedule
-from repro.kernels import ops
 
 Array = jax.Array
 
@@ -84,6 +88,12 @@ class SamplerConfig:
     #: uses a model-internal null embedding; automatically falls back to
     #: the two-pass formulation when the cond dicts cannot be batched.
     batched_cfg: bool = True
+    #: expert-dispatch backend for routed execution (``core.dispatch``):
+    #: 'auto' (gathered when params stack, dense otherwise) | 'gathered'
+    #: (per-sample param gather + vmap) | 'grouped' (sort-based grouped
+    #: segment execution, one forward per resident expert) | 'dense'
+    #: (every expert via its own apply_fn).
+    dispatch: str = "auto"
 
 
 def cfg_combine(cond_pred: Array, uncond_pred: Array, scale: float) -> Array:
@@ -126,6 +136,12 @@ def _resolve_engine(
     if engine not in ("auto", "routed", "dense", "reference"):
         raise ValueError(f"unknown engine {engine!r}")
     if engine == "reference":
+        if config.dispatch != "auto":
+            raise ValueError(
+                "the reference engine predates the dispatch API; use "
+                "dispatch='auto' (executor backends apply to the fused "
+                "engines only)"
+            )
         return engine
     if config.time_map != "identity":
         # snr_match queries experts at rebased times/inputs — only the
@@ -133,6 +149,14 @@ def _resolve_engine(
         if engine != "auto":
             raise ValueError(
                 f"engine={engine!r} requires time_map='identity'"
+            )
+        if config.dispatch != "auto":
+            # fail loudly rather than silently running the reference path
+            # while the caller believes an executor backend is in effect.
+            raise ValueError(
+                f"dispatch={config.dispatch!r} requires time_map="
+                f"'identity'; snr_match resolves to the reference engine, "
+                f"which predates the dispatch API"
             )
         return "reference"
     K = len(experts)
@@ -169,38 +193,15 @@ def _cfg_batchable(cond: dict, null_cond: dict) -> bool:
     return True
 
 
-def _cfg_batched_cond(cond: dict, null_cond: dict, batch: int) -> dict:
-    """Stack cond (first half) and uncond (second half) conditioning.
-
-    Keys whose null value is ``None`` (model-internal learned null, §2.5)
-    are duplicated and signalled through ``drop_mask`` instead.
-    """
-    out: dict = {}
-    need_drop = False
-    for key in sorted(set(cond) | set(null_cond)):
-        c, n = cond.get(key), null_cond.get(key)
-        if c is None and n is None:
-            continue
-        if n is None:
-            out[key] = jnp.concatenate([c, c], axis=0)
-            need_drop = True
-        else:
-            out[key] = jnp.concatenate([jnp.asarray(c), jnp.asarray(n)],
-                                       axis=0)
-    if need_drop:
-        out["drop_mask"] = jnp.concatenate(
-            [jnp.zeros((batch,), bool), jnp.ones((batch,), bool)]
-        )
-    return out
-
-
 def _cfg_grouped_cond(cond: dict, null_cond: dict | None, batch: int) -> dict:
     """Per-sample CFG-branch conditioning: leaves gain a ``(B, G, ...)``
     group axis (G=2 cond/uncond, G=1 without guidance batching).
 
-    Used by per-sample routed dispatch, where the guidance branches share
-    the sample's latent *and* its routed expert — grouping them inside one
-    vmapped instance gathers each sample's params once instead of twice.
+    This is the conditioning form every ``ExpertExecutor`` backend
+    receives: the gathered backend runs both guidance branches inside one
+    vmapped instance (params gathered once, not per branch); the grouped
+    and dense backends flatten the group axis branch-major, recovering
+    the classic ``[cond; uncond]`` concatenated batch.
     """
     if null_cond is None:
         return {
@@ -250,11 +251,11 @@ def _sample_fused(
     init_noise: Array | None,
     stacked_params=None,
     latent_sharding=None,
+    plan_sharding=None,
 ) -> Array:
     K = len(experts)
     B = shape[0]
     conv = config.conversion
-    apply0 = experts[0].apply_fn
     homogeneous = all(e.apply_fn is experts[0].apply_fn for e in experts)
 
     use_cfg = null_cond is not None and config.cfg_scale != 1.0
@@ -274,12 +275,24 @@ def _sample_fused(
     # params (ServingEngine) pass them in; otherwise stack once per trace.
     # _resolve_engine already guaranteed stackability for per-sample
     # routing; the batch-uniform threshold path re-checks because it also
-    # serves heterogeneous expert sets (via lax.switch).
+    # serves heterogeneous expert sets (via the dense executor's switch).
     stacked = stacked_params
     if stacked is None and mode == "routed" and homogeneous and (
         not uniform or params_are_stackable(params)
     ):
         stacked = _stack_params(params)
+
+    # Pluggable expert-dispatch backend (core.dispatch): the executor owns
+    # HOW routed forwards run; the plan built per step owns WHICH experts
+    # run; CFG orchestration below is shared across all backends.
+    backend = resolve_dispatch(config.dispatch, mode, stacked is not None)
+    executor = make_executor(
+        backend,
+        apply_fns=[e.apply_fn for e in experts],
+        params=params,
+        stacked_params=stacked,
+        conv=conv,
+    )
 
     x = init_noise if init_noise is not None \
         else jax.random.normal(key, shape, dtype=jnp.float32)
@@ -293,79 +306,6 @@ def _sample_fused(
         ts[:-1], conv,
     )                                                     # (S, 5, K)
 
-    persample = mode == "routed" and not uniform
-
-    # Per-sample routed dispatch runs each sample's G guidance branches
-    # (G=2 batched CFG, G=1 otherwise) inside ONE vmapped instance: the
-    # branches share the sample's latent and routed expert, so its params
-    # are gathered once, not per branch.
-    def _make_vmapped(g):
-        def one(p1, x1, t1, c1):
-            xg = jnp.broadcast_to(x1[None], (g,) + x1.shape)
-            tg = jnp.full((g,), t1)
-            return apply0(p1, xg, tg, **c1)               # (g, *latent)
-        return jax.vmap(one)
-
-    vmapped = {g: _make_vmapped(g) for g in (1, 2)} if persample else {}
-
-    def persample_velocity(x_in, tb, cond_g, g, slot_idx, slot_w, tab):
-        """Fused velocity (g·B, *latent) in [cond; uncond] concat order."""
-        cols = []
-        for j in range(k_slots):
-            pj = jax.tree.map(lambda s: s[slot_idx[:, j]], stacked)
-            cols.append(vmapped[g](pj, x_in, tb, cond_g))  # (B, g, *latent)
-        preds = jnp.moveaxis(jnp.stack(cols), 2, 1)        # (k, g, B, ...)
-        preds = preds.reshape((k_slots, g * B) + preds.shape[3:])
-        x_all = jnp.concatenate([x_in] * g, axis=0)
-        w_all = jnp.concatenate([slot_w] * g, axis=0)
-        idx_all = jnp.concatenate([slot_idx] * g, axis=0)
-        coef = jnp.moveaxis(tab[:, idx_all], 1, 2)         # (5, k, g·B)
-        return ops.fused_velocity(
-            preds, x_all, w_all, coef,
-            clamp=conv.clamp, alpha_min=conv.alpha_min,
-        )
-
-    def concat_preds(x_all, t_all, cond_all, slot_idx_all):
-        """(k_slots, Bx, *latent) predictions — dense / batch-uniform."""
-        if mode == "dense":
-            return jnp.stack([
-                spec.apply_fn(p, x_all, t_all, **cond_all)
-                for spec, p in zip(experts, params)
-            ])
-        # Batch-uniform routing (threshold router depends only on t):
-        # dispatch the whole batch to ONE expert per step.
-        idx0 = slot_idx_all[0, 0]
-        if stacked is not None:
-            p = jax.tree.map(
-                lambda s: jax.lax.dynamic_index_in_dim(
-                    s, idx0, 0, keepdims=False),
-                stacked,
-            )
-            out = apply0(p, x_all, t_all, **cond_all)
-        else:
-            # Heterogeneous apply_fns: switch over expert closures.
-            branches = [
-                functools.partial(
-                    lambda spec, p, op: spec.apply_fn(
-                        p, op[0], op[1], **op[2]),
-                    spec, p,
-                )
-                for spec, p in zip(experts, params)
-            ]
-            out = jax.lax.switch(idx0, branches, (x_all, t_all, cond_all))
-        return out[None]
-
-    def concat_velocity(x_all, t_all, cond_all, slot_idx_all, w_all, tab):
-        preds = concat_preds(x_all, t_all, cond_all, slot_idx_all)
-        if mode == "dense":
-            coef = jnp.broadcast_to(tab[:, :, None], (5, K, x_all.shape[0]))
-        else:
-            coef = jnp.moveaxis(tab[:, slot_idx_all], 1, 2)
-        return ops.fused_velocity(
-            preds, x_all, w_all, coef,
-            clamp=conv.clamp, alpha_min=conv.alpha_min,
-        )
-
     def step(x, i):
         t_hi, t_lo = ts[i], ts[i + 1]
         dt = t_hi - t_lo
@@ -376,51 +316,39 @@ def _sample_fused(
             threshold=config.threshold,
             ddpm_low_noise_only=config.ddpm_low_noise_only,
         )                                                 # (B, K)
-        if mode == "routed":
-            slot_idx, slot_w = topk_slots(w, k_slots)     # (B, k)
+        if backend == "dense" and not uniform:
+            plan = full_dispatch_plan(w)
         else:
-            slot_idx = jnp.broadcast_to(jnp.arange(K)[None], (B, K))
-            slot_w = w
+            plan = make_dispatch_plan(w, k_slots, uniform=uniform)
+        if plan_sharding is not None:
+            # Sharded serving: routing metadata replicates across the mesh
+            # (every shard needs the full plan to slice its resident
+            # experts' groups); see launch.sharding.dispatch_plan_sharding.
+            plan = jax.tree.map(
+                lambda a: jax.lax.with_sharding_constraint(a, plan_sharding),
+                plan,
+            )
         tab = tables[i]                                   # (5, K)
-        if persample:
-            if batched:
-                cond_g = _cfg_grouped_cond(cond, null_cond or {}, B)
-                fused = persample_velocity(x, tb, cond_g, 2, slot_idx,
-                                           slot_w, tab)
-                u = cfg_combine(fused[:B], fused[B:], config.cfg_scale)
-            elif use_cfg:
-                u_c = persample_velocity(
-                    x, tb, _cfg_grouped_cond(cond, None, B), 1,
-                    slot_idx, slot_w, tab)
-                u_u = persample_velocity(
-                    x, tb, _cfg_grouped_cond(dict(null_cond or {}), None, B),
-                    1, slot_idx, slot_w, tab)
-                u = cfg_combine(u_c, u_u, config.cfg_scale)
-            else:
-                u = persample_velocity(
-                    x, tb, _cfg_grouped_cond(cond, None, B), 1,
-                    slot_idx, slot_w, tab)
-        elif batched:
-            xb = jnp.concatenate([x, x], axis=0)
-            tb2 = jnp.concatenate([tb, tb], axis=0)
-            cond_b = _cfg_batched_cond(cond, null_cond or {}, B)
-            idx2 = jnp.concatenate([slot_idx, slot_idx], axis=0)
-            w2 = jnp.concatenate([slot_w, slot_w], axis=0)
-            fused = concat_velocity(xb, tb2, cond_b, idx2, w2, tab)
+        if batched:
+            cond_g = _cfg_grouped_cond(cond, null_cond or {}, B)
+            fused = executor.velocity(plan, x, tb, cond_g, 2, tab)
             u = cfg_combine(fused[:B], fused[B:], config.cfg_scale)
         elif use_cfg:
-            u_c = concat_velocity(x, tb, cond, slot_idx, slot_w, tab)
-            u_u = concat_velocity(x, tb, dict(null_cond or {}), slot_idx,
-                                  slot_w, tab)
+            u_c = executor.velocity(
+                plan, x, tb, _cfg_grouped_cond(cond, None, B), 1, tab)
+            u_u = executor.velocity(
+                plan, x, tb,
+                _cfg_grouped_cond(dict(null_cond or {}), None, B), 1, tab)
             u = cfg_combine(u_c, u_u, config.cfg_scale)
         else:
-            u = concat_velocity(x, tb, cond, slot_idx, slot_w, tab)
+            u = executor.velocity(
+                plan, x, tb, _cfg_grouped_cond(cond, None, B), 1, tab)
         x = x - u * dt
         if latent_sharding is not None:
-            # Sharded serving: pin the evolving latent's batch dim to the
-            # mesh "data" axis every step — without the constraint GSPMD
-            # may re-replicate the batch through the routed gather's
-            # all-gather and serialize the data-parallel shards.
+            # Pin the evolving latent's batch dim to the mesh "data" axis
+            # every step — without the constraint GSPMD may re-replicate
+            # the batch through the routed param resolution and serialize
+            # the data-parallel shards.
             x = jax.lax.with_sharding_constraint(x, latent_sharding)
         return x, None
 
@@ -509,6 +437,7 @@ def sample_ensemble(
     init_noise: Array | None = None,
     stacked_params=None,
     latent_sharding=None,
+    plan_sharding=None,
 ) -> Array:
     """Euler-ODE sampling with router-weighted heterogeneous fusion.
 
@@ -532,6 +461,10 @@ def sample_ensemble(
       latent_sharding: optional ``NamedSharding`` for the evolving latent
         state; the fused engine re-constrains x to it every Euler step so
         the batch stays on the mesh "data" axis under sharded serving.
+      plan_sharding: optional ``NamedSharding`` for the per-step
+        ``DispatchPlan`` arrays (typically replicated — see
+        ``launch.sharding.dispatch_plan_sharding``) so routing metadata
+        never forces collectives inside the executor's expert branches.
 
     Returns samples at t=0 (clean latents).
     """
@@ -545,7 +478,7 @@ def sample_ensemble(
         )
     return _sample_fused(
         key, experts, params, router_fn, shape, cond, null_cond, config,
-        mode, init_noise, stacked_params, latent_sharding,
+        mode, init_noise, stacked_params, latent_sharding, plan_sharding,
     )
 
 

@@ -15,6 +15,16 @@ Serving properties:
   paper's claim that Top-K routing pays single-model cost at ensemble
   quality.  Heterogeneous-architecture expert sets fall back to the dense
   fused path automatically.
+* **pluggable dispatch** — ``SamplerConfig.dispatch`` selects the expert
+  executor backend (``core.dispatch``): ``gathered`` (per-sample param
+  gather + vmap, the default), ``grouped`` (sort-based grouped execution:
+  one segment pass per resident expert instead of ``B·k`` vmapped lanes —
+  the DDM/Paris-style serving layout), or ``dense``.  The per-step
+  ``DispatchPlan`` replicates across the mesh
+  (``launch.sharding.dispatch_plan_sharding``) while grouped segment
+  params resolve from *static* expert slices of the stacked pytree, so
+  each shard executes its resident experts' groups without a per-sample
+  params all-gather.
 * **retrace-free** — ``ServingEngine`` caches a jitted sampling function
   per (batch size, latent shape, sampler config, conditioning signature)
   with the noise buffer donated, so repeated requests with the same shape
@@ -75,7 +85,11 @@ from repro.core import (
     sample_ensemble,
 )
 from repro.launch.mesh import make_expert_mesh
-from repro.launch.sharding import expert_param_shardings, serve_batch_spec
+from repro.launch.sharding import (
+    dispatch_plan_sharding,
+    expert_param_shardings,
+    serve_batch_spec,
+)
 from repro.models import dit as D
 from repro.models.config import DiTConfig, dit_b2, router_b2
 from repro.training import load_checkpoint
@@ -98,7 +112,9 @@ class PendingRequest:
     def result(self) -> jnp.ndarray:
         if not self.done:
             raise RuntimeError(
-                "request not yet executed — call ServingEngine.flush()"
+                "request not yet flushed — submit() only enqueues; call "
+                "ServingEngine.flush() to execute the batched dispatch "
+                "before reading result()"
             )
         return self._result
 
@@ -249,10 +265,12 @@ class ServingEngine:
         if fn is None:
             shape = (batch_size,) + self.latent_shape
             latent_sharding = None
+            plan_sharding = None
             jit_kwargs: dict = {}
             if self.mesh is not None:
                 lat_spec = serve_batch_spec(self.mesh, shape)
                 latent_sharding = NamedSharding(self.mesh, lat_spec)
+                plan_sharding = dispatch_plan_sharding(self.mesh)
                 batch_sharded = len(lat_spec) > 0 and lat_spec[0] is not None
                 text_spec = P("data") if (has_text and batch_sharded) else P()
                 jit_kwargs["in_shardings"] = (
@@ -271,6 +289,7 @@ class ServingEngine:
                     engine=self.engine, init_noise=noise,
                     stacked_params=self.stacked_params,
                     latent_sharding=latent_sharding,
+                    plan_sharding=plan_sharding,
                 )
 
             # donation is a no-op (with a warning) on CPU; only request it
@@ -410,6 +429,11 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=2)
     ap.add_argument("--engine", default="auto",
                     choices=("auto", "routed", "dense", "reference"))
+    ap.add_argument("--dispatch", default="auto",
+                    choices=("auto", "gathered", "grouped", "dense"),
+                    help="expert-dispatch executor backend "
+                         "(core.dispatch): per-sample gather+vmap vs "
+                         "sort-based grouped segment execution")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--latent-size", type=int, default=8)
     ap.add_argument("--expert-shards", type=int, default=1)
@@ -429,6 +453,7 @@ def main() -> None:
         sampler=SamplerConfig(
             num_steps=args.steps, cfg_scale=args.cfg_scale,
             strategy=args.strategy, top_k=args.top_k,
+            dispatch=args.dispatch,
         ),
         engine=args.engine,
         n_expert_shards=args.expert_shards, n_data_shards=args.data_shards,

@@ -292,6 +292,21 @@ def expert_param_shardings(
     )
 
 
+def dispatch_plan_sharding(mesh: Mesh) -> NamedSharding:
+    """Executor-aware placement for ``core.dispatch.DispatchPlan`` arrays.
+
+    Routing metadata (per-sample slot indices/weights, the expert-sorted
+    assignment order, per-expert segment offsets) replicates across the
+    mesh: every shard needs the full plan to slice its resident experts'
+    groups (grouped backend) or gather its param slices (gathered
+    backend), and the arrays are O(B·k) ints — replication costs nothing
+    next to the latents.  Constraining them explicitly keeps GSPMD from
+    threading a sharded batch axis into the executor's per-expert
+    branches, which would force collectives inside every bucket branch.
+    """
+    return NamedSharding(mesh, P())
+
+
 def serve_batch_spec(mesh: Mesh, shape: tuple[int, ...]) -> P:
     """Request-batch spec on the expert mesh: leading dim over "data".
 

@@ -1,0 +1,326 @@
+"""Pluggable expert-dispatch API: plan invariants + executor parity.
+
+Acceptance gates for the dispatch subsystem (core.dispatch):
+  (a) DispatchPlan invariants — segment offsets partition exactly the
+      B·k assignments, unsort is a true inverse permutation, sorted
+      segments contain exactly their expert's assignments;
+  (b) GroupedExecutor == GatheredExecutor (allclose) for the paper's
+      8-expert top-2 + CFG serving configuration, plus threshold /
+      top1 / two-pass-CFG / low-noise-gate variants;
+  (c) grouped execution runs at most one forward per resident expert
+      per step (runtime-counted — the trace holds every bucket branch);
+  (d) backend selection fails loudly for impossible requests instead of
+      silently degrading.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DispatchPlan,
+    ExpertSpec,
+    GroupedExecutor,
+    SamplerConfig,
+    full_dispatch_plan,
+    make_dispatch_plan,
+    make_executor,
+    plan_from_slots,
+    resolve_dispatch,
+    sample_ensemble,
+    tile_plan,
+)
+
+KEY = jax.random.PRNGKey(0)
+LATENT = (4, 4, 2)
+
+
+def _shared_apply(params, x, t, *, text_emb=None, drop_mask=None, **_):
+    null = jnp.float32(0.07)
+    if text_emb is None:
+        cond_term = null
+    else:
+        ct = text_emb.mean(axis=(1, 2))[:, None, None, None]
+        if drop_mask is not None:
+            ct = jnp.where(drop_mask[:, None, None, None], null, ct)
+        cond_term = ct
+    return x * params["a"] + params["b"] + cond_term
+
+
+def _ensemble(k=8):
+    params = [
+        {"a": jnp.float32(0.7 + 0.06 * i), "b": jnp.float32(0.01 * i)}
+        for i in range(k)
+    ]
+    experts = [
+        ExpertSpec(
+            f"e{i}", "ddpm" if i % 2 == 0 else "fm",
+            "cosine" if i % 2 == 0 else "linear", _shared_apply, i,
+        )
+        for i in range(k)
+    ]
+
+    def router_fn(x, t):
+        logits = (
+            jnp.tile(jnp.arange(float(k))[None], (x.shape[0], 1))
+            + x.mean(axis=(1, 2, 3))[:, None] * 3.0
+        )
+        return jax.nn.softmax(logits, axis=-1)
+
+    return experts, params, router_fn
+
+
+# --- (a) DispatchPlan invariants --------------------------------------------
+
+
+def _check_plan(plan: DispatchPlan, b: int, k: int, num_experts: int):
+    n = b * k
+    idx = np.asarray(plan.slot_idx)
+    sort = np.asarray(plan.sort_order)
+    unsort = np.asarray(plan.unsort_order)
+    off = np.asarray(plan.segment_offsets)
+    assert plan.batch == b and plan.slots_per_sample == k
+    assert plan.num_assignments == n
+    # segment offsets partition exactly the B·k assignments
+    assert off.shape == (num_experts + 1,)
+    assert off[0] == 0 and off[-1] == n
+    assert (np.diff(off) >= 0).all()
+    # unsort is a true inverse permutation (both directions)
+    np.testing.assert_array_equal(sort[unsort], np.arange(n))
+    np.testing.assert_array_equal(unsort[sort], np.arange(n))
+    # sorted segment e contains exactly expert e's assignments
+    flat = idx.reshape(-1)
+    sorted_experts = flat[sort]
+    for e in range(num_experts):
+        seg = sorted_experts[off[e]:off[e + 1]]
+        assert (seg == e).all()
+        assert off[e + 1] - off[e] == int((flat == e).sum())
+    # stable: assignments within a segment keep ascending order
+    for e in range(num_experts):
+        seg_assign = sort[off[e]:off[e + 1]]
+        assert (np.diff(seg_assign) > 0).all()
+
+
+@pytest.mark.parametrize("b,k,num_experts,seed", [
+    (1, 1, 2, 0), (3, 2, 4, 1), (8, 2, 8, 2), (5, 3, 8, 3), (16, 1, 4, 4),
+])
+def test_dispatch_plan_invariants(b, k, num_experts, seed):
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(seed), (b, num_experts)), -1
+    )
+    plan = make_dispatch_plan(probs, k)
+    assert plan.num_experts == num_experts
+    _check_plan(plan, b, k, num_experts)
+
+
+def test_dispatch_plan_degenerate_single_expert_segment():
+    """All assignments to one expert: one full segment, others empty."""
+    idx = jnp.full((4, 2), 3, jnp.int32)
+    plan = plan_from_slots(idx, jnp.full((4, 2), 0.5), 6)
+    off = np.asarray(plan.segment_offsets)
+    np.testing.assert_array_equal(off, [0, 0, 0, 0, 8, 8, 8])
+    _check_plan(plan, 4, 2, 6)
+
+
+def test_tile_plan_preserves_invariants_and_routing():
+    probs = jax.nn.softmax(jax.random.normal(KEY, (5, 4)), -1)
+    plan = make_dispatch_plan(probs, 2)
+    tiled = tile_plan(plan, 2)
+    _check_plan(tiled, 10, 2, 4)
+    # both guidance branches share each sample's routing
+    np.testing.assert_array_equal(
+        np.asarray(tiled.slot_idx[:5]), np.asarray(tiled.slot_idx[5:])
+    )
+    assert tile_plan(plan, 1) is plan
+
+
+def test_full_dispatch_plan_slots_are_experts():
+    w = jax.nn.softmax(jax.random.normal(KEY, (3, 5)), -1)
+    plan = full_dispatch_plan(w)
+    _check_plan(plan, 3, 5, 5)
+    np.testing.assert_array_equal(
+        np.asarray(plan.slot_idx),
+        np.tile(np.arange(5), (3, 1)),
+    )
+    np.testing.assert_allclose(np.asarray(plan.slot_w), np.asarray(w))
+
+
+def test_dispatch_plan_is_a_pytree():
+    probs = jax.nn.softmax(jax.random.normal(KEY, (4, 3)), -1)
+    plan = make_dispatch_plan(probs, 2, uniform=False)
+    leaves, treedef = jax.tree.flatten(plan)
+    assert len(leaves) == 5
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert rebuilt.num_experts == 3 and rebuilt.uniform is False
+
+    @jax.jit
+    def through_jit(p: DispatchPlan):
+        return p.segment_offsets[-1]
+
+    assert int(through_jit(plan)) == 8
+
+
+# --- (b) grouped == gathered parity -----------------------------------------
+
+
+def _run(experts, params, router_fn, cfg, *, b=6, cond=None, null=None):
+    return sample_ensemble(
+        KEY, experts, params, router_fn, (b,) + LATENT,
+        cond=cond, null_cond=null, config=cfg,
+    )
+
+
+def test_grouped_matches_gathered_8expert_top2_cfg():
+    """The acceptance configuration: 8 experts, top-2, CFG on."""
+    experts, params, router_fn = _ensemble(8)
+    text = jax.random.normal(jax.random.PRNGKey(3), (6, 5, 6))
+    cond, null = {"text_emb": text}, {"text_emb": None}
+    base = SamplerConfig(num_steps=6, cfg_scale=4.0, strategy="topk",
+                         top_k=2)
+    gathered = _run(experts, params, router_fn,
+                    dataclasses.replace(base, dispatch="gathered"),
+                    cond=cond, null=null)
+    grouped = _run(experts, params, router_fn,
+                   dataclasses.replace(base, dispatch="grouped"),
+                   cond=cond, null=null)
+    ref = sample_ensemble(KEY, experts, params, router_fn, (6,) + LATENT,
+                          cond=cond, null_cond=null, config=base,
+                          engine="reference")
+    np.testing.assert_allclose(np.asarray(grouped), np.asarray(gathered),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(grouped), np.asarray(ref),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("strategy,cfg_scale,batched", [
+    ("top1", 1.0, True),
+    ("topk", 4.0, False),          # two-pass CFG through the executor
+    ("threshold", 3.0, True),      # batch-uniform plan
+    ("topk", 1.0, True),           # no CFG
+])
+def test_grouped_matches_gathered_variants(strategy, cfg_scale, batched):
+    experts, params, router_fn = _ensemble(4)
+    text = jax.random.normal(jax.random.PRNGKey(5), (3, 5, 6))
+    cond = {"text_emb": text}
+    null = {"text_emb": None} if cfg_scale != 1.0 else None
+    base = SamplerConfig(num_steps=5, cfg_scale=cfg_scale,
+                         strategy=strategy, top_k=2, batched_cfg=batched)
+    outs = {}
+    for d in ("gathered", "grouped"):
+        outs[d] = _run(experts, params, router_fn,
+                       dataclasses.replace(base, dispatch=d),
+                       b=3, cond=cond, null=null)
+    np.testing.assert_allclose(np.asarray(outs["grouped"]),
+                               np.asarray(outs["gathered"]), atol=1e-5)
+
+
+def test_grouped_matches_reference_with_low_noise_gate():
+    experts, params, router_fn = _ensemble(4)
+    cfg = SamplerConfig(num_steps=6, cfg_scale=1.0, strategy="topk",
+                        ddpm_low_noise_only=0.7, dispatch="grouped")
+    grouped = _run(experts, params, router_fn, cfg, b=3)
+    ref = sample_ensemble(
+        KEY, experts, params, router_fn, (3,) + LATENT,
+        config=dataclasses.replace(cfg, dispatch="auto"),
+        engine="reference",
+    )
+    np.testing.assert_allclose(np.asarray(grouped), np.asarray(ref),
+                               atol=1e-5)
+
+
+# --- (c) grouped forward budget ---------------------------------------------
+
+
+def test_grouped_executes_at_most_one_forward_per_resident_expert():
+    """Runtime-counted: only the selected bucket branch executes, so
+    per-step forwards must be ≤ K even though the trace holds every
+    power-of-two bucket branch per expert."""
+    experts, params, router_fn = _ensemble(8)
+    counter = {"n": 0}
+
+    def counted(p, x, t, **cond):
+        jax.debug.callback(lambda: counter.__setitem__("n", counter["n"] + 1))
+        return _shared_apply(p, x, t, **cond)
+
+    rt_experts = [dataclasses.replace(e, apply_fn=counted) for e in experts]
+    steps = 3
+    cfg = SamplerConfig(num_steps=steps, cfg_scale=1.0, strategy="topk",
+                        top_k=2, dispatch="grouped")
+    out = jax.block_until_ready(_run(rt_experts, params, router_fn, cfg, b=6))
+    jax.effects_barrier()          # debug callbacks may trail the arrays
+    assert np.isfinite(np.asarray(out)).all()
+    assert 0 < counter["n"] <= steps * len(experts)
+
+
+# --- (d) backend selection ---------------------------------------------------
+
+
+def test_resolve_dispatch_rules():
+    assert resolve_dispatch("auto", "routed", True) == "gathered"
+    assert resolve_dispatch("auto", "routed", False) == "dense"
+    assert resolve_dispatch("auto", "dense", True) == "dense"
+    assert resolve_dispatch("grouped", "routed", True) == "grouped"
+    with pytest.raises(ValueError, match="unknown dispatch"):
+        resolve_dispatch("ragged", "routed", True)
+    with pytest.raises(ValueError, match="stackable"):
+        resolve_dispatch("grouped", "routed", False)
+    with pytest.raises(ValueError, match="routed execution"):
+        resolve_dispatch("grouped", "dense", True)
+    with pytest.raises(ValueError, match="unknown executor"):
+        make_executor("ragged", apply_fns=[None], params=[None],
+                      stacked_params=None, conv=None)
+
+
+def test_grouped_with_heterogeneous_apply_fns_raises():
+    def other_apply(params, x, t, **_):
+        return 0.4 * x
+
+    experts = [
+        ExpertSpec("h0", "ddpm", "cosine", _shared_apply, 0),
+        ExpertSpec("h1", "fm", "linear", other_apply, 1),
+    ]
+    params = [{"a": jnp.float32(0.9), "b": jnp.float32(0.0)}, None]
+    cfg = SamplerConfig(num_steps=3, cfg_scale=1.0, strategy="threshold",
+                        dispatch="grouped")
+    with pytest.raises(ValueError, match="stackable"):
+        sample_ensemble(KEY, experts, params, None, (2,) + LATENT,
+                        config=cfg)
+
+
+def test_grouped_with_full_strategy_raises():
+    experts, params, router_fn = _ensemble(4)
+    cfg = SamplerConfig(num_steps=3, cfg_scale=1.0, strategy="full",
+                        dispatch="grouped")
+    with pytest.raises(ValueError, match="routed execution"):
+        sample_ensemble(KEY, experts, params, router_fn, (2,) + LATENT,
+                        config=cfg)
+
+
+def test_reference_engine_rejects_dispatch_override():
+    experts, params, router_fn = _ensemble(2)
+    cfg = SamplerConfig(num_steps=3, cfg_scale=1.0, strategy="topk",
+                        dispatch="grouped")
+    with pytest.raises(ValueError, match="reference engine"):
+        sample_ensemble(KEY, experts, params, router_fn, (2,) + LATENT,
+                        config=cfg, engine="reference")
+    # snr_match auto-resolves to the reference engine: an explicit
+    # backend request must fail loudly, not silently run unfused
+    snr = dataclasses.replace(cfg, time_map="snr_match")
+    with pytest.raises(ValueError, match="snr_match"):
+        sample_ensemble(KEY, experts, params, router_fn, (2,) + LATENT,
+                        config=snr)
+
+
+def test_grouped_executor_is_protocol_instance():
+    from repro.core import ExpertExecutor
+    from repro.core.conversion import ConversionConfig
+
+    ex = make_executor("grouped", apply_fns=[_shared_apply],
+                       params=[None], stacked_params={"a": jnp.ones((2,))},
+                       conv=ConversionConfig())
+    assert isinstance(ex, GroupedExecutor)
+    assert isinstance(ex, ExpertExecutor)
+    assert ex.name == "grouped"

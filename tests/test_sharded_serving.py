@@ -93,6 +93,7 @@ def test_multi_shard_parity_toy_two_devices():
     proc = _run_parity()
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert '"parity": "ok"' in proc.stdout
+    assert '"grouped_parity": "ok"' in proc.stdout
     assert '"devices": 2' in proc.stdout
 
 
@@ -225,7 +226,9 @@ def test_flush_coalesces_compatible_requests_and_slices():
     h1 = engine.submit(keys[0], text[:2], 2)
     h2 = engine.submit(keys[1], text[2:3], 1)
     h3 = engine.submit(keys[2], text[3:6], 3)
-    with pytest.raises(RuntimeError):
+    # unflushed handles must fail loudly with an actionable message,
+    # never hand back a None/placeholder result
+    with pytest.raises(RuntimeError, match=r"not yet flushed.*flush\(\)"):
         h1.result()
     merged = engine.flush()
     assert merged == 1                           # one compatible group
