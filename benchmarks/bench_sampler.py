@@ -21,6 +21,12 @@ Measures, for the paper's 8-expert top-2 + CFG serving configuration:
   expert per step.  Budget: executed segment passes ≤ resident experts,
   vs ``B·k·2`` gathered model-rows with batched CFG.
 
+* **quantized expert stores** (``--param-dtype {bf16,int8,fp8}``) — the
+  ``core.param_store`` storage axis: resident expert-param bytes
+  (``ExpertParamStore.nbytes()``, int8 gate ≥ 3.5× smaller than dense
+  fp32), img/s, and max-abs final-latent parity vs the dense store on the
+  same key, recorded under the ``quantized`` section keyed by dtype.
+
 Emits ``name,us_per_call,derived`` CSV rows for the harness and a JSON
 artifact (``BENCH_sampler.json``) via ``--json-out`` / ``write_json`` so
 future PRs can track the perf trajectory.  ``write_json`` merges into an
@@ -111,10 +117,11 @@ def _build():
     return cfg, experts, params, router_fn, text, counter
 
 
-def _sampler_fn(experts, params, router_fn, text, engine, dispatch="auto"):
+def _sampler_fn(experts, params, router_fn, text, engine, dispatch="auto",
+                param_dtype="native"):
     sampler = SamplerConfig(
         num_steps=STEPS, cfg_scale=CFG_SCALE, strategy="topk", top_k=TOP_K,
-        dispatch=dispatch,
+        dispatch=dispatch, param_dtype=param_dtype,
     )
 
     def fn(key):
@@ -136,22 +143,29 @@ def _forwards_per_step(counter, fn) -> float:
     return float(counter["n"])
 
 
-def _time_imgs_per_s(*fns) -> list[tuple[float, bool]]:
-    """Interleaved best-of-REPS timing (min is robust to load spikes)."""
+def _time_imgs_per_s(*fns, return_outputs=False):
+    """Interleaved best-of-REPS timing (min is robust to load spikes).
+
+    ``return_outputs=True`` additionally returns each fn's warm-up output
+    (all computed from ``PRNGKey(0)``, so they are directly comparable —
+    the parity inputs for cross-backend/cross-store sections).
+    """
     jitted = [jax.jit(fn) for fn in fns]
     outs = [jax.block_until_ready(f(jax.random.PRNGKey(0)))
             for f in jitted]                                # compile
+    warm = list(outs)
     times = [[] for _ in fns]
     for r in range(REPS):
         for i, f in enumerate(jitted):
             t0 = time.time()
             outs[i] = jax.block_until_ready(f(jax.random.PRNGKey(r + 1)))
             times[i].append(time.time() - t0)
-    return [
+    res = [
         (BATCH / float(np.min(ts)),
          bool(np.isfinite(np.asarray(out)).all()))
         for ts, out in zip(times, outs)
     ]
+    return (res, warm) if return_outputs else res
 
 
 def _retrace_count(experts, params, router_fn, text, requests=3) -> int:
@@ -172,7 +186,13 @@ def collect() -> dict:
     cfg, experts, params, router_fn, text, counter = _build()
 
     seed_fn = _sampler_fn(experts, params, router_fn, text, "reference")
-    sparse_fn = _sampler_fn(experts, params, router_fn, text, "auto")
+    # dispatch pinned to 'gathered': this section's forwards/step is
+    # counted at TRACE time, and the grouped backend (what 'auto' now
+    # resolves to) traces every power-of-two bucket branch — its runtime
+    # forward count is tracked separately in the 'grouped' section
+    # (--dispatch grouped), with jax.debug.callback counting.
+    sparse_fn = _sampler_fn(experts, params, router_fn, text, "auto",
+                            dispatch="gathered")
 
     seed_fwd = _forwards_per_step(counter, seed_fn)
     sparse_fwd = _forwards_per_step(counter, sparse_fn)
@@ -366,6 +386,67 @@ def collect_dispatch(dispatch: str) -> dict:
     }
 
 
+def _jitter_params(tree, key):
+    """Add small noise to every leaf (defeats §2.5 zero-init layers)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return treedef.unflatten([
+        leaf + 0.02 * jax.random.normal(k, leaf.shape, leaf.dtype)
+        for leaf, k in zip(leaves, keys)
+    ])
+
+
+def collect_quantized(param_dtype: str) -> dict:
+    """Quantized expert-store section (``core.param_store``), vs dense.
+
+    Measures, for the same 8-expert top-2 + CFG ensemble:
+
+    * **resident param bytes** — ``ExpertParamStore.nbytes()`` of the
+      requested storage vs the native (fp32) dense store.  int8 must hit
+      the ≥ 3.5× reduction acceptance gate;
+    * **img/s** vs the dense store on the same dispatch backend,
+      interleaved timing;
+    * **parity** — max |quantized − dense| over the final latents for
+      the same key (the FID-proxy tracked across PRs).
+    """
+    from repro.core.param_store import make_store
+    from repro.models import dit as D
+
+    cfg, experts, params, router_fn, text, counter = _build()
+    # Freshly-initialized DiT experts carry §2.5 zero-init output layers,
+    # which make the forward weight-independent (identically zero final
+    # projection) and the parity metric vacuously 0.  Jitter every leaf
+    # so the recorded parity measures real quantization error.
+    params = [_jitter_params(p, jax.random.PRNGKey(1234 + i))
+              for i, p in enumerate(params)]
+    stacked = D.stack_expert_params(params)
+    dense_bytes = make_store(stacked, dtype="native").nbytes()
+    q_bytes = make_store(stacked, dtype=param_dtype).nbytes()
+
+    dense_fn = _sampler_fn(experts, params, router_fn, text, "routed")
+    quant_fn = _sampler_fn(experts, params, router_fn, text, "routed",
+                           param_dtype=param_dtype)
+    ((dense_ips, dense_ok), (quant_ips, quant_ok)), (out_d, out_q) = \
+        _time_imgs_per_s(dense_fn, quant_fn, return_outputs=True)
+    max_diff = float(jnp.abs(out_q - out_d).max())
+    dense_scale = float(jnp.abs(out_d).max())
+    reduction = dense_bytes / max(q_bytes, 1)
+    return {
+        "param_dtype": param_dtype,
+        "resident_param_bytes": int(q_bytes),
+        "resident_param_bytes_dense": int(dense_bytes),
+        "byte_reduction_vs_dense": reduction,
+        "meets_3p5x_byte_reduction": bool(reduction >= 3.5)
+        if param_dtype in ("int8", "fp8") else None,
+        "img_per_s": quant_ips,
+        "img_per_s_dense": dense_ips,
+        "parity_max_abs_diff_vs_dense": max_diff,
+        "parity_rel_to_dense_latent_scale": max_diff / max(dense_scale,
+                                                          1e-9),
+        "finite": bool(dense_ok and quant_ok),
+    }
+
+
 _LAST: dict = {}
 
 
@@ -418,6 +499,12 @@ def main() -> None:
                     help="benchmark a core.dispatch executor backend "
                          "against the gathered baseline and record it as "
                          "a JSON section")
+    ap.add_argument("--param-dtype", default=None,
+                    choices=("bf16", "int8", "fp8"),
+                    help="benchmark a quantized/cast expert store "
+                         "(core.param_store) against the dense baseline "
+                         "and record it under the 'quantized' JSON "
+                         "section (keyed by dtype)")
     args = ap.parse_args()
     if args.shards > 1:
         # fail fast on a bad flag BEFORE the ~1 min unsharded benchmark
@@ -445,6 +532,24 @@ def main() -> None:
         us = 1e6 / max(sec["img_per_s"], 1e-9)
         print(f"sampler_dispatch_{args.dispatch},{us:.1f},"
               f"fwd/step={sec['expert_forwards_per_step_executed']:.1f}")
+    if args.param_dtype:
+        sec = collect_quantized(args.param_dtype)
+        # sub-merge by dtype so an --param-dtype bf16 rerun doesn't drop
+        # the tracked int8 numbers (write_json merges whole sections).
+        existing: dict = {}
+        if os.path.exists(args.json_out):
+            try:
+                with open(args.json_out) as f:
+                    existing = json.load(f).get("quantized", {}) or {}
+            except (OSError, ValueError):
+                existing = {}
+        existing[args.param_dtype] = sec
+        _LAST["quantized"] = existing
+        us = 1e6 / max(sec["img_per_s"], 1e-9)
+        print(f"sampler_quantized_{args.param_dtype},{us:.1f},"
+              f"bytes={sec['resident_param_bytes']} "
+              f"({sec['byte_reduction_vs_dense']:.2f}x smaller) "
+              f"parity={sec['parity_max_abs_diff_vs_dense']:.3g}")
     path = write_json(args.json_out)
     print(f"# wrote {path}")
 

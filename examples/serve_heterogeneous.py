@@ -6,6 +6,31 @@ directory is empty) and serves batched "prompts" through the ServingEngine
 with the Fig. 2 inference pipeline, reporting latency per strategy.
 
   PYTHONPATH=src python examples/serve_heterogeneous.py --ckpt /tmp/hddm
+
+Quantized expert storage (``--param-dtype``, ``core.param_store``): the
+stacked expert pytree loads into a typed ``ExpertParamStore`` whose
+storage dtype is independent of the checkpoints.  ``int8``/``fp8``
+quantize on load with symmetric per-expert-per-leaf scales, drop the
+full-precision per-expert param list, and dequantize only the *routed*
+slices each step through the fused ``hetero_fuse_dequant`` Pallas
+kernel.  Resident expert-param bytes per stored parameter (fp32
+checkpoints; exact ratios for an 8-expert dit-b2 ensemble are tracked in
+the ``quantized`` section of ``BENCH_sampler.json`` via
+``benchmarks/bench_sampler.py --param-dtype int8``):
+
+  ============  =======================  ==========
+  param_dtype   bytes/param              vs fp32
+  ============  =======================  ==========
+  native/fp32   4                        1.0x
+  bf16          2                        2.0x
+  int8          1 (+4·K/leaf scales)     ~3.99x
+  fp8           1 (+4·K/leaf scales)     ~3.99x
+  ============  =======================  ==========
+
+int8 round-trip error is ≤ 1/254 ≈ 4e-3 of each expert-leaf's absmax
+(sampler outputs stay within FID-proxy tolerance of dense — see
+``tests/test_param_store.py``); fp8 (e4m3) carries ≤ 6.25e-2 element
+relative error.
 """
 
 import argparse
@@ -35,6 +60,13 @@ def main() -> None:
                          "per-sample param gather + vmap, 'grouped' = "
                          "sort-based grouped segment execution (one "
                          "forward per resident expert)")
+    ap.add_argument("--param-dtype", default="native",
+                    choices=("native", "fp32", "bf16", "int8", "fp8"),
+                    help="stacked expert-param storage "
+                         "(core.param_store): int8/fp8 quantize on load "
+                         "(~4x fewer resident bytes, see module "
+                         "docstring) and dequantize routed slices "
+                         "through the fused Pallas kernel")
     args = ap.parse_args()
 
     if not os.path.exists(os.path.join(args.ckpt, "expert0.npz")):
@@ -53,15 +85,19 @@ def main() -> None:
     rcfg = router_b2(num_clusters=4).reduced(latent_size=8)
 
     for strategy in ("top1", "topk", "full"):
-        # routed strategies go through the selected executor backend; the
-        # 'full' strategy runs every expert, where only the dense
-        # executor applies, so it stays on auto.
-        dispatch = args.dispatch if strategy in ("top1", "topk") else "auto"
+        # routed strategies go through the selected executor backend and
+        # param store; the 'full' strategy runs every expert, where only
+        # the dense executor applies (and needs the full-precision
+        # per-expert params), so it stays on auto/native.
+        routed = strategy in ("top1", "topk")
+        dispatch = args.dispatch if routed else "auto"
+        param_dtype = args.param_dtype if routed else "native"
         engine = ServingEngine.from_checkpoint_dir(
             args.ckpt, dit_cfg=dit_cfg, router_cfg=rcfg,
             sampler=SamplerConfig(num_steps=args.steps, cfg_scale=1.0,
                                   strategy=strategy, top_k=2,
-                                  dispatch=dispatch),
+                                  dispatch=dispatch,
+                                  param_dtype=param_dtype),
         )
         objectives = [e.objective for e in engine.experts]
         lat = []
@@ -79,7 +115,7 @@ def main() -> None:
         # first request includes compile; report steady-state
         steady = np.mean(lat[1:]) if len(lat) > 1 else lat[0]
         print(f"strategy={strategy:5s} dispatch={dispatch:8s} "
-              f"experts={objectives} "
+              f"params={param_dtype:6s} experts={objectives} "
               f"first={lat[0]:.2f}s steady={steady:.2f}s "
               f"({args.batch/steady:.1f} img/s)")
 

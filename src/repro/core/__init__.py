@@ -37,6 +37,15 @@ from repro.core.conversion import (
     velocity_scale,
     velocity_to_x0,
 )
+from repro.core.param_store import (
+    EXPERT_AXIS,
+    PARAM_DTYPES,
+    DenseStore,
+    ExpertParamStore,
+    QuantizedStore,
+    as_store,
+    make_store,
+)
 from repro.core.dispatch import (
     DISPATCH_BACKENDS,
     DenseExecutor,

@@ -12,9 +12,11 @@ Three mechanisms realize that here:
   along the batch axis (null conditioning expressed via the model's
   ``drop_mask``), so guidance costs one expert forward instead of two;
 * **routed-expert-only execution** — homogeneous-architecture expert
-  params are stacked into one pytree (``models.dit.stack_expert_params``)
-  and each step builds a ``core.dispatch.DispatchPlan`` from the router
-  posterior, then executes only the routed experts through a pluggable
+  params stack into a typed ``core.param_store.ExpertParamStore``
+  (dense, or int8/fp8-quantized via ``SamplerConfig.param_dtype`` with
+  dequant fused into the hot path) and each step builds a
+  ``core.dispatch.DispatchPlan`` from the router posterior, then
+  executes only the routed experts through a pluggable
   ``ExpertExecutor`` backend (``SamplerConfig.dispatch``): per-sample
   gather+vmap (``gathered``), sort-based grouped segment execution
   (``grouped``), or the heterogeneous dense fallback (``dense``);
@@ -55,6 +57,7 @@ from repro.core.fusion import (
     fusion_weights,
     unified_expert_velocities,
 )
+from repro.core.param_store import as_store, make_store
 from repro.core.schedules import get_schedule
 
 Array = jax.Array
@@ -89,11 +92,21 @@ class SamplerConfig:
     #: the two-pass formulation when the cond dicts cannot be batched.
     batched_cfg: bool = True
     #: expert-dispatch backend for routed execution (``core.dispatch``):
-    #: 'auto' (gathered when params stack, dense otherwise) | 'gathered'
+    #: 'auto' (grouped when params stack — 1.22x faster per
+    #: BENCH_sampler.json and bounded by resident experts; gathered for
+    #: batch-uniform threshold plans; dense otherwise) | 'gathered'
     #: (per-sample param gather + vmap) | 'grouped' (sort-based grouped
     #: segment execution, one forward per resident expert) | 'dense'
     #: (every expert via its own apply_fn).
     dispatch: str = "auto"
+    #: storage dtype of the stacked expert params
+    #: (``core.param_store.PARAM_DTYPES``): 'native' keeps checkpoint
+    #: precision (bit-identical DenseStore — the default), 'fp32'/'bf16'
+    #: cast dense storage, 'int8'/'fp8' quantize with per-expert
+    #: symmetric scales and dequantize routed slices through the fused
+    #: ``hetero_fuse_dequant`` Pallas kernel (~4x / ~4x fewer resident
+    #: expert-param bytes vs fp32).
+    param_dtype: str = "native"
 
 
 def cfg_combine(cond_pred: Array, uncond_pred: Array, scale: float) -> Array:
@@ -130,7 +143,7 @@ def params_are_stackable(params: Sequence) -> bool:
 def _resolve_engine(
     engine: str,
     experts: Sequence[ExpertSpec],
-    params: Sequence,
+    params: Sequence | None,
     config: SamplerConfig,
 ) -> str:
     if engine not in ("auto", "routed", "dense", "reference"):
@@ -160,9 +173,13 @@ def _resolve_engine(
             )
         return "reference"
     K = len(experts)
+    # params=None means the caller holds stacked params only as an
+    # ExpertParamStore (e.g. a quantized serving engine that dropped the
+    # full-precision per-expert list); a store is stackable by
+    # construction.
     homogeneous = K == 1 or (
         all(e.apply_fn is experts[0].apply_fn for e in experts)
-        and params_are_stackable(params)
+        and (params is None or params_are_stackable(params))
     )
     routed_ok = K > 1 and (
         (config.strategy in ("top1", "topk") and homogeneous)
@@ -271,21 +288,34 @@ def _sample_fused(
     else:
         k_slots, uniform = K, False
 
-    # Routed dispatch substrate: callers that keep long-lived stacked
-    # params (ServingEngine) pass them in; otherwise stack once per trace.
-    # _resolve_engine already guaranteed stackability for per-sample
-    # routing; the batch-uniform threshold path re-checks because it also
-    # serves heterogeneous expert sets (via the dense executor's switch).
-    stacked = stacked_params
+    # Routed dispatch substrate, resolved to a typed ExpertParamStore
+    # (core.param_store): callers that keep long-lived stacked params
+    # (ServingEngine) pass a store — or the legacy raw stacked pytree —
+    # in; otherwise the per-expert list stacks once per trace, into the
+    # storage dtype requested by ``config.param_dtype`` (quantized stores
+    # dequantize routed slices through the fused hetero_fuse_dequant
+    # kernel).  _resolve_engine already guaranteed stackability for
+    # per-sample routing; the batch-uniform threshold path re-checks
+    # because it also serves heterogeneous expert sets (via the dense
+    # executor's switch).
+    stacked = as_store(stacked_params, dtype=config.param_dtype)
+    if stacked is None and params is None:
+        raise ValueError(
+            "params=None requires stacked_params (an ExpertParamStore or "
+            "raw stacked pytree)"
+        )
     if stacked is None and mode == "routed" and homogeneous and (
         not uniform or params_are_stackable(params)
     ):
-        stacked = _stack_params(params)
+        stacked = make_store(_stack_params(params),
+                             dtype=config.param_dtype)
 
     # Pluggable expert-dispatch backend (core.dispatch): the executor owns
     # HOW routed forwards run; the plan built per step owns WHICH experts
     # run; CFG orchestration below is shared across all backends.
-    backend = resolve_dispatch(config.dispatch, mode, stacked is not None)
+    backend = resolve_dispatch(
+        config.dispatch, mode, stacked is not None, uniform,
+    )
     executor = make_executor(
         backend,
         apply_fns=[e.apply_fn for e in experts],
@@ -426,7 +456,7 @@ def _sample_reference(
 def sample_ensemble(
     key: jax.Array,
     experts: Sequence[ExpertSpec],
-    params: Sequence,
+    params: Sequence | None,
     router_fn: Callable[[Array, Array], Array] | None,
     shape: tuple[int, ...],
     *,
@@ -452,12 +482,16 @@ def sample_ensemble(
         (required for ``time_map='snr_match'``, kept for parity tests).
       init_noise: optional pre-drawn ``N(0,1)`` latents of ``shape`` (lets
         serving donate the buffer); drawn from ``key`` when omitted.
-      stacked_params: optional pre-stacked expert params (leaves
-        ``(K, ...)``, see ``models.dit.stack_expert_params``) so
+      stacked_params: optional pre-stacked expert params — an
+        ``ExpertParamStore`` (``core.param_store``; quantized stores keep
+        int8/fp8 leaves resident and dequantize routed slices through the
+        fused kernel) or the legacy raw stacked pytree (leaves
+        ``(K, ...)``, see ``models.dit.stack_expert_params``) — so
         long-lived engines don't re-stack per compiled cache entry.  May
         arrive device_put on an ("expert", "data") mesh — the routed
         gather then resolves via an all-gather of the selected experts'
-        shards (expert-parallel serving, ``launch.serve``).
+        shards (expert-parallel serving, ``launch.serve``).  When given,
+        ``params`` may be None (routed execution only).
       latent_sharding: optional ``NamedSharding`` for the evolving latent
         state; the fused engine re-constrains x to it every Euler step so
         the batch stays on the mesh "data" axis under sharded serving.
@@ -471,6 +505,12 @@ def sample_ensemble(
     cond = cond or {}
     config = config if config is not None else SamplerConfig()
     mode = _resolve_engine(engine, experts, params, config)
+    if params is None and mode == "reference":
+        raise ValueError(
+            "the reference engine runs each expert from its own params "
+            "list; params=None (store-only serving) supports the fused "
+            "engines only"
+        )
     if mode == "reference":
         return _sample_reference(
             key, experts, params, router_fn, shape, cond, null_cond,

@@ -12,7 +12,7 @@ a (K, B) operand), and writes only the fused velocity.
 Grid: (B, T/block_t); the expert axis K is kept whole inside the block
 (K ≤ 8 in the paper).
 
-Two entry points share the kernel math:
+Three entry points share the module's dispatch policy:
 
 * :func:`hetero_fuse` — per-expert objective flags + raw schedule coeffs
   (the original dense-ensemble signature);
@@ -20,7 +20,14 @@ Two entry points share the kernel math:
   coefficient stack with FM experts already folded to the identity
   coefficients ``(1, 0, 0, 1, 1)`` (see ``conversion.unified_coeff_tables``),
   so the kernel needs no flag select and the K axis can hold *routed slots*
-  (per-sample gathered experts) instead of the full ensemble.
+  (per-sample gathered experts) instead of the full ensemble;
+* :func:`hetero_fuse_dequant` — the quantized-expert companion on the same
+  hot path: expands an int8/fp8 gathered/sliced param view to compute
+  precision by applying the symmetric per-row ``scale · q`` inline
+  (``core.param_store.QuantizedStore``).  One kernel launch per leaf
+  replaces the ``astype`` + broadcast-multiply HLO pair, and because it
+  runs on the *gathered* slice, the stacked quantized leaves never
+  round-trip through HBM at full precision.
 """
 
 from __future__ import annotations
@@ -110,6 +117,47 @@ def hetero_fuse_coeffs(
         out_shape=jax.ShapeDtypeStruct((b, t), preds.dtype),
         interpret=interpret,
     )(preds, x_t, weights, coef.astype(jnp.float32))
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[0].astype(jnp.float32)                  # (bt,)
+    s = s_ref[0].astype(jnp.float32)                  # per-row scale
+    o_ref[0] = (q * s).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_dtype", "block_t", "interpret")
+)
+def hetero_fuse_dequant(
+    q: Array,         # (R, T) quantized values (int8 / float8_e4m3fn)
+    scale: Array,     # (R,) symmetric per-row scales
+    *,
+    out_dtype=jnp.float32,
+    block_t: int = 1024,
+    interpret: bool = False,
+) -> Array:
+    """Fused ``scale · q`` dequantization of a row-major quantized view.
+
+    Rows are whatever the caller gathered: ``B`` per-sample experts, one
+    static expert slice, or the full ``K`` stack (off-hot-path
+    materialize).  The scale broadcast happens inside the kernel, so the
+    quantized bytes are read once and only the compute-precision result
+    is written.
+    """
+    r, t = q.shape
+    block_t = min(block_t, t)
+    assert t % block_t == 0
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(r, t // block_t),
+        in_specs=[
+            pl.BlockSpec((1, block_t), lambda ri, ti: (ri, ti)),
+            pl.BlockSpec((1,), lambda ri, ti: (ri,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t), lambda ri, ti: (ri, ti)),
+        out_shape=jax.ShapeDtypeStruct((r, t), out_dtype),
+        interpret=interpret,
+    )(q, scale)
 
 
 @functools.partial(

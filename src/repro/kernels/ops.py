@@ -22,6 +22,7 @@ from repro.kernels.adaln_fuse import adaln_fuse as _adaln_fuse
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.hetero_fuse import hetero_fuse as _hetero_fuse
 from repro.kernels.hetero_fuse import hetero_fuse_coeffs as _hetero_fuse_coeffs
+from repro.kernels.hetero_fuse import hetero_fuse_dequant as _hetero_fuse_dequant
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 Array = jax.Array
@@ -122,6 +123,48 @@ def fused_velocity(
             pf, xf, weights, coef, clamp=clamp, alpha_min=alpha_min,
         )
     return out.reshape((b,) + latent_shape)
+
+
+#: dequant tile width — multiple of the 128-lane VPU width; leaves smaller
+#: than one tile pad up to the next 128 multiple instead.
+_DEQUANT_BLOCK = 1024
+
+
+def dequant_params(
+    q: Array,                 # (R, ...) quantized leaf view (int8 / fp8)
+    scale: Array,             # (R,) symmetric per-row scales
+    *,
+    out_dtype=jnp.float32,
+) -> Array:
+    """Fused ``scale · q`` dequantization of a gathered/sliced param leaf.
+
+    The hot-path expansion step for ``core.param_store.QuantizedStore``:
+    rows are whatever was gathered (per-sample experts, a static expert
+    slice, or the full stack for off-path ``materialize``); trailing dims
+    flatten into the kernel's tile axis and pad up to the tile width.
+    Pallas (``hetero_fuse_dequant``) on TPU, oracle elsewhere.
+    """
+    q = jnp.asarray(q)
+    rows = q.shape[0]
+    trailing = q.shape[1:]
+    qf = q.reshape(rows, -1) if trailing else q.reshape(rows, 1)
+    t = qf.shape[1]
+    if use_pallas():
+        if t <= _DEQUANT_BLOCK:
+            tp = -(-t // 128) * 128
+            block = tp
+        else:
+            tp = -(-t // _DEQUANT_BLOCK) * _DEQUANT_BLOCK
+            block = _DEQUANT_BLOCK
+        if tp != t:
+            qf = jnp.pad(qf, ((0, 0), (0, tp - t)))
+        out = _hetero_fuse_dequant(
+            qf, scale, out_dtype=out_dtype, block_t=block,
+            interpret=_interpret(),
+        )[:, :t]
+    else:
+        out = _ref.ref_hetero_fuse_dequant(qf, scale).astype(out_dtype)
+    return out.reshape((rows,) + trailing)
 
 
 def fused_convert_and_fuse(

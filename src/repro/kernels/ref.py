@@ -95,6 +95,14 @@ def ref_hetero_fuse(
     return jnp.sum(w * v, axis=0)
 
 
+def ref_hetero_fuse_dequant(
+    q: Array,            # (R, T) quantized values (int8 / float8_e4m3fn)
+    scale: Array,        # (R,) symmetric per-row scales
+) -> Array:
+    """Oracle for the fused ``scale · q`` dequantization op."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[:, None]
+
+
 def ref_hetero_fuse_coeffs(
     preds: Array,        # (K, B, T) native predictions of the routed slots
     x_t: Array,          # (B, T)

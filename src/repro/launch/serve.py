@@ -25,6 +25,14 @@ Serving properties:
   params resolve from *static* expert slices of the stacked pytree, so
   each shard executes its resident experts' groups without a per-sample
   params all-gather.
+* **quantized experts** — ``SamplerConfig.param_dtype`` (CLI
+  ``--param-dtype``) stores the stacked expert pytree as a typed
+  ``core.param_store.ExpertParamStore``: ``int8``/``fp8`` quantize on
+  load with per-expert symmetric scales (~4x fewer resident expert-param
+  bytes than fp32), the full-precision per-expert list is dropped, and
+  routed slices dequantize through the fused ``hetero_fuse_dequant``
+  Pallas kernel — stacked leaves never round-trip through HBM at full
+  precision.
 * **retrace-free** — ``ServingEngine`` caches a jitted sampling function
   per (batch size, latent shape, sampler config, conditioning signature)
   with the noise buffer donated, so repeated requests with the same shape
@@ -79,8 +87,10 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import (
+    DenseStore,
     ExpertSpec,
     SamplerConfig,
+    make_store,
     params_are_stackable,
     sample_ensemble,
 )
@@ -144,12 +154,48 @@ class ServingEngine:
             all(e.apply_fn is self.experts[0].apply_fn for e in self.experts)
             and params_are_stackable(self.expert_params)
         )
-        # Stacked single-pytree expert params: the routed engine's dispatch
-        # substrate (kept alongside the per-expert list for the fallback).
-        self.stacked_params = (
-            D.stack_expert_params(self.expert_params)
+        # Typed stacked-expert store (core.param_store): the routed
+        # engine's dispatch substrate.  ``sampler.param_dtype`` selects
+        # the storage — 'native' keeps checkpoint precision
+        # (bit-identical), 'int8'/'fp8' quantize with per-expert scales
+        # (~4x fewer resident expert-param bytes vs fp32).
+        pd = self.sampler.param_dtype
+        quantized = pd in ("int8", "fp8")
+        if pd != "native":
+            # The store only serves ROUTED execution: a dense/reference
+            # engine (heterogeneous set, strategy='full', single expert,
+            # engine override) runs from the per-expert params list at
+            # native precision — accepting param_dtype there would either
+            # lie about resident bytes (cast dtypes: unused store built
+            # next to the fp32 list) or construct an engine whose every
+            # generate() fails later (quantized dtypes drop that list).
+            # Reject at construction, where strategy/engine are known.
+            routed_capable = (
+                self.homogeneous and len(self.experts) > 1
+                and self.sampler.strategy in ("top1", "topk", "threshold")
+                and self.engine in ("auto", "routed")
+            )
+            if not routed_capable:
+                raise ValueError(
+                    f"param_dtype={pd!r} changes the stacked expert "
+                    f"store's storage, which only routed execution uses: "
+                    f"it needs a homogeneous ensemble of ≥ 2 experts "
+                    f"(shared apply_fn + stackable params), strategy in "
+                    f"top1/topk/threshold, and engine auto/routed — got "
+                    f"{len(self.experts)} expert(s), homogeneous="
+                    f"{self.homogeneous}, strategy="
+                    f"{self.sampler.strategy!r}, engine={self.engine!r}"
+                )
+        self.param_store = (
+            make_store(D.stack_expert_params(self.expert_params), dtype=pd)
             if self.homogeneous and self.expert_params else None
         )
+        if quantized:
+            # The quantized store IS the resident representation: drop
+            # the full-precision per-expert list so the ~4x byte saving
+            # is real, not an extra copy.  (The dense fallback and the
+            # reference engine need that list; they raise clearly.)
+            self.expert_params = None
         self.mesh = None
         if self.n_expert_shards != 1 or self.n_data_shards is not None:
             if self.n_expert_shards > 1 and \
@@ -164,15 +210,30 @@ class ServingEngine:
                 )
             self.mesh = make_expert_mesh(self.n_expert_shards,
                                          self.n_data_shards)
-            if self.stacked_params is not None:
-                self.stacked_params = jax.device_put(
-                    self.stacked_params,
+            if self.param_store is not None:
+                # Stores are registered pytrees: the quantized scales are
+                # (K,) leaves annotated with the same leading "expert"
+                # axis, so they shard with the leaves they rescale.
+                self.param_store = jax.device_put(
+                    self.param_store,
                     expert_param_shardings(
-                        self.stacked_params, self.mesh,
-                        logical_axes=D.stacked_param_logical_axes(
-                            self.stacked_params),
+                        self.param_store, self.mesh,
+                        logical_axes=self.param_store.logical_axes(),
                     ),
                 )
+
+    @property
+    def stacked_params(self):
+        """Back-compat view of the dispatch substrate.
+
+        Dense stores expose their raw stacked pytree (the pre-store
+        convention); quantized stores return the store itself — reading
+        full-precision stacked leaves out of a quantized engine would
+        defeat its resident-byte budget.
+        """
+        if isinstance(self.param_store, DenseStore):
+            return self.param_store.stacked
+        return self.param_store
 
     @classmethod
     def from_checkpoint_dir(
@@ -180,6 +241,7 @@ class ServingEngine:
         router_cfg: DiTConfig | None = None,
         sampler: SamplerConfig | None = None,
         engine: str = "auto",
+        param_dtype: str | None = None,
         n_expert_shards: int = 1,
         n_data_shards: int | None = None,
     ) -> "ServingEngine":
@@ -191,6 +253,12 @@ class ServingEngine:
         ``sorted(glob(...))`` would load ``expert10`` before ``expert2``
         and silently scramble the router's positional cluster→expert
         mapping.  Duplicate or non-contiguous cluster ids raise.
+
+        ``param_dtype`` (overrides ``sampler.param_dtype`` when given)
+        selects the stacked-store storage: ``'int8'``/``'fp8'`` quantize
+        **on load** and drop the full-precision per-expert list, so an
+        8-expert ensemble holds ~¼ the resident expert-param bytes of
+        the fp32 checkpoints it was assembled from.
         """
         apply_fn = D.make_expert_apply(dit_cfg)
         paths = glob.glob(os.path.join(ckpt_dir, "expert*.npz"))
@@ -239,11 +307,14 @@ class ServingEngine:
         if router_cfg is not None and os.path.exists(router_path):
             rp, _ = load_checkpoint(router_path)
             router_fn = D.make_router_fn(router_cfg, rp)
+        sampler = sampler if sampler is not None else SamplerConfig()
+        if param_dtype is not None:
+            sampler = dataclasses.replace(sampler, param_dtype=param_dtype)
         return cls(
             experts=experts, expert_params=params, router_fn=router_fn,
             latent_shape=(dit_cfg.latent_size, dit_cfg.latent_size,
                           dit_cfg.latent_channels),
-            sampler=sampler if sampler is not None else SamplerConfig(),
+            sampler=sampler,
             engine=engine,
             n_expert_shards=n_expert_shards, n_data_shards=n_data_shards,
         )
@@ -287,7 +358,7 @@ class ServingEngine:
                     key, self.experts, self.expert_params, self.router_fn,
                     shape, cond=cond, null_cond=null, config=self.sampler,
                     engine=self.engine, init_noise=noise,
-                    stacked_params=self.stacked_params,
+                    stacked_params=self.param_store,
                     latent_sharding=latent_sharding,
                     plan_sharding=plan_sharding,
                 )
@@ -434,6 +505,13 @@ def main() -> None:
                     help="expert-dispatch executor backend "
                          "(core.dispatch): per-sample gather+vmap vs "
                          "sort-based grouped segment execution")
+    ap.add_argument("--param-dtype", default="native",
+                    choices=("native", "fp32", "bf16", "int8", "fp8"),
+                    help="stacked expert-param storage "
+                         "(core.param_store): int8/fp8 quantize on load "
+                         "with per-expert scales and dequantize routed "
+                         "slices through the fused Pallas kernel "
+                         "(~4x fewer resident expert-param bytes)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--latent-size", type=int, default=8)
     ap.add_argument("--expert-shards", type=int, default=1)
@@ -453,7 +531,7 @@ def main() -> None:
         sampler=SamplerConfig(
             num_steps=args.steps, cfg_scale=args.cfg_scale,
             strategy=args.strategy, top_k=args.top_k,
-            dispatch=args.dispatch,
+            dispatch=args.dispatch, param_dtype=args.param_dtype,
         ),
         engine=args.engine,
         n_expert_shards=args.expert_shards, n_data_shards=args.data_shards,

@@ -12,6 +12,11 @@ and asserts, for the same seed:
      (atol 1e-5) — each shard executes its resident experts' groups
   5. cross-request batching on the sharded engine: coalesced
      submit()/flush() slices == per-request generate() outputs
+  6. quantized expert store (core.param_store, param_dtype='int8') on
+     the expert-sharded mesh: every per-expert scale array shards over
+     the "expert" axis together with the int8 leaf it rescales (each
+     shard holds K/ndev scale entries), and sampling matches the dense
+     unsharded engine (atol 1e-4 — the toy leaves quantize exactly)
 
 ``--dit`` swaps the toy closed-form experts for real (reduced) DiT
 experts — slower, exercised by the slow-marked test variant.
@@ -36,6 +41,7 @@ if "jax" not in sys.modules:
         ).strip()
 
 import argparse
+import dataclasses
 import json
 
 import jax
@@ -163,8 +169,7 @@ def main() -> None:
     #    experts would dominate the slow-variant's subprocess budget).
     grouped_checked = not args.dit
     if grouped_checked:
-        import dataclasses as _dc
-        gsampler = _dc.replace(sampler, dispatch="grouped")
+        gsampler = dataclasses.replace(sampler, dispatch="grouped")
         for shards in ((ndev, 1), (1, ndev)):
             gsh = _engine(experts, params, router_fn, latent, gsampler,
                           n_expert_shards=shards[0], n_data_shards=shards[1])
@@ -183,11 +188,40 @@ def main() -> None:
     np.testing.assert_allclose(np.asarray(h1.result()), r1, atol=1e-5)
     np.testing.assert_allclose(np.asarray(h2.result()), r2, atol=1e-5)
 
+    # 6. quantized expert store (core.param_store) on the expert mesh:
+    #    every per-expert scale array shards over the "expert" axis
+    #    together with the int8 leaf it rescales, and the quantized
+    #    engine matches the dense unsharded baseline.
+    quantized_checked = not args.dit
+    if quantized_checked:
+        qsampler = dataclasses.replace(sampler, param_dtype="int8")
+        qsh = _engine(experts, params, router_fn, latent, qsampler,
+                      n_expert_shards=ndev, n_data_shards=1)
+        assert qsh.expert_params is None, \
+            "quantized engine must drop the full-precision per-expert list"
+        store = qsh.param_store
+        k_experts = store.num_experts
+        for q, s in zip(jax.tree.leaves(store.qvals),
+                        jax.tree.leaves(store.scales)):
+            assert q.sharding.spec[0] == "expert", q.sharding
+            assert s.sharding.spec[0] == "expert", (
+                f"scale array must shard with its leaf on the expert "
+                f"axis, got {s.sharding}"
+            )
+            local = s.addressable_shards[0].data.shape[0]
+            assert local == k_experts // ndev, (
+                f"each shard must hold K/ndev={k_experts // ndev} scale "
+                f"entries, got {local}"
+            )
+        out = np.asarray(qsh.generate(KEY, text, args.batch))
+        np.testing.assert_allclose(out, ref, atol=1e-4)
+
     print(json.dumps({
         "devices": ndev, "dit": bool(args.dit),
         "batch": args.batch, "steps": args.steps,
         "parity": "ok",
         "grouped_parity": "ok" if grouped_checked else "skipped",
+        "quantized_parity": "ok" if quantized_checked else "skipped",
         "coalesced_requests": esh.stats["batched_requests"],
         "merged_batches": esh.stats["merged_batches"],
     }))

@@ -249,7 +249,14 @@ def cache_specs(cfg: LMConfig, mesh: Mesh, cache: dict, batch: int) -> dict:
 def expert_param_specs(
     stacked: Any, mesh: Mesh, *, logical_axes: Any = None
 ) -> Any:
-    """PartitionSpec pytree for a *stacked* expert pytree (leaves ``(K, ...)``).
+    """PartitionSpec pytree for stacked expert params (leaves ``(K, ...)``).
+
+    Accepts a raw stacked pytree or any ``core.param_store.
+    ExpertParamStore`` (stores are registered pytrees): a quantized
+    store's per-expert scale arrays are just more ``(K,)`` leaves, so
+    they shard over the mesh "expert" axis **together with the int8/fp8
+    leaves they rescale** — a static expert slice resolves both from the
+    same resident shard.
 
     The leading expert axis shards over the mesh's "expert" axis so each
     device group holds only ``K / n_expert_shards`` resident experts; all
@@ -258,10 +265,11 @@ def expert_param_specs(
     the expert axis of just those slices.
 
     ``logical_axes`` optionally supplies per-leaf axis-name annotations
-    (see ``models.dit.stacked_param_logical_axes``); by default every leaf
-    is assumed to carry the stacked layout's leading "expert" axis.
-    Non-divisible K falls back to replication (``sanitize_spec``), which
-    keeps the degenerate 1-shard mesh bit-identical to unsharded serving.
+    (``models.dit.stacked_param_logical_axes`` / ``ExpertParamStore.
+    logical_axes``); by default every leaf is assumed to carry the
+    stacked layout's leading "expert" axis.  Non-divisible K falls back
+    to replication (``sanitize_spec``), which keeps the degenerate
+    1-shard mesh bit-identical to unsharded serving.
     """
     leaves, treedef = jax.tree.flatten(stacked)
     if logical_axes is None:

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.config import DiTConfig
+from repro.core.param_store import DenseStore, ExpertParamStore
+from repro.core.param_store import EXPERT_AXIS as EXPERT_AXIS  # re-export
 from repro.core.schedules import to_ddpm_timestep
 
 Array = jax.Array
@@ -316,54 +318,45 @@ def stack_expert_params(params_list):
     """Stack K homogeneous-architecture expert pytrees into one pytree.
 
     Every leaf gains a leading expert axis ``(K, ...)``.  This is the
-    precondition for the sampler's routed-expert-only execution: per-step
-    dispatch becomes a gather (``gather_expert_params`` /
-    ``jax.lax.dynamic_index_in_dim``) instead of a Python loop over all
-    resident experts.  Raises if structures or leaf shapes differ — callers
-    should check ``repro.core.params_are_stackable`` first and fall back to
-    the dense path for heterogeneous expert sets.
+    precondition for the sampler's routed-expert-only execution, and the
+    raw material for a typed ``core.param_store.ExpertParamStore``
+    (``make_store`` wraps the result dense or int8/fp8-quantized).
+    Raises if structures or leaf shapes differ — callers should check
+    ``repro.core.params_are_stackable`` first and fall back to the dense
+    path for heterogeneous expert sets.
     """
     if len(params_list) == 1:
         return jax.tree.map(lambda x: jnp.asarray(x)[None], params_list[0])
     return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
 
 
-#: Mesh-axis name carrying the stacked pytree's leading expert dimension
-#: (see ``launch.mesh.make_expert_mesh`` / ``launch.sharding.
-#: expert_param_specs``).
-EXPERT_AXIS = "expert"
-
-
 def stacked_param_logical_axes(stacked):
-    """Logical sharding annotation for a stacked expert pytree.
+    """Logical sharding annotation for stacked expert params.
 
-    Every leaf of ``stack_expert_params`` output is ``(K, ...)`` with the
-    leading dim indexing experts: annotate it with ``EXPERT_AXIS`` and
-    replicate the trailing weight dims.  ``launch.sharding.
-    expert_param_specs`` turns these names into mesh ``PartitionSpec``s;
-    keeping the annotation next to the stacking code means a layout change
-    here cannot silently diverge from the serving placement rules.
+    Thin delegator to ``ExpertParamStore.logical_axes`` — the annotation
+    lives with the storage layout now, so quantized stores' per-expert
+    scales automatically ride the same leading ``EXPERT_AXIS`` as the
+    leaves they rescale.  Accepts a store or the raw stacked pytree
+    (wrapped in a bit-identical ``DenseStore``); returns a
+    structure-matching pytree of axis-name tuples either way
+    (``launch.sharding.expert_param_specs`` consumes it).
     """
-    return jax.tree.map(
-        lambda x: (EXPERT_AXIS,) + (None,) * (x.ndim - 1), stacked
-    )
+    if isinstance(stacked, ExpertParamStore):
+        return stacked.logical_axes()
+    return DenseStore.from_stacked(stacked).logical_axes().stacked
 
 
 def gather_expert_params(stacked, expert_idx: Array):
     """Gather per-sample expert params from a stacked pytree.
 
-    ``expert_idx`` is ``(B,)`` (per-sample routing — leaves become
-    ``(B, ...)``, for a vmapped apply) or a scalar (batch-uniform routing —
-    one expert's params, for a plain apply).
+    Delegates to ``core.param_store``: ``expert_idx`` is ``(B,)``
+    (per-sample routing — leaves become ``(B, ...)``, for a vmapped
+    apply) or a scalar (batch-uniform routing — one expert's params, for
+    a plain apply).  Accepts a store or the raw stacked pytree.
     """
-    idx = jnp.asarray(expert_idx)
-    if idx.ndim == 0:
-        return jax.tree.map(
-            lambda s: jax.lax.dynamic_index_in_dim(s, idx, 0,
-                                                   keepdims=False),
-            stacked,
-        )
-    return jax.tree.map(lambda s: s[idx], stacked)
+    store = stacked if isinstance(stacked, ExpertParamStore) \
+        else DenseStore.from_stacked(stacked)
+    return store.gather(expert_idx)
 
 
 def make_expert_apply(cfg: DiTConfig):

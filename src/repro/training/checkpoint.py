@@ -67,9 +67,28 @@ def save_checkpoint(
 
 
 def load_checkpoint(path: str) -> tuple[Any, dict]:
+    """Load a ``save_checkpoint`` artifact, failing with *named* errors.
+
+    A missing file raises ``FileNotFoundError`` naming the resolved path
+    and a missing ``__metadata__`` entry raises ``ValueError`` naming the
+    file — never an opaque ``KeyError`` from deep inside ``np.load``
+    (decentralized contributors hand us arbitrary npz files; the error
+    must say which file is wrong and why).
+    """
     if not path.endswith(".npz"):
         path = path + ".npz"
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"checkpoint not found: {path} (expected an .npz written by "
+            f"repro.training.save_checkpoint)"
+        )
     with np.load(path, allow_pickle=False) as z:
+        if "__metadata__" not in z.files:
+            raise ValueError(
+                f"{path}: missing '__metadata__' entry — not a "
+                f"save_checkpoint artifact (archive keys: "
+                f"{sorted(z.files)[:5]}{'...' if len(z.files) > 5 else ''})"
+            )
         meta = json.loads(str(z["__metadata__"]))
         flat = {k: z[k] for k in z.files if k != "__metadata__"}
     return _unflatten(flat), meta

@@ -259,9 +259,19 @@ def test_grouped_executes_at_most_one_forward_per_resident_expert():
 
 
 def test_resolve_dispatch_rules():
-    assert resolve_dispatch("auto", "routed", True) == "gathered"
+    # auto prefers grouped when params stack (1.22x per BENCH_sampler
+    # grouped section, forwards bounded by resident experts) ...
+    assert resolve_dispatch("auto", "routed", True) == "grouped"
+    # ... but batch-uniform (threshold) plans keep the gathered
+    # scalar-gather path, and non-stackable sets fall back to dense.
+    assert resolve_dispatch("auto", "routed", True, uniform=True) \
+        == "gathered"
     assert resolve_dispatch("auto", "routed", False) == "dense"
+    assert resolve_dispatch("auto", "routed", False, uniform=True) \
+        == "dense"
     assert resolve_dispatch("auto", "dense", True) == "dense"
+    # gathered stays reachable explicitly
+    assert resolve_dispatch("gathered", "routed", True) == "gathered"
     assert resolve_dispatch("grouped", "routed", True) == "grouped"
     with pytest.raises(ValueError, match="unknown dispatch"):
         resolve_dispatch("ragged", "routed", True)
@@ -272,6 +282,40 @@ def test_resolve_dispatch_rules():
     with pytest.raises(ValueError, match="unknown executor"):
         make_executor("ragged", apply_fns=[None], params=[None],
                       stacked_params=None, conv=None)
+    with pytest.raises(ValueError, match="ExpertParamStore"):
+        make_executor("grouped", apply_fns=[None], params=[None],
+                      stacked_params=None, conv=None)
+
+
+def test_auto_dispatch_runs_grouped_and_matches_gathered():
+    """The 'auto' default must now take the grouped path (runtime-counted:
+    ≤ K forwards/step, not B·k vmapped lanes) and stay at parity."""
+    experts, params, router_fn = _ensemble(8)
+    counter = {"n": 0, "rows": 0}
+
+    def counted(p, x, t, **cond):
+        jax.debug.callback(
+            lambda r: (counter.__setitem__("n", counter["n"] + 1),
+                       counter.__setitem__("rows", counter["rows"] + int(r))),
+            x.shape[0],
+        )
+        return _shared_apply(p, x, t, **cond)
+
+    rt_experts = [dataclasses.replace(e, apply_fn=counted) for e in experts]
+    steps, b, k = 3, 6, 2
+    cfg = SamplerConfig(num_steps=steps, cfg_scale=1.0, strategy="topk",
+                        top_k=k)                      # dispatch='auto'
+    out = jax.block_until_ready(_run(rt_experts, params, router_fn, cfg, b=b))
+    jax.effects_barrier()
+    assert np.isfinite(np.asarray(out)).all()
+    # grouped budget: ≤ one executed forward per resident expert per step
+    # (gathered would count B·k vmapped lanes through one call; the
+    # per-call row count would equal b·k only on the gathered path).
+    assert 0 < counter["n"] <= steps * len(experts)
+    gathered = _run(experts, params, router_fn,
+                    dataclasses.replace(cfg, dispatch="gathered"), b=b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gathered),
+                               atol=1e-5)
 
 
 def test_grouped_with_heterogeneous_apply_fns_raises():

@@ -94,6 +94,8 @@ def test_multi_shard_parity_toy_two_devices():
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert '"parity": "ok"' in proc.stdout
     assert '"grouped_parity": "ok"' in proc.stdout
+    # quantized store: scales shard with their leaves on "expert" + parity
+    assert '"quantized_parity": "ok"' in proc.stdout
     assert '"devices": 2' in proc.stdout
 
 
