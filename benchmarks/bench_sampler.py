@@ -27,6 +27,21 @@ Measures, for the paper's 8-expert top-2 + CFG serving configuration:
   fp32), img/s, and max-abs final-latent parity vs the dense store on the
   same key, recorded under the ``quantized`` section keyed by dtype.
 
+* **step fusion + plan reuse** (``--plan-refresh N``, always collected) —
+  the ``core.sampling`` step-fused hot path vs the unfused grouped
+  baseline, two JSON sections:
+
+  - ``fused_step``: img/s of the step-fused sampler (R=1 and R=N),
+    parity vs the unfused path (gate: max-abs diff == 0 at R=1 — the
+    ``hetero_fuse_step`` oracle reuses the exact unfused math), and an
+    HBM-bytes-per-step estimate from XLA's own cost model
+    (``launch.hlo_analysis.compiled_bytes_accessed``); acceptance:
+    img/s ≥ 1.1× the unfused grouped baseline;
+  - ``plan_reuse``: keyed ``R<N>`` (sub-merged like ``quantized``), with
+    per-interval img/s, refreshes/run, and max-abs drift vs per-step
+    routing (the FID-proxy for the router-posteriors-change-slowly
+    premise).
+
 Emits ``name,us_per_call,derived`` CSV rows for the harness and a JSON
 artifact (``BENCH_sampler.json``) via ``--json-out`` / ``write_json`` so
 future PRs can track the perf trajectory.  ``write_json`` merges into an
@@ -118,10 +133,11 @@ def _build():
 
 
 def _sampler_fn(experts, params, router_fn, text, engine, dispatch="auto",
-                param_dtype="native"):
+                param_dtype="native", step_fused=True, plan_refresh=1):
     sampler = SamplerConfig(
         num_steps=STEPS, cfg_scale=CFG_SCALE, strategy="topk", top_k=TOP_K,
         dispatch=dispatch, param_dtype=param_dtype,
+        step_fused=step_fused, plan_refresh_every=plan_refresh,
     )
 
     def fn(key):
@@ -143,14 +159,18 @@ def _forwards_per_step(counter, fn) -> float:
     return float(counter["n"])
 
 
-def _time_imgs_per_s(*fns, return_outputs=False):
+def _time_imgs_per_s(*fns, return_outputs=False, pre_compiled=False):
     """Interleaved best-of-REPS timing (min is robust to load spikes).
 
     ``return_outputs=True`` additionally returns each fn's warm-up output
     (all computed from ``PRNGKey(0)``, so they are directly comparable —
     the parity inputs for cross-backend/cross-store sections).
+    ``pre_compiled=True`` accepts AOT-compiled executables (from
+    ``jax.jit(fn).lower(key).compile()``) and times them as-is, so a
+    caller that also needs the compiled object (cost analysis) pays for
+    exactly one compile.
     """
-    jitted = [jax.jit(fn) for fn in fns]
+    jitted = list(fns) if pre_compiled else [jax.jit(fn) for fn in fns]
     outs = [jax.block_until_ready(f(jax.random.PRNGKey(0)))
             for f in jitted]                                # compile
     warm = list(outs)
@@ -386,6 +406,116 @@ def collect_dispatch(dispatch: str) -> dict:
     }
 
 
+def collect_step_fusion(plan_refresh: int) -> tuple[dict, dict]:
+    """Step-fused hot path + plan-reuse sections, vs the unfused baseline.
+
+    Three samplers on the same grouped 8-expert top-2 + CFG ensemble:
+
+    * **unfused** — ``step_fused=False``, per-step routing: the PR-3/4
+      grouped baseline (``fused_velocity`` → ``cfg_combine`` → Euler as
+      separate ops);
+    * **fused R=1** — the step-fused kernel, per-step routing.  Must be
+      *bit-identical* to unfused (``parity_max_abs_diff == 0``: the
+      oracle delegates to the same convert-and-fuse math);
+    * **fused R=N** — plan recomputed every N-th step only (``--plan-
+      refresh``), the full new hot path.  Drift vs R=1 is the tracked
+      quality proxy.
+
+    Also records an HBM-bytes-per-step estimate for the fused vs unfused
+    executable (``launch.hlo_analysis.compiled_bytes_accessed`` — XLA's
+    own "bytes accessed" cost model, 0.0 where the backend reports none).
+
+    Returns ``(fused_step_section, plan_reuse_section)``; ``plan_reuse``
+    is keyed ``"R<N>"`` so reruns with other refresh intervals merge.
+    """
+    from repro.launch.hlo_analysis import compiled_bytes_accessed
+
+    cfg, experts, params, router_fn, text, counter = _build()
+    mk = functools.partial(_sampler_fn, experts, params, router_fn, text,
+                           "routed", dispatch="grouped")
+    unfused_fn = mk(step_fused=False)
+    fused_fn = mk(step_fused=True)
+
+    # AOT-compile each sampler exactly once: the same executables feed
+    # the timing loop AND XLA's cost analysis.  plan_refresh == 1 IS the
+    # fused R=1 sampler — don't compile and time the same config twice.
+    key0 = jax.random.PRNGKey(0)
+    fns = [unfused_fn, fused_fn]
+    if plan_refresh > 1:
+        fns.append(mk(step_fused=True, plan_refresh=plan_refresh))
+    compiled = [jax.jit(fn).lower(key0).compile() for fn in fns]
+    bytes_unfused = compiled_bytes_accessed(compiled[0])
+    bytes_fused = compiled_bytes_accessed(compiled[1])
+
+    timings, outs = _time_imgs_per_s(
+        *compiled, return_outputs=True, pre_compiled=True)
+    if plan_refresh == 1:
+        timings = timings + [timings[1]]
+        outs = outs + [outs[1]]
+    ((unf_ips, unf_ok), (fus_ips, fus_ok), (reuse_ips, reuse_ok)) = timings
+    (out_u, out_f, out_r) = outs
+    fused_parity = float(jnp.abs(out_f - out_u).max())
+    drift = float(jnp.abs(out_r - out_f).max())
+    latent_scale = float(jnp.abs(out_f).max())
+
+    fused_step = {
+        "plan_refresh": plan_refresh,
+        "img_per_s": reuse_ips,
+        "img_per_s_fused_R1": fus_ips,
+        "img_per_s_unfused": unf_ips,
+        # step fusion in isolation (R=1 both sides) ...
+        "speedup_vs_unfused": fus_ips / max(unf_ips, 1e-9),
+        # ... vs the full new hot path (fusion + plan reuse at R=N);
+        # the 1.1x acceptance gate reads the full-path number.
+        "speedup_with_plan_reuse": reuse_ips / max(unf_ips, 1e-9),
+        "meets_1p1x_speedup": bool(reuse_ips >= 1.1 * unf_ips),
+        "parity_max_abs_diff_vs_unfused": fused_parity,   # R=1, must be 0
+        "hbm_bytes_per_step": bytes_fused / STEPS,
+        "hbm_bytes_per_step_unfused": bytes_unfused / STEPS,
+        "hbm_bytes_per_step_saved": (bytes_unfused - bytes_fused) / STEPS,
+        "finite": bool(unf_ok and fus_ok and reuse_ok),
+    }
+    plan_reuse = {
+        "R1": {
+            "plan_refresh": 1,
+            "img_per_s": fus_ips,
+            "plan_refreshes_per_run": STEPS,
+            # acceptance gate: R=1 must match the unfused path exactly
+            "parity_max_abs_diff": fused_parity,
+        },
+    }
+    if plan_refresh > 1:
+        plan_reuse[f"R{plan_refresh}"] = {
+            "plan_refresh": plan_refresh,
+            "img_per_s": reuse_ips,
+            "plan_refreshes_per_run": -(-STEPS // plan_refresh),
+            "speedup_vs_R1": reuse_ips / max(fus_ips, 1e-9),
+            "drift_max_abs_vs_R1": drift,
+            "drift_rel_to_latent_scale": drift / max(latent_scale, 1e-9),
+        }
+    return fused_step, plan_reuse
+
+
+def collect_and_merge_step_fusion(
+    json_out: str | None, plan_refresh: int,
+) -> tuple[dict, dict]:
+    """Collect the ``fused_step``/``plan_reuse`` sections and stage them
+    for ``write_json``.
+
+    The single entry point shared by this module's ``main`` and
+    ``benchmarks/run.py --plan-refresh``: runs :func:`collect_step_fusion`,
+    stashes both sections in ``_LAST``, and sub-merges ``plan_reuse`` by
+    refresh interval against any existing artifact at ``json_out``.
+    """
+    fused_sec, reuse_sec = collect_step_fusion(max(1, plan_refresh))
+    _LAST["fused_step"] = fused_sec
+    _LAST["plan_reuse"] = (
+        submerge_section(json_out, "plan_reuse", reuse_sec)
+        if json_out else reuse_sec
+    )
+    return fused_sec, reuse_sec
+
+
 def _jitter_params(tree, key):
     """Add small noise to every leaf (defeats §2.5 zero-init layers)."""
     leaves, treedef = jax.tree.flatten(tree)
@@ -465,6 +595,25 @@ def run():
            str(res['sparse']['serving_retraces_3_requests']))
 
 
+def submerge_section(path: str, section: str, new: dict) -> dict:
+    """Merge ``new`` into an existing artifact's sub-keyed section.
+
+    ``write_json`` merges by *top-level* section, so sections keyed by a
+    sweep axis (``quantized`` by dtype, ``plan_reuse`` by refresh
+    interval) would drop their other keys on a single-axis rerun; this
+    reads the current artifact's sub-dict and overlays the fresh entries.
+    """
+    existing: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f).get(section, {}) or {}
+        except (OSError, ValueError):
+            existing = {}
+    existing.update(new)
+    return existing
+
+
 def write_json(path: str, res: dict | None = None) -> str:
     """Write (merging by top-level section into any existing artifact).
 
@@ -505,6 +654,13 @@ def main() -> None:
                          "(core.param_store) against the dense baseline "
                          "and record it under the 'quantized' JSON "
                          "section (keyed by dtype)")
+    ap.add_argument("--plan-refresh", type=int, default=8,
+                    help="refresh interval R for the plan-reuse arm of "
+                         "the step-fusion benchmark: the fused_step and "
+                         "plan_reuse sections compare unfused vs "
+                         "step-fused (R=1, bit-exact) vs plan-reused "
+                         "(every R-th step) samplers; plan_reuse "
+                         "sub-merges by R so reruns keep other intervals")
     args = ap.parse_args()
     if args.shards > 1:
         # fail fast on a bad flag BEFORE the ~1 min unsharded benchmark
@@ -520,6 +676,17 @@ def main() -> None:
             )
     for row in run():
         print(",".join(str(x) for x in row))
+    fused_sec, reuse_sec = collect_and_merge_step_fusion(
+        args.json_out, args.plan_refresh
+    )
+    print(f"sampler_fused_step,{1e6 / max(fused_sec['img_per_s'], 1e-9):.1f},"
+          f"{fused_sec['speedup_with_plan_reuse']:.2f}x_vs_unfused "
+          f"parity={fused_sec['parity_max_abs_diff_vs_unfused']:.3g}")
+    rkey = f"R{max(1, args.plan_refresh)}"
+    print(f"sampler_plan_reuse_{rkey},"
+          f"{1e6 / max(reuse_sec[rkey]['img_per_s'], 1e-9):.1f},"
+          f"refreshes/run={reuse_sec[rkey]['plan_refreshes_per_run']} "
+          f"drift={reuse_sec[rkey].get('drift_max_abs_vs_R1', 0.0):.3g}")
     if args.shards > 1:
         sharded = collect_sharded(args.shards)
         _LAST["sharded"] = sharded
@@ -536,15 +703,9 @@ def main() -> None:
         sec = collect_quantized(args.param_dtype)
         # sub-merge by dtype so an --param-dtype bf16 rerun doesn't drop
         # the tracked int8 numbers (write_json merges whole sections).
-        existing: dict = {}
-        if os.path.exists(args.json_out):
-            try:
-                with open(args.json_out) as f:
-                    existing = json.load(f).get("quantized", {}) or {}
-            except (OSError, ValueError):
-                existing = {}
-        existing[args.param_dtype] = sec
-        _LAST["quantized"] = existing
+        _LAST["quantized"] = submerge_section(
+            args.json_out, "quantized", {args.param_dtype: sec}
+        )
         us = 1e6 / max(sec["img_per_s"], 1e-9)
         print(f"sampler_quantized_{args.param_dtype},{us:.1f},"
               f"bytes={sec['resident_param_bytes']} "

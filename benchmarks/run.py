@@ -21,6 +21,12 @@ def main() -> None:
                     help="write BENCH_sampler.json-style artifact here")
     ap.add_argument("--only", default=None,
                     help="run a single module by short name (e.g. 'sampler')")
+    ap.add_argument("--plan-refresh", type=int, default=None,
+                    help="also run the sampler step-fusion/plan-reuse "
+                         "benchmark with this refresh interval R and "
+                         "merge its fused_step + plan_reuse sections "
+                         "into --json-out (passthrough to "
+                         "benchmarks/bench_sampler.py --plan-refresh)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -63,6 +69,22 @@ def main() -> None:
             import traceback
             traceback.print_exc(file=sys.stderr)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if args.plan_refresh is not None:
+        try:
+            fused_sec, _ = bench_sampler.collect_and_merge_step_fusion(
+                args.json_out, args.plan_refresh
+            )
+            print(f"sampler_fused_step,"
+                  f"{1e6 / max(fused_sec['img_per_s'], 1e-9):.1f},"
+                  f"{fused_sec['speedup_with_plan_reuse']:.2f}x_vs_unfused "
+                  f"parity={fused_sec['parity_max_abs_diff_vs_unfused']:.3g}")
+        except Exception as e:  # keep the harness going (same policy as
+            # the module loop above) — a failed step-fusion arm must not
+            # drop the sections the other modules already collected from
+            # the --json-out write below.
+            print(f"fused_step_ERROR,0,{type(e).__name__}")
+            import traceback
+            traceback.print_exc(file=sys.stderr)
     if args.json_out:
         path = bench_sampler.write_json(args.json_out)
         print(f"# wrote {path}", file=sys.stderr)

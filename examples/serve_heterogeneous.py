@@ -31,6 +31,40 @@ int8 round-trip error is ≤ 1/254 ≈ 4e-3 of each expert-leaf's absmax
 (sampler outputs stay within FID-proxy tolerance of dense — see
 ``tests/test_param_store.py``); fp8 (e4m3) carries ≤ 6.25e-2 element
 relative error.
+
+Step-fused sampling + plan reuse (``--plan-refresh``,
+``core.sampling``): every engine here runs the step-fused hot path by
+default (``SamplerConfig.step_fused`` — CFG combine + Euler update
+folded into the convert-and-fuse kernel, bit-identical to the unfused
+chain).  ``--plan-refresh R`` additionally recomputes the router
+posterior + ``DispatchPlan`` only every R-th Euler step, carrying the
+plan through the scan between refreshes.  The R-vs-parity trade-off
+(vs per-step routing; drift measured on the 8-expert top-2 CFG bench
+ensemble, ``plan_reuse`` section of ``BENCH_sampler.json``):
+
+  ====  ==========================  =================================
+  R     routing work per run        parity vs per-step routing
+  ====  ==========================  =================================
+  1     every step (S refreshes)    bit-identical (max abs diff = 0)
+  2     ceil(S/2) refreshes         small drift: routed experts only
+                                    change between refresh steps
+  4     ceil(S/4) refreshes         ~1.09x img/s; drift ≈ 0.27 of the
+                                    latent scale on the UNTRAINED
+                                    bench router (trained routers
+                                    whose posteriors vary slowly in t
+                                    — the §3.1 premise — drift less)
+  8     ceil(S/8) refreshes         ~1.16x img/s; drift ≈ 0.40 of the
+                                    latent scale, same caveat
+  ====  ==========================  =================================
+
+Cross-request conditioning cache (``--cond-cache``,
+``ServingEngine.cond_cache_size``): a content-hash-keyed LRU dedupes
+byte-identical text embeddings across ``generate()``/``submit()``
+calls — the intra-prompt-diversity workload (one prompt, many seeds)
+holds ONE resident device buffer per distinct prompt.  Hit/miss
+behavior is observable via ``engine.stats['cond_cache_hits']`` /
+``['cond_cache_misses']`` (printed below), not inferred from timings;
+0 disables the cache.
 """
 
 import argparse
@@ -67,6 +101,15 @@ def main() -> None:
                          "(~4x fewer resident bytes, see module "
                          "docstring) and dequantize routed slices "
                          "through the fused Pallas kernel")
+    ap.add_argument("--plan-refresh", type=int, default=1,
+                    help="recompute router posterior + DispatchPlan only "
+                         "every R-th Euler step (R=1 per-step routing, "
+                         "bit-identical; see the R-vs-parity table in "
+                         "the module docstring)")
+    ap.add_argument("--cond-cache", type=int, default=64,
+                    help="cross-request conditioning LRU capacity "
+                         "(content-hash dedupe of text embeddings; "
+                         "0 disables)")
     args = ap.parse_args()
 
     if not os.path.exists(os.path.join(args.ckpt, "expert0.npz")):
@@ -97,15 +140,20 @@ def main() -> None:
             sampler=SamplerConfig(num_steps=args.steps, cfg_scale=1.0,
                                   strategy=strategy, top_k=2,
                                   dispatch=dispatch,
-                                  param_dtype=param_dtype),
+                                  param_dtype=param_dtype,
+                                  plan_refresh_every=args.plan_refresh),
+            cond_cache_size=args.cond_cache,
         )
         objectives = [e.objective for e in engine.experts]
         lat = []
         for r in range(args.requests):
             key = jax.random.PRNGKey(r)
-            text = jax.random.normal(
+            # host-side ndarray, as a remote text encoder would deliver —
+            # the form the conditioning cache hashes (device-resident
+            # jax.Arrays pass through unhashed)
+            text = np.asarray(jax.random.normal(
                 key, (args.batch, dit_cfg.text_len, dit_cfg.text_dim)
-            )
+            ))
             t0 = time.time()
             out = jax.block_until_ready(
                 engine.generate(key, text, args.batch)
@@ -117,7 +165,10 @@ def main() -> None:
         print(f"strategy={strategy:5s} dispatch={dispatch:8s} "
               f"params={param_dtype:6s} experts={objectives} "
               f"first={lat[0]:.2f}s steady={steady:.2f}s "
-              f"({args.batch/steady:.1f} img/s)")
+              f"({args.batch/steady:.1f} img/s) "
+              f"cond_cache={engine.stats['cond_cache_hits']}h/"
+              f"{engine.stats['cond_cache_misses']}m "
+              f"plan_refreshes={engine.stats['plan_refreshes']}")
 
 
 if __name__ == "__main__":

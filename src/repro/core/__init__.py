@@ -58,6 +58,7 @@ from repro.core.dispatch import (
     make_executor,
     plan_from_slots,
     resolve_dispatch,
+    slot_coef,
     tile_plan,
     topk_slots,
 )
@@ -74,6 +75,7 @@ from repro.core.fusion import (
 from repro.core.sampling import (
     SamplerConfig,
     cfg_combine,
+    coeff_tables_cached,
     params_are_stackable,
     sample_ddpm_ancestral,
     sample_ensemble,

@@ -11,8 +11,12 @@ routing) needs to plug into.  This module is that seam:
   view of the same assignments (flat sort order, its inverse, and
   per-expert segment offsets).
 * ``ExpertExecutor`` — the protocol every backend implements: turn a plan
-  plus the step inputs into the fused velocity (Eq. 1 combine through the
-  ``kernels.ops.fused_velocity`` convert-and-fuse kernel).
+  plus the step inputs into the raw per-slot routed ``predictions``
+  (plus tiled weights/slot ids — the fused-kernel operands).  The sampler
+  chooses the kernel: ``velocity`` (Eq. 1 combine through
+  ``kernels.ops.fused_velocity``) on the unfused path, or the step-fused
+  ``kernels.ops.fused_step`` which additionally folds the CFG combine
+  and Euler update so no intermediate velocity materializes in HBM.
 * Three backends:
 
   - ``GatheredExecutor`` — per-sample param gather + ``vmap`` (the
@@ -228,18 +232,40 @@ def tile_plan(plan: DispatchPlan, g: int) -> DispatchPlan:
 
 @runtime_checkable
 class ExpertExecutor(Protocol):
-    """Backend turning a plan + step inputs into the fused velocity.
+    """Backend turning a plan + step inputs into routed predictions.
 
-    ``velocity`` receives the pre-CFG batch ``x``/``tb`` of size ``B``
+    ``predictions`` receives the pre-CFG batch ``x``/``tb`` of size ``B``
     with grouped conditioning ``cond_g`` (leaves ``(B, g, ...)`` from
     ``sampling._cfg_grouped_cond``; ``g=2`` when CFG branches are batched,
     else 1) plus the step's ``(5, K)`` unified-coefficient table, and
-    returns the fused velocity ``(g·B, *latent)`` in ``[cond; uncond]``
-    concat order.  CFG combination happens in the sampler, shared across
-    backends.
+    returns the raw per-slot native predictions ``(k, g·B, *latent)`` in
+    ``[cond; uncond]`` branch-major order together with the tiled fusion
+    weights and slot indices (both ``(g·B, k)``) — the exact operands of
+    the fused kernels.  How those feed a kernel is the *sampler's*
+    decision: the unfused path runs ``kernels.ops.fused_velocity`` (via
+    ``velocity`` below) and combines CFG + Euler as separate ops; the
+    step-fused hot path hands the same operands to
+    ``kernels.ops.fused_step``, which folds CFG combine and the Euler
+    update into the convert-and-fuse kernel so no intermediate velocity
+    ``u`` ever materializes in HBM.
+
+    ``velocity`` is the unfused convenience form: ``predictions``
+    followed by the Eq. 1 convert-and-fuse, returning the fused velocity
+    ``(g·B, *latent)``.
     """
 
     name: str
+
+    def predictions(
+        self,
+        plan: DispatchPlan,
+        x: Array,
+        tb: Array,
+        cond_g: dict,
+        g: int,
+        tab: Array,
+    ) -> tuple[Array, Array, Array]:
+        ...
 
     def velocity(
         self,
@@ -251,6 +277,15 @@ class ExpertExecutor(Protocol):
         tab: Array,
     ) -> Array:
         ...
+
+
+class _FusedVelocity:
+    """Shared unfused ``velocity``: ``predictions`` + convert-and-fuse."""
+
+    def velocity(self, plan, x, tb, cond_g, g, tab):
+        preds, w_all, idx_all = self.predictions(plan, x, tb, cond_g, g,
+                                                 tab)
+        return _fused(preds, _tile(x, g), w_all, idx_all, tab, self.conv)
 
 
 def _tile(a: Array, g: int) -> Array:
@@ -265,6 +300,15 @@ def _flatten_groups(cond_g: dict, g: int) -> dict:
     }
 
 
+def slot_coef(tab: Array, idx_all: Array) -> Array:
+    """Gather the ``(5, K)`` step table into per-slot form ``(5, k, Bx)``.
+
+    The coefficient operand shared by ``kernels.ops.fused_velocity`` and
+    the step-fused ``kernels.ops.fused_step``.
+    """
+    return jnp.moveaxis(tab[:, idx_all], 1, 2)
+
+
 def _fused(
     preds: Array,        # (k, Bx, *latent) per-slot native predictions
     x_all: Array,        # (Bx, *latent)
@@ -274,9 +318,8 @@ def _fused(
     conv: ConversionConfig,
 ) -> Array:
     """Per-slot coefficient gather + fused convert-and-fuse kernel."""
-    coef = jnp.moveaxis(tab[:, idx_all], 1, 2)           # (5, k, Bx)
     return ops.fused_velocity(
-        preds, x_all, w_all, coef,
+        preds, x_all, w_all, slot_coef(tab, idx_all),
         clamp=conv.clamp, alpha_min=conv.alpha_min,
     )
 
@@ -291,7 +334,7 @@ def _next_pow2(n: int) -> int:
 
 
 @dataclasses.dataclass
-class GatheredExecutor:
+class GatheredExecutor(_FusedVelocity):
     """Per-sample param gather + vmap over routed slots.
 
     Each of the ``k`` slots gathers its expert's params per sample
@@ -322,18 +365,18 @@ class GatheredExecutor:
 
         return jax.vmap(one)
 
-    def velocity(self, plan, x, tb, cond_g, g, tab):
+    def predictions(self, plan, x, tb, cond_g, g, tab):
         b = x.shape[0]
         k = plan.slots_per_sample
-        x_all = _tile(x, g)
         w_all = _tile(plan.slot_w, g)
         idx_all = _tile(plan.slot_idx, g)
         if plan.uniform:
             # Whole batch routes to one expert: scalar gather, one forward.
             p = self.store.gather(plan.slot_idx[0, 0])
             cond_all = _flatten_groups(cond_g, g)
-            preds = self.apply_fn(p, x_all, _tile(tb, g), **cond_all)[None]
-            return _fused(preds, x_all, w_all, idx_all, tab, self.conv)
+            preds = self.apply_fn(p, _tile(x, g), _tile(tb, g),
+                                  **cond_all)[None]
+            return preds, w_all, idx_all
         vmapped = self._vmapped(g)
         cols = []
         for j in range(k):
@@ -341,7 +384,7 @@ class GatheredExecutor:
             cols.append(vmapped(pj, x, tb, cond_g))       # (B, g, *latent)
         preds = jnp.moveaxis(jnp.stack(cols), 2, 1)       # (k, g, B, ...)
         preds = preds.reshape((k, g * b) + preds.shape[3:])
-        return _fused(preds, x_all, w_all, idx_all, tab, self.conv)
+        return preds, w_all, idx_all
 
 
 # ---------------------------------------------------------------------------
@@ -350,7 +393,7 @@ class GatheredExecutor:
 
 
 @dataclasses.dataclass
-class GroupedExecutor:
+class GroupedExecutor(_FusedVelocity):
     """Sort assignments by expert; one segment pass per resident expert.
 
     Pipeline per step (all static-shaped so it traces once under scan):
@@ -386,7 +429,7 @@ class GroupedExecutor:
     conv: ConversionConfig
     name: str = "grouped"
 
-    def velocity(self, plan, x, tb, cond_g, g, tab):
+    def predictions(self, plan, x, tb, cond_g, g, tab):
         b = x.shape[0]
         k = plan.slots_per_sample
         n_experts = plan.num_experts
@@ -463,7 +506,7 @@ class GroupedExecutor:
         preds_flat = buf[p.unsort_order]                   # (N, *latent)
         preds = preds_flat.reshape((g * b, k) + preds_flat.shape[1:])
         preds = jnp.moveaxis(preds, 1, 0)                  # (k, g·B, ...)
-        return _fused(preds, x_all, p.slot_w, p.slot_idx, tab, self.conv)
+        return preds, p.slot_w, p.slot_idx
 
 
 # ---------------------------------------------------------------------------
@@ -472,7 +515,7 @@ class GroupedExecutor:
 
 
 @dataclasses.dataclass
-class DenseExecutor:
+class DenseExecutor(_FusedVelocity):
     """Run every expert through its own ``apply_fn`` (no stacking needed).
 
     The fallback for expert sets the sparse backends cannot stack
@@ -486,7 +529,7 @@ class DenseExecutor:
     conv: ConversionConfig
     name: str = "dense"
 
-    def velocity(self, plan, x, tb, cond_g, g, tab):
+    def predictions(self, plan, x, tb, cond_g, g, tab):
         x_all = _tile(x, g)
         t_all = _tile(tb, g)
         cond_all = _flatten_groups(cond_g, g)
@@ -508,7 +551,7 @@ class DenseExecutor:
                 fn(p, x_all, t_all, **cond_all)
                 for fn, p in zip(self.apply_fns, self.params)
             ])
-        return _fused(preds, x_all, w_all, idx_all, tab, self.conv)
+        return preds, w_all, idx_all
 
 
 # ---------------------------------------------------------------------------

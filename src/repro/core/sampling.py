@@ -21,10 +21,20 @@ Three mechanisms realize that here:
   gather+vmap (``gathered``), sort-based grouped segment execution
   (``grouped``), or the heterogeneous dense fallback (``dense``);
 * **fused convert-and-fuse** — the per-step (alpha, sigma, dalpha, dsigma,
-  vscale) conversion coefficients are tabulated once per run
-  (``conversion.unified_coeff_tables``) and the ε→v conversion + Eq. 1
+  vscale) conversion coefficients are tabulated once per run key
+  (``coeff_tables_cached``, a process-wide cache over
+  ``conversion.unified_coeff_tables``) and the ε→v conversion + Eq. 1
   weighting run as a single ``kernels.ops.fused_velocity`` kernel call
-  (Pallas on TPU, oracle elsewhere).
+  (Pallas on TPU, oracle elsewhere);
+* **step fusion** — with ``SamplerConfig.step_fused`` (the default) the
+  CFG combine ``u_u + s·(u_c − u_u)`` and the Euler update ``x ← x − u·dt``
+  fold INTO that kernel (``kernels.ops.fused_step``): executors hand back
+  per-branch routed predictions and one kernel launch reads the latent
+  once and writes the updated latent once per step;
+* **plan reuse** — ``SamplerConfig.plan_refresh_every`` recomputes the
+  router posterior + ``DispatchPlan`` only every R-th step, carrying the
+  plan through the scan (posteriors change slowly in t); R=1 is
+  bit-identical to per-step routing.
 
 The dense all-experts path is kept as an automatic fallback for expert
 sets the sparse engine cannot stack (heterogeneous ``apply_fn``s) and the
@@ -39,6 +49,7 @@ DDPM" row), and the deterministic two-expert threshold sampler (§3.3).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Sequence
 
 import jax
@@ -50,7 +61,9 @@ from repro.core.dispatch import (
     make_dispatch_plan,
     make_executor,
     resolve_dispatch,
+    slot_coef,
 )
+from repro.kernels import ops
 from repro.core.fusion import (
     ExpertSpec,
     fuse_predictions,
@@ -107,6 +120,24 @@ class SamplerConfig:
     #: ``hetero_fuse_dequant`` Pallas kernel (~4x / ~4x fewer resident
     #: expert-param bytes vs fp32).
     param_dtype: str = "native"
+    #: fold the CFG combine and the Euler update into the convert-and-
+    #: fuse kernel (``kernels.ops.fused_step``), so one sampling step
+    #: costs one fused kernel launch — the latent is read once and the
+    #: updated latent written once per step instead of round-tripping
+    #: through HBM for ``fused_velocity`` → ``cfg_combine`` → ``x − u·dt``.
+    #: The fused engines only; the reference engine ignores it.  False
+    #: keeps the unfused three-op chain (parity baseline, benchmarks).
+    step_fused: bool = True
+    #: recompute the router posterior + ``DispatchPlan`` only every R-th
+    #: Euler step, carrying the plan through the scan in between — the
+    #: ROADMAP "KV/latent caching" observation that router posteriors
+    #: change slowly in t.  R=1 (default) refreshes every step and is
+    #: bit-identical to per-step routing; R>1 trades bounded sampler
+    #: drift (tracked in ``BENCH_sampler.json`` ``plan_reuse``) for
+    #: skipping the router forward and the ``B·k`` argsort on the other
+    #: R−1 of every R steps.  Fused engines only; the reference engine
+    #: rejects R>1.
+    plan_refresh_every: int = 1
 
 
 def cfg_combine(cond_pred: Array, uncond_pred: Array, scale: float) -> Array:
@@ -155,6 +186,11 @@ def _resolve_engine(
                 "dispatch='auto' (executor backends apply to the fused "
                 "engines only)"
             )
+        if config.plan_refresh_every != 1:
+            raise ValueError(
+                "plan_refresh_every > 1 requires the fused engines (the "
+                "reference path recomputes routing every step by design)"
+            )
         return engine
     if config.time_map != "identity":
         # snr_match queries experts at rebased times/inputs — only the
@@ -170,6 +206,12 @@ def _resolve_engine(
                 f"dispatch={config.dispatch!r} requires time_map="
                 f"'identity'; snr_match resolves to the reference engine, "
                 f"which predates the dispatch API"
+            )
+        if config.plan_refresh_every != 1:
+            raise ValueError(
+                "plan_refresh_every > 1 requires time_map='identity'; "
+                "snr_match resolves to the reference engine, which "
+                "recomputes routing every step by design"
             )
         return "reference"
     K = len(experts)
@@ -255,6 +297,36 @@ def _stack_params(params: Sequence):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *params)
 
 
+@functools.lru_cache(maxsize=128)
+def coeff_tables_cached(
+    objectives: tuple[str, ...],
+    schedule_names: tuple[str, ...],
+    num_steps: int,
+    conv: ConversionConfig,
+) -> Array:
+    """Per-run ``unified_coeff_tables`` result, cached by its run key.
+
+    The ``(S, 5, K)`` table depends only on static run parameters —
+    expert objectives/schedules, the step count and the conversion
+    config — yet was rebuilt (K schedule sweeps + stacking) on every
+    sampler trace.  A long-lived ``ServingEngine`` retraces per (batch,
+    shape, conditioning) cache entry, so identical tables were being
+    recomputed per entry; this cache builds each distinct table once per
+    process.  All key parts are hashable by construction
+    (``ConversionConfig`` is frozen).
+    """
+    # The first call usually happens INSIDE a sampler trace;
+    # ensure_compile_time_eval forces concrete (non-tracer) arrays so the
+    # cached table is safe to reuse across traces.
+    with jax.ensure_compile_time_eval():
+        ts = jnp.linspace(1.0, 0.0, num_steps + 1)[:-1]
+        return unified_coeff_tables(
+            list(objectives),
+            [get_schedule(name) for name in schedule_names],
+            ts, conv,
+        )
+
+
 def _sample_fused(
     key: jax.Array,
     experts: Sequence[ExpertSpec],
@@ -329,23 +401,21 @@ def _sample_fused(
     if latent_sharding is not None:
         x = jax.lax.with_sharding_constraint(x, latent_sharding)
     ts = jnp.linspace(1.0, 0.0, config.num_steps + 1)
-    # Schedule-coefficient tables: computed ONCE per run, gathered per step.
-    tables = unified_coeff_tables(
-        [e.objective for e in experts],
-        [e.get_schedule() for e in experts],
-        ts[:-1], conv,
+    # Schedule-coefficient tables: computed ONCE per run key (cached
+    # process-wide, so serving retraces reuse them), gathered per step.
+    tables = coeff_tables_cached(
+        tuple(e.objective for e in experts),
+        tuple(e.schedule for e in experts),
+        config.num_steps, conv,
     )                                                     # (S, 5, K)
 
-    def step(x, i):
-        t_hi, t_lo = ts[i], ts[i + 1]
-        dt = t_hi - t_lo
-        tb = jnp.full((B,), t_hi)
-        w = fusion_weights(
-            experts, router_fn, x, tb,
-            strategy=config.strategy, top_k=config.top_k,
-            threshold=config.threshold,
-            ddpm_low_noise_only=config.ddpm_low_noise_only,
-        )                                                 # (B, K)
+    refresh_every = int(config.plan_refresh_every)
+    if refresh_every < 1:
+        raise ValueError(
+            f"plan_refresh_every must be >= 1, got {refresh_every}"
+        )
+
+    def make_plan(w):
         if backend == "dense" and not uniform:
             plan = full_dispatch_plan(w)
         else:
@@ -358,7 +428,20 @@ def _sample_fused(
                 lambda a: jax.lax.with_sharding_constraint(a, plan_sharding),
                 plan,
             )
-        tab = tables[i]                                   # (5, K)
+        return plan
+
+    def routed_plan(x, tb):
+        w = fusion_weights(
+            experts, router_fn, x, tb,
+            strategy=config.strategy, top_k=config.top_k,
+            threshold=config.threshold,
+            ddpm_low_noise_only=config.ddpm_low_noise_only,
+        )                                                 # (B, K)
+        return make_plan(w)
+
+    def velocity_update(plan, x, tb, dt, tab):
+        # Unfused three-op chain: fused velocity, CFG combine, Euler —
+        # each a latent-sized HBM round-trip (parity/bench baseline).
         if batched:
             cond_g = _cfg_grouped_cond(cond, null_cond or {}, B)
             fused = executor.velocity(plan, x, tb, cond_g, 2, tab)
@@ -373,16 +456,81 @@ def _sample_fused(
         else:
             u = executor.velocity(
                 plan, x, tb, _cfg_grouped_cond(cond, None, B), 1, tab)
-        x = x - u * dt
+        return x - u * dt
+
+    def fused_step_update(plan, x, tb, dt, tab):
+        # Step-fused hot path: the executor hands back per-branch routed
+        # predictions and ONE kernel (kernels.ops.fused_step) does the
+        # convert-and-fuse, CFG combine and Euler update — the latent is
+        # read once and written once; no velocity materializes in HBM.
+        if batched:
+            cond_g = _cfg_grouped_cond(cond, null_cond or {}, B)
+            preds, w_all, idx_all = executor.predictions(
+                plan, x, tb, cond_g, 2, tab)
+            g, scale = 2, config.cfg_scale
+        elif use_cfg:
+            p_c, w1, i1 = executor.predictions(
+                plan, x, tb, _cfg_grouped_cond(cond, None, B), 1, tab)
+            p_u, _, _ = executor.predictions(
+                plan, x, tb,
+                _cfg_grouped_cond(dict(null_cond or {}), None, B), 1, tab)
+            # branch-major [cond; uncond], the layout batched CFG emits
+            preds = jnp.concatenate([p_c, p_u], axis=1)
+            w_all = jnp.concatenate([w1, w1], axis=0)
+            idx_all = jnp.concatenate([i1, i1], axis=0)
+            g, scale = 2, config.cfg_scale
+        else:
+            preds, w_all, idx_all = executor.predictions(
+                plan, x, tb, _cfg_grouped_cond(cond, None, B), 1, tab)
+            g, scale = 1, 1.0
+        return ops.fused_step(
+            preds, x, w_all, slot_coef(tab, idx_all), dt,
+            g=g, cfg_scale=scale,
+            clamp=conv.clamp, alpha_min=conv.alpha_min,
+        )
+
+    update = fused_step_update if config.step_fused else velocity_update
+
+    def advance(plan, x, i):
+        t_hi, t_lo = ts[i], ts[i + 1]
+        tb = jnp.full((B,), t_hi)
+        x = update(plan, x, tb, t_hi - t_lo, tables[i])
         if latent_sharding is not None:
             # Pin the evolving latent's batch dim to the mesh "data" axis
             # every step — without the constraint GSPMD may re-replicate
             # the batch through the routed param resolution and serialize
-            # the data-parallel shards.
+            # the data-parallel shards.  On the step-fused path this is
+            # the constraint on the fused kernel's output.
             x = jax.lax.with_sharding_constraint(x, latent_sharding)
-        return x, None
+        return x
 
-    x, _ = jax.lax.scan(step, x, jnp.arange(config.num_steps))
+    if refresh_every == 1:
+
+        def step(x, i):
+            plan = routed_plan(x, jnp.full((B,), ts[i]))
+            return advance(plan, x, i), None
+
+        x, _ = jax.lax.scan(step, x, jnp.arange(config.num_steps))
+    else:
+        # Plan reuse: routing (router forward + top-k + the grouped
+        # argsort, all inside routed_plan) runs only on refresh steps;
+        # in between, the registered-pytree DispatchPlan rides the scan
+        # carry.  lax.cond executes a single branch at run time, so
+        # non-refresh steps pay zero routing compute.
+        def step(carry, i):
+            x, plan = carry
+            plan = jax.lax.cond(
+                i % refresh_every == 0,
+                lambda: routed_plan(x, jnp.full((B,), ts[i])),
+                lambda: plan,
+            )
+            return (advance(plan, x, i), plan), None
+
+        # Structural placeholder only — step 0 always refreshes.
+        init_plan = make_plan(jnp.zeros((B, K), jnp.float32))
+        (x, _), _ = jax.lax.scan(
+            step, (x, init_plan), jnp.arange(config.num_steps)
+        )
     return x
 
 

@@ -12,7 +12,7 @@ a (K, B) operand), and writes only the fused velocity.
 Grid: (B, T/block_t); the expert axis K is kept whole inside the block
 (K ≤ 8 in the paper).
 
-Three entry points share the module's dispatch policy:
+Four entry points share the module's dispatch policy:
 
 * :func:`hetero_fuse` — per-expert objective flags + raw schedule coeffs
   (the original dense-ensemble signature);
@@ -21,6 +21,11 @@ Three entry points share the module's dispatch policy:
   coefficients ``(1, 0, 0, 1, 1)`` (see ``conversion.unified_coeff_tables``),
   so the kernel needs no flag select and the K axis can hold *routed slots*
   (per-sample gathered experts) instead of the full ensemble;
+* :func:`hetero_fuse_step` — the step-fused hot path: the coeffs kernel
+  with the CFG combine ``u_u + s (u_c − u_u)`` (over a leading guidance
+  branch axis) and the Euler update ``x ← x − u·dt`` folded in, so one
+  sampling step costs one latent read + one latent write instead of the
+  three round-trips of ``fused_velocity`` → ``cfg_combine`` → ``x − u·dt``;
 * :func:`hetero_fuse_dequant` — the quantized-expert companion on the same
   hot path: expands an int8/fp8 gathered/sliced param view to compute
   precision by applying the symmetric per-row ``scale · q`` inline
@@ -117,6 +122,87 @@ def hetero_fuse_coeffs(
         out_shape=jax.ShapeDtypeStruct((b, t), preds.dtype),
         interpret=interpret,
     )(preds, x_t, weights, coef.astype(jnp.float32))
+
+
+def _fuse_step_kernel(
+    preds_ref, xt_ref, w_ref, coef_ref, dt_ref, o_ref,
+    *, cfg_scale: float, clamp: float, alpha_min: float,
+):
+    preds = preds_ref[:, :, 0].astype(jnp.float32)    # (K, G, bt)
+    xt = xt_ref[0].astype(jnp.float32)                # (bt,)
+    w = w_ref[:, 0].astype(jnp.float32)               # (G, K)
+    coef = coef_ref[:, :, :, 0].astype(jnp.float32)   # (5, K, G)
+    dt = dt_ref[0].astype(jnp.float32)
+    g = preds.shape[1]
+    alpha, sigma, dalpha, dsigma, vscale = (
+        coef[0], coef[1], coef[2], coef[3], coef[4]
+    )                                                 # each (K, G)
+
+    a_safe = jnp.maximum(alpha, alpha_min)[:, :, None]
+    x0h = (xt[None, None] - sigma[:, :, None] * preds) / a_safe
+    x0h = jnp.clip(x0h, -clamp, clamp)
+    v = (dalpha[:, :, None] * x0h + dsigma[:, :, None] * preds) \
+        * vscale[:, :, None]
+    wk = jnp.swapaxes(w, 0, 1)[:, :, None]            # (K, G, 1)
+    fused = jnp.sum(wk * v, axis=0)                   # (G, bt)
+    if g == 1:
+        u = fused[0]
+    else:
+        # branch 0 = cond, branch 1 = uncond: u_u + s (u_c − u_u)
+        u = fused[1] + cfg_scale * (fused[0] - fused[1])
+    o_ref[0] = (xt - u * dt).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg_scale", "clamp", "alpha_min", "block_t",
+                     "interpret"),
+)
+def hetero_fuse_step(
+    preds: Array,     # (K, G, B, T) per-branch routed-slot predictions
+    x_t: Array,       # (B, T) current latent
+    weights: Array,   # (G, B, K) fusion weights per guidance branch
+    coef: Array,      # (5, K, G, B) unified coefficient stack
+    dt: Array,        # (1,) Euler step size (traced per step)
+    *,
+    cfg_scale: float = 1.0,
+    clamp: float = 20.0,
+    alpha_min: float = 0.01,
+    block_t: int = 1024,
+    interpret: bool = False,
+) -> Array:
+    """Step-fused serving hot path: convert + fuse + CFG + Euler in one
+    kernel launch.
+
+    Extends :func:`hetero_fuse_coeffs` by folding the classifier-free
+    guidance combine across the ``G`` branch axis (branch 0 = cond,
+    branch 1 = uncond; ``G = 1`` skips it) and the Euler update
+    ``x ← x − u·dt`` into the same kernel, so per sampling step the
+    latent is read once and the updated latent written once — instead of
+    the three latent-sized HBM round-trips of the unfused
+    ``fused_velocity → cfg_combine → x − u·dt`` op chain.
+    """
+    k, g, b, t = preds.shape
+    block_t = min(block_t, t)
+    assert t % block_t == 0
+    kernel = functools.partial(
+        _fuse_step_kernel,
+        cfg_scale=cfg_scale, clamp=clamp, alpha_min=alpha_min,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, t // block_t),
+        in_specs=[
+            pl.BlockSpec((k, g, 1, block_t), lambda bi, ti: (0, 0, bi, ti)),
+            pl.BlockSpec((1, block_t), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((g, 1, k), lambda bi, ti: (0, bi, 0)),
+            pl.BlockSpec((5, k, g, 1), lambda bi, ti: (0, 0, 0, bi)),
+            pl.BlockSpec((1,), lambda bi, ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t), lambda bi, ti: (bi, ti)),
+        out_shape=jax.ShapeDtypeStruct((b, t), x_t.dtype),
+        interpret=interpret,
+    )(preds, x_t, weights, coef.astype(jnp.float32), dt)
 
 
 def _dequant_kernel(q_ref, s_ref, o_ref):

@@ -23,6 +23,7 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.hetero_fuse import hetero_fuse as _hetero_fuse
 from repro.kernels.hetero_fuse import hetero_fuse_coeffs as _hetero_fuse_coeffs
 from repro.kernels.hetero_fuse import hetero_fuse_dequant as _hetero_fuse_dequant
+from repro.kernels.hetero_fuse import hetero_fuse_step as _hetero_fuse_step
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 Array = jax.Array
@@ -125,9 +126,81 @@ def fused_velocity(
     return out.reshape((b,) + latent_shape)
 
 
-#: dequant tile width — multiple of the 128-lane VPU width; leaves smaller
-#: than one tile pad up to the next 128 multiple instead.
-_DEQUANT_BLOCK = 1024
+#: hot-path kernel tile width — multiple of the 128-lane VPU width; rows
+#: smaller than one tile pad up to the next 128 multiple instead.
+_TILE_BLOCK = 1024
+
+
+def _tile_pad(t: int) -> tuple[int, int]:
+    """Padded row length and block size for a ``t``-wide kernel row.
+
+    Shared padding policy of the row-major hot-path kernels
+    (``fused_step``, ``dequant_params``): rows at most one block wide pad
+    to the next 128-lane multiple and run as a single block; wider rows
+    pad to a whole number of ``_TILE_BLOCK`` tiles.
+    """
+    if t <= _TILE_BLOCK:
+        tp = -(-t // 128) * 128
+        return tp, tp
+    return -(-t // _TILE_BLOCK) * _TILE_BLOCK, _TILE_BLOCK
+
+
+def fused_step(
+    preds: Array,             # (K, G·B, *latent) per-branch slot predictions
+    x_t: Array,               # (B, *latent) current latent
+    weights: Array,           # (G·B, K) fusion weights
+    coef: Array,              # (5, K, G·B) unified coefficient stack
+    dt: Array,                # scalar Euler step size (traced)
+    *,
+    g: int,
+    cfg_scale: float = 1.0,
+    clamp: float = 20.0,
+    alpha_min: float = 0.01,
+) -> Array:
+    """Step-fused hot path: one kernel for convert + fuse + CFG + Euler.
+
+    Takes the exact :func:`fused_velocity` operands — per-slot native
+    predictions over the branch-major ``G·B`` guidance batch (branch 0 =
+    cond, branch 1 = uncond), fusion weights, and the per-step ``(5, K,
+    G·B)`` coefficient slice — plus the Euler ``dt``, and returns the
+    *updated latent* ``x − u·dt`` where ``u`` is the CFG-combined fused
+    velocity.  The latent is read once and written once per step instead
+    of round-tripping through HBM for each of the three unfused ops.
+    Non-tile-aligned latents pad up to the kernel tile width (padded
+    rows are self-contained zeros and are sliced away).  Pallas
+    (``hetero_fuse_step``) on TPU, oracle elsewhere — the oracle
+    delegates to ``ref_hetero_fuse_coeffs``, keeping the fused step
+    bit-identical to the unfused op chain on the reference path.
+    """
+    k = preds.shape[0]
+    b = x_t.shape[0]
+    latent_shape = x_t.shape[1:]
+    tsize = 1
+    for s in latent_shape:
+        tsize *= s
+    pf = preds.reshape(k, g, b, tsize)
+    xf = x_t.reshape(b, tsize)
+    wf = weights.reshape(g, b, k)
+    cf = coef.reshape(5, k, g, b)
+    dt = jnp.asarray(dt, jnp.float32).reshape((1,))
+    if use_pallas():
+        t = tsize
+        tp, block = _tile_pad(t)
+        if tp != t:
+            pad = ((0, 0), (0, 0), (0, 0), (0, tp - t))
+            pf = jnp.pad(pf, pad)
+            xf = jnp.pad(xf, ((0, 0), (0, tp - t)))
+        out = _hetero_fuse_step(
+            pf, xf, wf, cf, dt,
+            cfg_scale=cfg_scale, clamp=clamp, alpha_min=alpha_min,
+            block_t=block, interpret=_interpret(),
+        )[:, :t]
+    else:
+        out = _ref.ref_hetero_fuse_step(
+            pf, xf, wf, cf, dt,
+            cfg_scale=cfg_scale, clamp=clamp, alpha_min=alpha_min,
+        )
+    return out.reshape((b,) + latent_shape)
 
 
 def dequant_params(
@@ -150,12 +223,7 @@ def dequant_params(
     qf = q.reshape(rows, -1) if trailing else q.reshape(rows, 1)
     t = qf.shape[1]
     if use_pallas():
-        if t <= _DEQUANT_BLOCK:
-            tp = -(-t // 128) * 128
-            block = tp
-        else:
-            tp = -(-t // _DEQUANT_BLOCK) * _DEQUANT_BLOCK
-            block = _DEQUANT_BLOCK
+        tp, block = _tile_pad(t)
         if tp != t:
             qf = jnp.pad(qf, ((0, 0), (0, tp - t)))
         out = _hetero_fuse_dequant(

@@ -103,6 +103,42 @@ def ref_hetero_fuse_dequant(
     return q.astype(jnp.float32) * scale.astype(jnp.float32)[:, None]
 
 
+def ref_hetero_fuse_step(
+    preds: Array,        # (K, G, B, T) per-branch routed-slot predictions
+    x_t: Array,          # (B, T)
+    weights: Array,      # (G, B, K) fusion weights per guidance branch
+    coef: Array,         # (5, K, G, B) unified coefficient stack
+    dt: Array,           # (1,) Euler step size
+    *,
+    cfg_scale: float = 1.0,
+    clamp: float = 20.0,
+    alpha_min: float = 0.01,
+) -> Array:
+    """Oracle for the step-fused convert+CFG+Euler hot-path op.
+
+    Folds the whole per-step latent update into one op: per-branch
+    convert-and-fuse (exactly :func:`ref_hetero_fuse_coeffs` over the
+    branch-major flattened batch), the CFG combine
+    ``u = u_u + s (u_c − u_u)`` (branch 0 = cond, branch 1 = uncond; a
+    single branch skips the combine), and the Euler update
+    ``x ← x − u·dt``.  Delegating the fuse to the coeffs oracle keeps
+    this numerically identical to the unfused three-op path.
+    """
+    k, g, b, t = preds.shape
+    fused = ref_hetero_fuse_coeffs(
+        preds.reshape(k, g * b, t),
+        jnp.concatenate([x_t] * g, axis=0),
+        weights.reshape(g * b, k),
+        coef.reshape(5, k, g * b),
+        clamp=clamp, alpha_min=alpha_min,
+    )                                                      # (G·B, T)
+    if g == 1:
+        u = fused
+    else:
+        u = fused[b:] + cfg_scale * (fused[:b] - fused[b:])
+    return x_t - u * jnp.asarray(dt, jnp.float32).reshape(())
+
+
 def ref_hetero_fuse_coeffs(
     preds: Array,        # (K, B, T) native predictions of the routed slots
     x_t: Array,          # (B, T)

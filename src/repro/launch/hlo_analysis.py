@@ -89,6 +89,28 @@ def collective_bytes(hlo_text: str) -> CollectiveStats:
     return CollectiveStats(bytes_by, count_by)
 
 
+def compiled_bytes_accessed(compiled) -> float:
+    """Total HBM traffic (bytes accessed) of a compiled XLA executable.
+
+    ``compiled`` is the result of ``jax.jit(fn).lower(*args).compile()``.
+    XLA's ``cost_analysis`` reports the memory-traffic estimate the
+    compiler itself used ("bytes accessed"); returns 0.0 when the backend
+    provides no estimate.  Divide by the step count for a per-step
+    HBM-bytes figure — the metric the step-fused sampler section of
+    ``BENCH_sampler.json`` tracks.
+    """
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return 0.0
+    # Older jax versions return a one-element list of dicts.
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return 0.0
+    return float(ca.get("bytes accessed", 0.0))
+
+
 # ---------------------------------------------------------------------------
 # Roofline
 # ---------------------------------------------------------------------------

@@ -17,6 +17,12 @@ and asserts, for the same seed:
      the "expert" axis together with the int8 leaf it rescales (each
      shard holds K/ndev scale entries), and sampling matches the dense
      unsharded engine (atol 1e-4 — the toy leaves quantize exactly)
+  7. step-fused sampling + plan reuse (SamplerConfig.step_fused /
+     plan_refresh_every, kernels.ops.fused_step): the step-fused R=1
+     engine is bit-identical to the unfused baseline on expert- AND
+     data-sharded meshes, and a plan-reused (R=2) sharded engine matches
+     the plan-reused unsharded engine (atol 1e-5 — same config across
+     mesh layouts; R>1 is not expected to match per-step routing)
 
 ``--dit`` swaps the toy closed-form experts for real (reduced) DiT
 experts — slower, exercised by the slow-marked test variant.
@@ -216,12 +222,44 @@ def main() -> None:
         out = np.asarray(qsh.generate(KEY, text, args.batch))
         np.testing.assert_allclose(out, ref, atol=1e-4)
 
+    # 7. step fusion + plan reuse across mesh layouts.  The unsharded
+    #    baseline `ref` above already runs the step-fused default
+    #    (SamplerConfig.step_fused=True), so: (a) an explicitly UNFUSED
+    #    sharded engine must still match it bit-for-bit at R=1 (the
+    #    fused kernel is exact, sharded or not); (b) a plan-reused (R=2)
+    #    sharded engine must match the plan-reused unsharded engine —
+    #    the carried DispatchPlan replicates across the mesh and must
+    #    not diverge from the single-device carry.
+    step_fusion_checked = not args.dit
+    if step_fusion_checked:
+        unfused = dataclasses.replace(sampler, step_fused=False)
+        for shards in ((ndev, 1), (1, ndev)):
+            ufsh = _engine(experts, params, router_fn, latent, unfused,
+                           n_expert_shards=shards[0],
+                           n_data_shards=shards[1])
+            out = np.asarray(ufsh.generate(KEY, text, args.batch))
+            np.testing.assert_allclose(out, ref, atol=1e-5)
+
+        reuse = dataclasses.replace(sampler, plan_refresh_every=2)
+        ref_reuse = np.asarray(
+            _engine(experts, params, router_fn, latent, reuse)
+            .generate(KEY, text, args.batch)
+        )
+        assert np.isfinite(ref_reuse).all()
+        for shards in ((ndev, 1), (1, ndev)):
+            rsh = _engine(experts, params, router_fn, latent, reuse,
+                          n_expert_shards=shards[0],
+                          n_data_shards=shards[1])
+            out = np.asarray(rsh.generate(KEY, text, args.batch))
+            np.testing.assert_allclose(out, ref_reuse, atol=1e-5)
+
     print(json.dumps({
         "devices": ndev, "dit": bool(args.dit),
         "batch": args.batch, "steps": args.steps,
         "parity": "ok",
         "grouped_parity": "ok" if grouped_checked else "skipped",
         "quantized_parity": "ok" if quantized_checked else "skipped",
+        "step_fusion_parity": "ok" if step_fusion_checked else "skipped",
         "coalesced_requests": esh.stats["batched_requests"],
         "merged_batches": esh.stats["merged_batches"],
     }))

@@ -96,6 +96,8 @@ def test_multi_shard_parity_toy_two_devices():
     assert '"grouped_parity": "ok"' in proc.stdout
     # quantized store: scales shard with their leaves on "expert" + parity
     assert '"quantized_parity": "ok"' in proc.stdout
+    # step fusion bit-parity + plan-reuse (R=2) parity across mesh layouts
+    assert '"step_fusion_parity": "ok"' in proc.stdout
     assert '"devices": 2' in proc.stdout
 
 

@@ -1,0 +1,398 @@
+"""Step-fused sampling hot path: kernel parity, plan reuse, cond cache.
+
+Acceptance gates for the step-fusion subsystem (this PR's tentpole):
+  (a) the ``hetero_fuse_step`` Pallas kernel (interpret mode) matches its
+      ``ref_hetero_fuse_step`` oracle, including non-tile-aligned latent
+      shapes through the ``ops.fused_step`` padding wrapper;
+  (b) the step-fused sampler (``SamplerConfig.step_fused``, the default)
+      with ``plan_refresh_every=1`` is BIT-IDENTICAL to the seed unfused
+      three-op chain, on every dispatch backend and CFG formulation;
+  (c) ``plan_refresh_every=R>1`` actually skips routing work (runtime-
+      counted router executions) and its sampler drift vs per-step
+      routing stays bounded on the 8-expert top-2 CFG configuration;
+  (d) the serving engine's conditioning LRU deduplicates byte-identical
+      embeddings, evicts least-recently-used, and counts hits/misses;
+  (e) ``bench_sampler.write_json`` / ``submerge_section`` merge by
+      section without dropping sibling entries (previously e2e-only).
+"""
+
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExpertSpec, SamplerConfig, sample_ensemble
+from repro.core.sampling import coeff_tables_cached
+from repro.kernels import ops, ref
+from repro.kernels.hetero_fuse import hetero_fuse_step
+from repro.launch.serve import ServingEngine
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+KEY = jax.random.PRNGKey(0)
+LATENT = (4, 4, 2)
+
+
+def _shared_apply(params, x, t, *, text_emb=None, drop_mask=None, **_):
+    null = jnp.float32(0.07)
+    if text_emb is None:
+        cond_term = null
+    else:
+        ct = text_emb.mean(axis=(1, 2))[:, None, None, None]
+        if drop_mask is not None:
+            ct = jnp.where(drop_mask[:, None, None, None], null, ct)
+        cond_term = ct
+    return x * params["a"] + params["b"] + cond_term
+
+
+def _ensemble(k=8, apply_fn=_shared_apply):
+    params = [
+        {"a": jnp.float32(0.7 + 0.06 * i), "b": jnp.float32(0.01 * i)}
+        for i in range(k)
+    ]
+    experts = [
+        ExpertSpec(
+            f"e{i}", "ddpm" if i % 2 == 0 else "fm",
+            "cosine" if i % 2 == 0 else "linear", apply_fn, i,
+        )
+        for i in range(k)
+    ]
+
+    def router_fn(x, t):
+        logits = (
+            jnp.tile(jnp.arange(float(k))[None], (x.shape[0], 1))
+            + x.mean(axis=(1, 2, 3))[:, None] * 3.0
+        )
+        return jax.nn.softmax(logits, axis=-1)
+
+    return experts, params, router_fn
+
+
+def _sample(experts, params, router_fn, *, batch=4, cfg=None, **cfg_kw):
+    config = cfg if cfg is not None else SamplerConfig(
+        num_steps=6, cfg_scale=3.0, strategy="topk", top_k=2, **cfg_kw,
+    )
+    cond = {"text_emb": jax.random.normal(KEY, (batch, 5, 6))}
+    return sample_ensemble(
+        KEY, experts, params, router_fn, (batch,) + LATENT,
+        cond=cond, null_cond={"text_emb": None}, config=config,
+    )
+
+
+# --- (a) kernel == oracle ---------------------------------------------------
+
+
+@pytest.mark.parametrize("k,g,b,t", [
+    (2, 2, 3, 256),      # the CFG-batched serving shape class
+    (3, 1, 2, 128),      # no-guidance single branch
+    (1, 2, 1, 1024),     # single slot, full tile
+    (4, 2, 2, 2048),     # multi-tile grid
+])
+def test_fuse_step_kernel_matches_oracle(k, g, b, t):
+    keys = jax.random.split(jax.random.PRNGKey(k * 100 + g * 10 + b), 4)
+    preds = jax.random.normal(keys[0], (k, g, b, t))
+    x = jax.random.normal(keys[1], (b, t))
+    w = jax.nn.softmax(jax.random.normal(keys[2], (g, b, k)), axis=-1)
+    coef = jax.random.uniform(keys[3], (5, k, g, b), minval=0.05,
+                              maxval=1.0)
+    dt = jnp.array([0.02], jnp.float32)
+    out_kernel = hetero_fuse_step(
+        preds, x, w, coef, dt, cfg_scale=7.5, interpret=True,
+    )
+    out_ref = ref.ref_hetero_fuse_step(preds, x, w, coef, dt, cfg_scale=7.5)
+    np.testing.assert_allclose(out_kernel, out_ref, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("latent", [
+    (5, 5, 4),           # 100 floats -> pads to one 128 tile
+    (3, 7, 1),           # 21 floats, deeply unaligned
+    (11, 10, 10),        # 1100 floats -> pads past one 1024 block
+])
+def test_fused_step_padding_non_tile_aligned(monkeypatch, latent):
+    """ops.fused_step pads unaligned latents up to the kernel tile and the
+    padded rows never leak into the result."""
+    k, g, b = 2, 2, 3
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    preds = jax.random.normal(keys[0], (k, g * b) + latent)
+    x = jax.random.normal(keys[1], (b,) + latent)
+    w = jax.nn.softmax(jax.random.normal(keys[2], (g * b, k)), axis=-1)
+    coef = jax.random.uniform(keys[3], (5, k, g * b), minval=0.05,
+                              maxval=1.0)
+    dt = jnp.float32(0.02)
+
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    out_pallas = ops.fused_step(preds, x, w, coef, dt, g=g, cfg_scale=4.0)
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "0")
+    out_oracle = ops.fused_step(preds, x, w, coef, dt, g=g, cfg_scale=4.0)
+    assert out_pallas.shape == (b,) + latent
+    np.testing.assert_allclose(out_pallas, out_oracle, atol=1e-5, rtol=1e-5)
+
+
+# --- (b) step-fused == seed unfused chain, bit-identical --------------------
+
+
+@pytest.mark.parametrize("variant", [
+    "grouped", "gathered", "dense_full", "threshold", "two_pass", "no_cfg",
+])
+def test_step_fused_bit_identical_to_unfused(variant):
+    """The fused kernel folds — but must not change — the per-step math:
+    max |fused − unfused| == 0 exactly (the acceptance gate the
+    ``fused_step`` bench section tracks as parity_max_abs_diff)."""
+    experts, params, router_fn = _ensemble(8)
+    kw = {}
+    if variant in ("grouped", "gathered"):
+        kw["dispatch"] = variant
+    elif variant == "dense_full":
+        kw["strategy"] = "full"
+    elif variant == "threshold":
+        kw["strategy"] = "threshold"
+    elif variant == "two_pass":
+        kw["batched_cfg"] = False
+    elif variant == "no_cfg":
+        kw["cfg_scale"] = 1.0
+
+    base_cfg = SamplerConfig(num_steps=6, cfg_scale=3.0, strategy="topk",
+                             top_k=2)
+    for key, val in kw.items():
+        base_cfg = dataclasses.replace(base_cfg, **{key: val})
+    fused = _sample(experts, params, router_fn,
+                    cfg=dataclasses.replace(base_cfg, step_fused=True))
+    unfused = _sample(experts, params, router_fn,
+                      cfg=dataclasses.replace(base_cfg, step_fused=False))
+    assert np.isfinite(np.asarray(fused)).all()
+    assert float(jnp.abs(fused - unfused).max()) == 0.0
+
+
+def test_plan_refresh_r1_bit_identical_to_seed():
+    """The new default config (step_fused=True, plan_refresh_every=1)
+    reproduces the seed sampler bit-for-bit."""
+    experts, params, router_fn = _ensemble(8)
+    new_default = _sample(experts, params, router_fn)  # PR defaults
+    seed_path = _sample(experts, params, router_fn,
+                        step_fused=False, plan_refresh_every=1)
+    assert float(jnp.abs(new_default - seed_path).max()) == 0.0
+
+
+# --- (c) plan reuse: routing actually skipped + bounded drift ---------------
+
+
+def test_plan_refresh_skips_router_executions():
+    """R=3 over 6 steps must execute the router exactly twice per run —
+    counted at RUNTIME (the lax.cond carry branch pays no routing), not
+    at trace time."""
+    calls = {"n": 0}
+
+    def _bump():
+        calls["n"] += 1
+
+    experts, params, base_router = _ensemble(8)
+
+    def counted_router(x, t):
+        jax.debug.callback(_bump)
+        return base_router(x, t)
+
+    def run(refresh):
+        out = _sample(experts, params, counted_router,
+                      plan_refresh_every=refresh)
+        jax.block_until_ready(out)
+        jax.effects_barrier()
+
+    run(1)
+    calls["n"] = 0
+    run(1)
+    jax.effects_barrier()
+    assert calls["n"] == 6          # per-step routing: 6 steps
+    calls["n"] = 0
+    run(3)
+    jax.effects_barrier()
+    assert calls["n"] == 2          # refresh at steps 0 and 3 only
+
+
+@pytest.mark.parametrize("refresh", [2, 4])
+def test_plan_refresh_drift_bounded(refresh):
+    """8-expert top-2 CFG: reusing the plan for R steps drifts the final
+    latents by a bounded amount relative to per-step routing (posteriors
+    change slowly in t — the premise plan reuse banks on)."""
+    experts, params, router_fn = _ensemble(8)
+    per_step = _sample(experts, params, router_fn, plan_refresh_every=1)
+    reused = _sample(experts, params, router_fn,
+                     plan_refresh_every=refresh)
+    assert np.isfinite(np.asarray(reused)).all()
+    drift = float(jnp.abs(reused - per_step).max())
+    scale = float(jnp.abs(per_step).max())
+    assert drift <= 0.25 * scale, (
+        f"plan reuse R={refresh} drifted {drift:.4f} "
+        f"(latent scale {scale:.4f})"
+    )
+
+
+def test_plan_refresh_rejects_bad_values():
+    experts, params, router_fn = _ensemble(2)
+    with pytest.raises(ValueError, match="plan_refresh_every"):
+        _sample(experts, params, router_fn, plan_refresh_every=0)
+    with pytest.raises(ValueError, match="reference"):
+        cond = {"text_emb": jax.random.normal(KEY, (2, 5, 6))}
+        sample_ensemble(
+            KEY, experts, params, router_fn, (2,) + LATENT, cond=cond,
+            config=SamplerConfig(num_steps=2, plan_refresh_every=2),
+            engine="reference",
+        )
+
+
+def test_coeff_tables_cached_identical_and_shared():
+    """The run-key cache returns the same (concrete, non-tracer) table
+    object for identical keys and matches a fresh computation."""
+    coeff_tables_cached.cache_clear()
+    key = (("ddpm", "fm"), ("cosine", "linear"), 6)
+    t1 = coeff_tables_cached(key[0], key[1], key[2],
+                             SamplerConfig().conversion)
+    t2 = coeff_tables_cached(key[0], key[1], key[2],
+                             SamplerConfig().conversion)
+    assert t1 is t2                 # cache hit, no rebuild
+    assert t1.shape == (6, 5, 2)
+    assert not isinstance(t1, jax.core.Tracer)
+
+
+# --- (d) conditioning cache -------------------------------------------------
+
+
+def _toy_engine(**kw):
+    experts, params, router_fn = _ensemble(4)
+    return ServingEngine(
+        experts=experts, expert_params=params, router_fn=router_fn,
+        latent_shape=LATENT,
+        sampler=SamplerConfig(num_steps=2, cfg_scale=3.0, top_k=2),
+        **kw,
+    )
+
+
+def test_cond_cache_hits_and_lru_eviction():
+    engine = _toy_engine(cond_cache_size=2)
+    a = np.ones((2, 5, 6), np.float32)
+    b = np.full((2, 5, 6), 2.0, np.float32)
+    c = np.full((2, 5, 6), 3.0, np.float32)
+
+    ra1 = engine._cached_cond(a)
+    ra2 = engine._cached_cond(np.array(a))   # same bytes, new host array
+    assert ra1 is ra2                         # deduped to ONE device buffer
+    assert engine.stats["cond_cache_hits"] == 1
+    assert engine.stats["cond_cache_misses"] == 1
+
+    engine._cached_cond(b)                    # cache: [a, b]
+    engine._cached_cond(c)                    # evicts a -> [b, c]
+    assert len(engine._cond_cache) == 2
+    engine._cached_cond(a)                    # miss again after eviction
+    assert engine.stats["cond_cache_misses"] == 4
+    assert engine.stats["cond_cache_hits"] == 1
+    engine._cached_cond(c)                    # still resident
+    assert engine.stats["cond_cache_hits"] == 2
+
+
+def test_cond_cache_passes_device_arrays_through():
+    """Device-resident embeddings skip hashing: dedupe would force a
+    blocking device->host copy per request for a buffer the caller is
+    already sharing."""
+    engine = _toy_engine(cond_cache_size=8)
+    dev = jnp.ones((2, 5, 6), jnp.float32)
+    engine._cached_cond(dev)
+    engine._cached_cond(dev)
+    assert engine.stats["cond_cache_hits"] == 0
+    assert engine.stats["cond_cache_misses"] == 0
+    assert len(engine._cond_cache) == 0
+
+
+def test_cond_cache_disabled_and_none():
+    engine = _toy_engine(cond_cache_size=0)
+    assert engine._cached_cond(None) is None
+    a = np.ones((1, 2, 3), np.float32)
+    engine._cached_cond(a)
+    engine._cached_cond(a)
+    assert engine.stats["cond_cache_hits"] == 0
+    assert engine.stats["cond_cache_misses"] == 0
+    assert len(engine._cond_cache) == 0
+
+
+def test_cond_cache_served_results_match_uncached():
+    """Cached conditioning must not change outputs: same request through
+    a caching and a cache-disabled engine is bit-identical, and the
+    repeat request scores a hit."""
+    cached = _toy_engine(cond_cache_size=8)
+    uncached = _toy_engine(cond_cache_size=0)
+    text = np.asarray(jax.random.normal(KEY, (2, 5, 6)))
+    o1 = cached.generate(jax.random.PRNGKey(1), text, 2)
+    o2 = uncached.generate(jax.random.PRNGKey(1), text, 2)
+    assert float(jnp.abs(o1 - o2).max()) == 0.0
+    cached.generate(jax.random.PRNGKey(2), np.array(text), 2)
+    assert cached.stats["cond_cache_hits"] == 1
+
+
+def test_plan_refreshes_counter():
+    experts, params, router_fn = _ensemble(4)
+    engine = ServingEngine(
+        experts=experts, expert_params=params, router_fn=router_fn,
+        latent_shape=LATENT,
+        sampler=SamplerConfig(num_steps=5, cfg_scale=3.0, top_k=2,
+                              plan_refresh_every=2),
+    )
+    text = jax.random.normal(KEY, (2, 5, 6))
+    engine.generate(jax.random.PRNGKey(0), text, 2)
+    assert engine.stats["plan_refreshes"] == 3   # ceil(5 / 2)
+    h = engine.submit(jax.random.PRNGKey(1), text)
+    engine.flush()
+    h.result()
+    assert engine.stats["plan_refreshes"] == 6
+
+
+# --- (e) write_json / submerge_section ---------------------------------------
+
+
+def test_write_json_merges_by_section(tmp_path):
+    from benchmarks import bench_sampler
+
+    path = str(tmp_path / "bench.json")
+    bench_sampler.write_json(path, {"seed": {"img_per_s": 1.0},
+                                    "speedup": 2.0})
+    bench_sampler.write_json(path, {"fused_step": {"img_per_s": 3.0}})
+    with open(path) as f:
+        merged = json.load(f)
+    # earlier sections survive, new section lands, same-name overwrites
+    assert merged["seed"] == {"img_per_s": 1.0}
+    assert merged["fused_step"] == {"img_per_s": 3.0}
+    assert merged["speedup"] == 2.0
+    bench_sampler.write_json(path, {"speedup": 4.0})
+    with open(path) as f:
+        assert json.load(f)["speedup"] == 4.0
+
+
+def test_write_json_survives_corrupt_artifact(tmp_path):
+    from benchmarks import bench_sampler
+
+    path = str(tmp_path / "bench.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    bench_sampler.write_json(path, {"seed": {"img_per_s": 1.0}})
+    with open(path) as f:
+        assert json.load(f) == {"seed": {"img_per_s": 1.0}}
+
+
+def test_submerge_section_keeps_sibling_keys(tmp_path):
+    from benchmarks import bench_sampler
+
+    path = str(tmp_path / "bench.json")
+    bench_sampler.write_json(
+        path, {"plan_reuse": {"R1": {"img_per_s": 1.0}}}
+    )
+    merged = bench_sampler.submerge_section(
+        path, "plan_reuse", {"R4": {"img_per_s": 2.0}}
+    )
+    assert merged == {"R1": {"img_per_s": 1.0},
+                      "R4": {"img_per_s": 2.0}}
+    # missing file / missing section degrade to just the new entries
+    assert bench_sampler.submerge_section(
+        str(tmp_path / "absent.json"), "plan_reuse", {"R2": {}}
+    ) == {"R2": {}}
