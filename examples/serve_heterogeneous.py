@@ -32,6 +32,14 @@ int8 round-trip error is ≤ 1/254 ≈ 4e-3 of each expert-leaf's absmax
 ``tests/test_param_store.py``); fp8 (e4m3) carries ≤ 6.25e-2 element
 relative error.
 
+On an **elastic** engine (``capacity=K_cap``, see the walkthrough at the
+end of this example) the table scales by the capacity, not the live
+count: the store is padded to ``K_cap`` slots along the expert axis, so
+resident bytes carry a ``(K_cap - K)/K`` overhead of zero-filled padded
+slots (int8/fp8 pad with 0 qvals and unit scales).  Padded and evicted
+slots are masked by the store's validity bit-vector — never routed,
+never gathered — so the overhead is memory-only, not compute.
+
 Step-fused sampling + plan reuse (``--plan-refresh``,
 ``core.sampling``): every engine here runs the step-fused hot path by
 default (``SamplerConfig.step_fused`` — CFG combine + Euler update
@@ -71,6 +79,7 @@ import argparse
 import os
 import subprocess
 import sys
+import tempfile
 import time
 
 import jax
@@ -79,6 +88,64 @@ import numpy as np
 from repro.core import SamplerConfig
 from repro.launch.serve import ServingEngine
 from repro.models.config import dit_b2, router_b2
+
+
+def elastic_walkthrough(steps: int) -> None:
+    """Fault-tolerant elastic membership, end to end.
+
+    Builds a 6-expert ensemble with 8 capacity slots, admits a request,
+    then — *mid-serving* — hot-adds a freshly published 7th expert and
+    evicts expert 2.  The in-flight request still completes against the
+    membership it was admitted under (bit-identical routing snapshot);
+    the next request routes over the new membership; and neither
+    membership change retraced the compiled sampler (K is a capacity,
+    not a trace constant — membership is data).
+    """
+    from repro.models import dit as D
+    from repro.training import expert_metadata, save_checkpoint
+
+    cfg = dit_b2().reduced(latent_size=8)
+    rcfg = router_b2(num_clusters=8).reduced(latent_size=8)
+    with tempfile.TemporaryDirectory() as d:
+        for cid in range(6):
+            save_checkpoint(
+                os.path.join(d, f"expert{cid}.npz"),
+                D.init(cfg, jax.random.PRNGKey(10 + cid)),
+                metadata=expert_metadata(
+                    name=f"e{cid}", objective="fm" if cid % 2 else "ddpm",
+                    schedule="linear" if cid % 2 else "cosine",
+                    cluster_id=cid, arch=cfg.name),
+            )
+        save_checkpoint(os.path.join(d, "router.npz"),
+                        D.init(rcfg, jax.random.PRNGKey(99)))
+        engine = ServingEngine.from_checkpoint_dir(
+            d, dit_cfg=cfg, router_cfg=rcfg,
+            sampler=SamplerConfig(num_steps=steps, cfg_scale=1.0,
+                                  strategy="topk", top_k=2),
+            capacity=8,
+        )
+        print(f"elastic: {engine.membership_line()}")
+        key = jax.random.PRNGKey(0)
+        text = np.asarray(jax.random.normal(
+            key, (4, cfg.text_len, cfg.text_dim)))
+        h_inflight = engine.submit(key, text, 4)   # 6-expert membership
+        # a 7th contributor publishes a checkpoint mid-serving ...
+        joiner = os.path.join(d, "joiner.npz")
+        save_checkpoint(joiner, D.init(cfg, jax.random.PRNGKey(16)),
+                        metadata=expert_metadata(
+                            name="e6", objective="fm", schedule="linear",
+                            cluster_id=6, arch=cfg.name))
+        slot = engine.add_expert(joiner)
+        # ... and expert 2's node drops out
+        engine.evict_expert(2)
+        h_after = engine.submit(jax.random.PRNGKey(1), text, 4)
+        dispatches = engine.flush()    # one dispatch per membership epoch
+        for h in (h_inflight, h_after):
+            assert np.isfinite(np.asarray(h.result())).all()
+        print(f"elastic: hot-added slot {slot}, evicted slot 2 between "
+              f"submit() and flush() — {dispatches} dispatches, "
+              f"traces={engine.stats['traces']} (no retrace)")
+        print(f"elastic: {engine.membership_line()}")
 
 
 def main() -> None:
@@ -169,6 +236,8 @@ def main() -> None:
               f"cond_cache={engine.stats['cond_cache_hits']}h/"
               f"{engine.stats['cond_cache_misses']}m "
               f"plan_refreshes={engine.stats['plan_refreshes']}")
+
+    elastic_walkthrough(args.steps)
 
 
 if __name__ == "__main__":

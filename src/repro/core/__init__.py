@@ -45,6 +45,7 @@ from repro.core.param_store import (
     QuantizedStore,
     as_store,
     make_store,
+    pad_to_capacity,
 )
 from repro.core.dispatch import (
     DISPATCH_BACKENDS,

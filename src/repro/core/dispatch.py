@@ -181,14 +181,30 @@ def make_dispatch_plan(
     k: int,
     *,
     uniform: bool = False,
+    valid: Array | None = None,
 ) -> DispatchPlan:
     """Plan for routed execution: top-``k`` slots of the fusion weights.
 
     This is the §3.1 slot selection (formerly ``fusion.topk_slots``)
     folded into plan construction — the single per-step entry point for
     every routed backend.
+
+    ``valid`` (optional ``(K,)`` bool) is the elastic-membership guard:
+    any slot whose selected expert is invalid — possible only when ``k``
+    exceeds the live count, since masked fusion weights give dead slots
+    zero probability — is remapped to the first valid expert with weight
+    exactly 0.  The remap keeps the plan NaN-safe against whatever bytes
+    an evicted/empty capacity slot holds: a dead expert's params are
+    never gathered and never run a segment forward, and a zero-weight
+    fallback slot contributes exact ``0.0`` to the fused combine.
     """
     slot_idx, slot_w = topk_slots(weights, k)
+    if valid is not None:
+        valid = jnp.asarray(valid, dtype=bool)
+        fallback = jnp.argmax(valid).astype(jnp.int32)
+        ok = valid[slot_idx]                              # (B, k)
+        slot_idx = jnp.where(ok, slot_idx, fallback)
+        slot_w = jnp.where(ok, slot_w, jnp.zeros_like(slot_w))
     return plan_from_slots(slot_idx, slot_w, weights.shape[-1],
                            uniform=uniform)
 

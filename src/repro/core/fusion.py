@@ -60,14 +60,22 @@ def select_topk(probs: Array, k: int) -> tuple[Array, Array]:
     lowest expert index (``jax.lax.top_k`` order), so exactly ``k`` experts
     are selected — a ``probs >= thresh`` mask would silently select more
     than ``k`` on ties and change the fusion weights.
+
+    The renormalizer is the sum of the *width-k* ``top_k`` values, not the
+    masked width-K row: both sum the same k numbers, but the width-k form
+    associates them identically whatever K is — so routing over a
+    capacity-padded posterior (invalid slots masked to probability zero)
+    is **bitwise** identical to routing over the compacted valid subset,
+    which the elastic-membership parity proofs
+    (``tests/test_faults.py``) rely on.
     """
     B, K = probs.shape
     k = min(k, K)
-    _, idx = jax.lax.top_k(probs, k)                     # (B, k), ties -> low idx
+    vals, idx = jax.lax.top_k(probs, k)                  # (B, k), ties -> low idx
     mask = jnp.zeros((B, K), bool)
     mask = mask.at[jnp.arange(B)[:, None], idx].set(True)
     w = probs * mask
-    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-12)
+    w = w / jnp.maximum(vals.sum(axis=-1, keepdims=True), 1e-12)
     return w, mask
 
 
@@ -159,6 +167,8 @@ def fusion_weights(
     top_k: int = 2,
     threshold: float = 0.5,
     ddpm_low_noise_only: float = 0.0,
+    valid: Array | None = None,
+    cluster_map: Array | None = None,
 ) -> Array:
     """Per-step fusion weights ``(B, K)`` — the single source of truth.
 
@@ -166,11 +176,27 @@ def fusion_weights(
     engine so that routed-only execution is *structurally* weight-identical
     to the dense reference.  Covers the §3.1 strategies, the Eq. 1 cluster
     -> expert posterior mapping, and the §7.3 low-noise DDPM gate.
+
+    Elastic membership: ``valid`` is an optional ``(K,)`` bool liveness
+    mask — invalid slots are zeroed *before* strategy selection, so every
+    strategy renormalizes over live experts only and an evicted slot
+    carries exactly zero weight.  ``cluster_map`` is an optional ``(K,)``
+    int array replacing the static per-``ExpertSpec`` cluster gather with
+    traced data, so a hot-added expert's cluster assignment takes effect
+    without recompiling.  Strategy renormalization happens exactly once
+    (inside ``routing_weights`` / here for ``threshold``): every §3.1
+    strategy is scale-invariant in the posterior, so no interim renorm is
+    applied after the cluster gather or the mask — the single-renorm form
+    is what makes masked capacity-K routing bitwise-equal to routing over
+    the compacted valid subset.
     """
     K = len(experts)
     B = x_t.shape[0]
     if strategy == "threshold":
         w = threshold_router_weights(t, K, threshold=threshold)
+        if valid is not None:
+            w = w * jnp.asarray(valid)[None, :]
+            w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-12)
     elif router_fn is None:
         if K != 1:
             raise ValueError("router_fn required for multi-expert fusion")
@@ -179,12 +205,16 @@ def fusion_weights(
         probs = router_fn(x_t, t)                        # (B, num_clusters)
         # Map cluster posterior -> per-expert probs via each expert's owned
         # cluster (Eq. 1: p(k | x_t)).
-        cluster_ids = jnp.array([max(e.cluster_id, 0) for e in experts])
-        if probs.shape[-1] != K or any(
-            e.cluster_id not in (-1, i) for i, e in enumerate(experts)
-        ):
-            probs = probs[:, cluster_ids]
-            probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-12)
+        if cluster_map is not None:
+            probs = probs[:, jnp.asarray(cluster_map)]
+        else:
+            cluster_ids = jnp.array([max(e.cluster_id, 0) for e in experts])
+            if probs.shape[-1] != K or any(
+                e.cluster_id not in (-1, i) for i, e in enumerate(experts)
+            ):
+                probs = probs[:, cluster_ids]
+        if valid is not None:
+            probs = probs * jnp.asarray(valid)[None, :]
         w = routing_weights(probs, strategy, top_k)
     if ddpm_low_noise_only > 0.0:
         # §7.3: restrict converted-DDPM experts to low-noise steps.

@@ -39,6 +39,22 @@ routed path (proven by test — ``tests/test_param_store.py``).
 Error bounds (tested): int8 round-trip max-abs error ≤ 1/254 ≈ 4e-3 of the
 per-expert-leaf absmax (gate: 1e-2); fp8 e4m3 carries 3 mantissa bits, so
 the element-wise relative error is ≤ 2^-4 = 6.25e-2 (documented gate).
+
+Elastic membership (fault tolerance): the leading expert axis is a
+**capacity**, not a census.  ``pad_to_capacity`` zero-pads every leaf to
+``(K_cap, ...)`` and attaches a ``(K_cap,)`` boolean ``valid`` mask — a
+*data* leaf riding the same leading expert axis as the weights (so
+``launch.sharding.expert_param_specs`` shards it with them).  Routing
+masks invalid slots to zero weight (``core.fusion.fusion_weights``) and
+plan construction remaps any invalid slot to a valid fallback expert
+(``core.dispatch.make_dispatch_plan``), so an evicted or never-filled
+slot costs zero forwards in the grouped executor and never appears in a
+gather.  Because the mask is data — not trace structure — hot-adding,
+evicting, or quarantining an expert never recompiles the sampler:
+``set_expert`` / ``with_valid`` return new stores with the same
+``(K_cap, ...)`` shapes, and old store objects stay immutable, so
+in-flight requests admitted under an earlier membership complete
+bit-identically against their snapshot.
 """
 
 from __future__ import annotations
@@ -134,10 +150,45 @@ class ExpertParamStore:
         """Resident bytes of the stored representation (benchmark metric)."""
         raise NotImplementedError
 
+    # -- elastic membership -------------------------------------------------
+
+    def valid_mask(self) -> Array:
+        """``(K,)`` bool — which capacity slots hold a live expert.
+
+        Stores built before ``pad_to_capacity`` carry ``valid=None``,
+        meaning every slot is live (the fixed-membership fast path).
+        """
+        v = getattr(self, "valid", None)
+        if v is not None:
+            return jnp.asarray(v)
+        return jnp.ones((self.num_experts,), dtype=bool)
+
+    def with_valid(self, mask) -> "ExpertParamStore":
+        """New store with ``valid`` replaced (same leaves, same shapes).
+
+        Membership changes are pure-functional: the old store object is
+        untouched, so requests holding it as a snapshot stay bit-stable.
+        """
+        mask = None if mask is None else jnp.asarray(mask, dtype=bool)
+        if mask is not None and mask.shape != (self.num_experts,):
+            raise ValueError(
+                f"valid mask shape {mask.shape} != ({self.num_experts},)"
+            )
+        return dataclasses.replace(self, valid=mask)
+
+    def set_expert(self, e: int, params: Any) -> "ExpertParamStore":
+        """New store with capacity slot ``e`` overwritten by ``params``.
+
+        Does **not** touch ``valid`` — callers flip the slot live via
+        ``with_valid`` once the write (and any router refresh) is done, so
+        a half-installed expert is never routable.
+        """
+        raise NotImplementedError
+
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("stacked",),
+    data_fields=("stacked", "valid"),
     meta_fields=("num_experts", "storage"),
 )
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +206,9 @@ class DenseStore(ExpertParamStore):
     stacked: Any
     num_experts: int
     storage: str = "native"
+    #: ``(K,)`` bool liveness mask, or ``None`` (= all slots live).  Data
+    #: field: membership is traced, so flipping it never recompiles.
+    valid: Any = None
 
     @classmethod
     def from_stacked(cls, stacked: Any,
@@ -185,7 +239,15 @@ class DenseStore(ExpertParamStore):
         return DenseStore(
             stacked=jax.tree.map(lambda s: s[lo:hi], self.stacked),
             num_experts=hi - lo, storage=self.storage,
+            valid=None if self.valid is None else self.valid[lo:hi],
         )
+
+    def set_expert(self, e: int, params: Any) -> "DenseStore":
+        stacked = jax.tree.map(
+            lambda s, p: s.at[e].set(jnp.asarray(p).astype(s.dtype)),
+            self.stacked, params,
+        )
+        return dataclasses.replace(self, stacked=stacked)
 
     def materialize(self, dtype=None):
         if dtype is None:
@@ -196,10 +258,14 @@ class DenseStore(ExpertParamStore):
         return DenseStore(
             stacked=jax.tree.map(_leaf_axes, self.stacked),
             num_experts=self.num_experts, storage=self.storage,
+            valid=None if self.valid is None else (EXPERT_AXIS,),
         )
 
     def nbytes(self) -> int:
-        return _tree_nbytes(self.stacked)
+        n = _tree_nbytes(self.stacked)
+        if self.valid is not None:
+            n += _tree_nbytes(self.valid)
+        return n
 
 
 def _quantize_leaf(x: Array, qmax: float, storage: str):
@@ -220,7 +286,7 @@ def _quantize_leaf(x: Array, qmax: float, storage: str):
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("qvals", "scales"),
+    data_fields=("qvals", "scales", "valid"),
     meta_fields=("num_experts", "storage", "compute_dtype"),
 )
 @dataclasses.dataclass(frozen=True)
@@ -241,6 +307,8 @@ class QuantizedStore(ExpertParamStore):
     num_experts: int
     storage: str                 # 'int8' | 'fp8'
     compute_dtype: str = "float32"
+    #: ``(K,)`` bool liveness mask, or ``None`` (= all slots live).
+    valid: Any = None
 
     @classmethod
     def quantize(cls, stacked: Any, storage: str) -> "QuantizedStore":
@@ -300,7 +368,27 @@ class QuantizedStore(ExpertParamStore):
             scales=jax.tree.map(lambda s: s[lo:hi], self.scales),
             num_experts=hi - lo, storage=self.storage,
             compute_dtype=self.compute_dtype,
+            valid=None if self.valid is None else self.valid[lo:hi],
         )
+
+    def set_expert(self, e: int, params: Any) -> "QuantizedStore":
+        qmax = _QUANT_QMAX[self.storage]
+        pairs = jax.tree.map(
+            lambda p: _quantize_leaf(jnp.asarray(p)[None], qmax,
+                                     self.storage),
+            params,
+        )
+        # mapping over qvals first: ``pairs``' (q, scale) tuples sit at the
+        # qvals treedef's leaf positions, so flatten_up_to leaves them whole.
+        qvals = jax.tree.map(
+            lambda q, p: q.at[e].set(p[0][0].astype(q.dtype)),
+            self.qvals, pairs,
+        )
+        scales = jax.tree.map(
+            lambda s, p: s.at[e].set(p[1][0]),
+            self.scales, pairs,
+        )
+        return dataclasses.replace(self, qvals=qvals, scales=scales)
 
     def materialize(self, dtype=None):
         out = jax.tree.map(
@@ -316,10 +404,14 @@ class QuantizedStore(ExpertParamStore):
             scales=jax.tree.map(_leaf_axes, self.scales),
             num_experts=self.num_experts, storage=self.storage,
             compute_dtype=self.compute_dtype,
+            valid=None if self.valid is None else (EXPERT_AXIS,),
         )
 
     def nbytes(self) -> int:
-        return _tree_nbytes(self.qvals) + _tree_nbytes(self.scales)
+        n = _tree_nbytes(self.qvals) + _tree_nbytes(self.scales)
+        if self.valid is not None:
+            n += _tree_nbytes(self.valid)
+        return n
 
 
 # ---------------------------------------------------------------------------
@@ -348,6 +440,49 @@ def make_store(stacked: Any, *, dtype: str = "native") -> ExpertParamStore:
             storage=dtype,
         )
     return QuantizedStore.quantize(stacked, dtype)
+
+
+def pad_to_capacity(store: ExpertParamStore,
+                    capacity: int) -> ExpertParamStore:
+    """Grow a store's expert axis to ``capacity`` slots, masking the pad.
+
+    Every data leaf zero-pads along the leading expert axis (quantized
+    scales pad with 1.0 so a padded slot dequantizes to exact zeros, never
+    divides by zero); ``valid`` becomes ``(capacity,)`` with the original
+    experts live and the pad slots dead.  ``num_experts`` afterwards means
+    *capacity* — live membership is ``valid_mask().sum()``, traced data.
+    A no-op (modulo attaching an explicit mask) when the store is already
+    at capacity.
+    """
+    k = store.num_experts
+    if capacity < k:
+        raise ValueError(
+            f"capacity {capacity} < current expert count {k}"
+        )
+    pad = capacity - k
+    valid = jnp.concatenate([
+        store.valid_mask(), jnp.zeros((pad,), dtype=bool)
+    ])
+
+    def pad_leaf(x, fill=0):
+        x = jnp.asarray(x)
+        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    if isinstance(store, DenseStore):
+        return DenseStore(
+            stacked=jax.tree.map(pad_leaf, store.stacked),
+            num_experts=capacity, storage=store.storage, valid=valid,
+        )
+    if isinstance(store, QuantizedStore):
+        return QuantizedStore(
+            qvals=jax.tree.map(pad_leaf, store.qvals),
+            scales=jax.tree.map(lambda s: pad_leaf(s, fill=1),
+                                store.scales),
+            num_experts=capacity, storage=store.storage,
+            compute_dtype=store.compute_dtype, valid=valid,
+        )
+    raise TypeError(f"cannot pad {type(store).__name__}")
 
 
 def as_store(stacked_or_store: Any, *, dtype: str = "native"):

@@ -341,6 +341,8 @@ def _sample_fused(
     stacked_params=None,
     latent_sharding=None,
     plan_sharding=None,
+    coeff_tables=None,
+    cluster_map=None,
 ) -> Array:
     K = len(experts)
     B = shape[0]
@@ -371,6 +373,10 @@ def _sample_fused(
     # because it also serves heterogeneous expert sets (via the dense
     # executor's switch).
     stacked = as_store(stacked_params, dtype=config.param_dtype)
+    # Elastic membership (capacity stores): the liveness mask is traced
+    # data riding the store, so an eviction/hot-add reaches this engine as
+    # new argument *values* under the same trace — no recompile.
+    valid = getattr(stacked, "valid", None)
     if stacked is None and params is None:
         raise ValueError(
             "params=None requires stacked_params (an ExpertParamStore or "
@@ -403,11 +409,17 @@ def _sample_fused(
     ts = jnp.linspace(1.0, 0.0, config.num_steps + 1)
     # Schedule-coefficient tables: computed ONCE per run key (cached
     # process-wide, so serving retraces reuse them), gathered per step.
-    tables = coeff_tables_cached(
-        tuple(e.objective for e in experts),
-        tuple(e.schedule for e in experts),
-        config.num_steps, conv,
-    )                                                     # (S, 5, K)
+    # Elastic engines instead pass ``coeff_tables`` as a traced argument:
+    # a hot-added expert may change a capacity slot's objective/schedule,
+    # which must reach the sampler as new table *values*, not a new trace.
+    if coeff_tables is not None:
+        tables = coeff_tables                             # (S, 5, K)
+    else:
+        tables = coeff_tables_cached(
+            tuple(e.objective for e in experts),
+            tuple(e.schedule for e in experts),
+            config.num_steps, conv,
+        )                                                 # (S, 5, K)
 
     refresh_every = int(config.plan_refresh_every)
     if refresh_every < 1:
@@ -419,7 +431,8 @@ def _sample_fused(
         if backend == "dense" and not uniform:
             plan = full_dispatch_plan(w)
         else:
-            plan = make_dispatch_plan(w, k_slots, uniform=uniform)
+            plan = make_dispatch_plan(w, k_slots, uniform=uniform,
+                                      valid=valid)
         if plan_sharding is not None:
             # Sharded serving: routing metadata replicates across the mesh
             # (every shard needs the full plan to slice its resident
@@ -436,6 +449,7 @@ def _sample_fused(
             strategy=config.strategy, top_k=config.top_k,
             threshold=config.threshold,
             ddpm_low_noise_only=config.ddpm_low_noise_only,
+            valid=valid, cluster_map=cluster_map,
         )                                                 # (B, K)
         return make_plan(w)
 
@@ -616,6 +630,8 @@ def sample_ensemble(
     stacked_params=None,
     latent_sharding=None,
     plan_sharding=None,
+    coeff_tables=None,
+    cluster_map=None,
 ) -> Array:
     """Euler-ODE sampling with router-weighted heterogeneous fusion.
 
@@ -647,6 +663,20 @@ def sample_ensemble(
         ``DispatchPlan`` arrays (typically replicated — see
         ``launch.sharding.dispatch_plan_sharding``) so routing metadata
         never forces collectives inside the executor's expert branches.
+      coeff_tables: optional pre-built ``(S, 5, K)`` unified-coefficient
+        tables *as traced data* — elastic serving passes them so a
+        hot-added expert's objective/schedule reaches the sampler as new
+        values instead of a retrace; omitted, they come from the static
+        per-``ExpertSpec`` ``coeff_tables_cached`` path (fused engines
+        only — the reference engine derives coefficients per expert).
+      cluster_map: optional ``(K,)`` int cluster-id-per-slot array, the
+        traced counterpart of ``ExpertSpec.cluster_id`` for elastic
+        engines (see ``fusion.fusion_weights``); fused engines only.
+
+    ``stacked_params`` carrying an ``ExpertParamStore`` with a ``valid``
+    liveness mask (``param_store.pad_to_capacity``) makes the fused
+    engines membership-aware: routing renormalizes over live slots only
+    and dispatch never gathers or runs a dead slot's params.
 
     Returns samples at t=0 (clean latents).
     """
@@ -660,6 +690,12 @@ def sample_ensemble(
             "engines only"
         )
     if mode == "reference":
+        if coeff_tables is not None or cluster_map is not None:
+            raise ValueError(
+                "coeff_tables/cluster_map (elastic membership) require "
+                "the fused engines; the reference engine derives "
+                "coefficients from the static ExpertSpec list"
+            )
         return _sample_reference(
             key, experts, params, router_fn, shape, cond, null_cond,
             config, init_noise,
@@ -667,6 +703,7 @@ def sample_ensemble(
     return _sample_fused(
         key, experts, params, router_fn, shape, cond, null_cond, config,
         mode, init_noise, stacked_params, latent_sharding, plan_sharding,
+        coeff_tables, cluster_map,
     )
 
 

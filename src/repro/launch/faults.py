@@ -1,0 +1,335 @@
+"""Deterministic fault-injection harness for elastic serving.
+
+The paper's deployment model (decentralized, unreliable contributors)
+makes three fault classes routine rather than exceptional:
+
+  1. **Bad artifacts** — checkpoints arrive truncated, scrambled,
+     shape-mismatched against the ensemble, or carrying non-finite
+     params.  The writers below *manufacture* each class from a good
+     checkpoint, byte-deterministically (no RNG), so tests can assert
+     the exact quarantine behavior.
+  2. **Membership churn mid-traffic** — an expert is evicted or
+     hot-added between a request's ``submit()`` and its ``flush()``.
+     The engine must serve the in-flight request bit-identically to its
+     admission-time membership snapshot.
+  3. **Dispatch failures** — one coalesced group blows up at flush
+     time.  The failure must stay inside that group: healthy groups
+     dispatch, the poisoned group re-queues up to the cap, then fails
+     loudly on its own handles.
+
+Run standalone (forced multi-device CPU host, same trick as
+``sharded_parity``)::
+
+  PYTHONPATH=src REPRO_FAULT_DEVICES=2 python -m repro.launch.faults
+
+which executes the liveness-under-faults scenario end to end and prints
+a one-line JSON verdict (consumed by the CI fault-smoke step).
+"""
+
+import os
+import sys
+
+# MUST precede any jax import: jax locks the device count at first init.
+# Guarded on jax being absent so the test suite can import the fault
+# writers without mutating XLA_FLAGS in an already-initialized process.
+if "jax" not in sys.modules:
+    _N_DEV = int(os.environ.get("REPRO_FAULT_DEVICES", "2"))
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + f" --xla_force_host_platform_device_count={_N_DEV}"
+        ).strip()
+
+import json
+import tempfile
+
+import numpy as np
+
+__all__ = [
+    "truncate_checkpoint",
+    "scramble_checkpoint",
+    "poison_checkpoint_nonfinite",
+    "mismatch_checkpoint_shapes",
+    "FlushFaultInjector",
+    "main",
+]
+
+
+# --- checkpoint corruption writers (byte-deterministic, in place) -----------
+
+
+def truncate_checkpoint(path: str, frac: float = 0.5) -> str:
+    """Cut the artifact off mid-archive, as a dropped transfer would."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with open(path, "rb") as f:
+        blob = f.read()
+    keep = max(1, int(len(blob) * frac))
+    with open(path, "wb") as f:
+        f.write(blob[:keep])
+    return path
+
+
+def scramble_checkpoint(path: str) -> str:
+    """Replace the artifact with deterministic non-zip bytes."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    size = os.path.getsize(path)
+    junk = (b"\xde\xad\xbe\xef" * (size // 4 + 1))[:size]
+    with open(path, "wb") as f:
+        f.write(junk)
+    return path
+
+
+def _rewrite_npz(path, mutate):
+    """Load flat members, apply ``mutate(flat)``, re-save in place."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: np.asarray(z[k]) for k in z.files}
+    mutate(flat)
+    np.savez(path, **flat)
+    return path
+
+
+def poison_checkpoint_nonfinite(path: str, leaf: int = 0) -> str:
+    """Set one element of one float leaf to NaN (bit-rot / diverged
+    training); the archive itself stays perfectly well-formed."""
+
+    def mutate(flat):
+        keys = [k for k in sorted(flat) if k != "__metadata__"
+                and np.issubdtype(flat[k].dtype, np.floating)]
+        k = keys[leaf % len(keys)]
+        arr = flat[k].copy()
+        arr.reshape(-1)[0] = np.nan
+        flat[k] = arr
+
+    return _rewrite_npz(path, mutate)
+
+
+def mismatch_checkpoint_shapes(path: str) -> str:
+    """Double one leaf's length — a checkpoint from a *different*
+    architecture than the ensemble it claims to join."""
+
+    def mutate(flat):
+        k = sorted(k for k in flat if k != "__metadata__")[0]
+        flat[k] = np.concatenate(
+            [flat[k].reshape(-1), flat[k].reshape(-1)]
+        )
+
+    return _rewrite_npz(path, mutate)
+
+
+# --- flush-failure injection ------------------------------------------------
+
+
+class FlushFaultInjector:
+    """Raise inside ``_dispatch_group`` on chosen call numbers.
+
+    Deterministic: counts dispatch-group invocations (1-based) on the
+    wrapped engine and raises ``RuntimeError`` when the count is in
+    ``fail_on``; every other call passes through.  Use as a context
+    manager::
+
+        with FlushFaultInjector(engine, fail_on={1}):
+            engine.flush()          # first group fails, rest dispatch
+    """
+
+    def __init__(self, engine, fail_on=(1,), exc_type=RuntimeError):
+        self.engine = engine
+        self.fail_on = set(fail_on)
+        self.exc_type = exc_type
+        self.calls = 0
+        self._orig = None
+
+    def _wrapped(self, has_text, text_tail, reqs):
+        self.calls += 1
+        if self.calls in self.fail_on:
+            raise self.exc_type(
+                f"injected dispatch failure (call {self.calls})"
+            )
+        return self._orig(has_text, text_tail, reqs)
+
+    def __enter__(self):
+        self._orig = self.engine._dispatch_group
+        self.engine._dispatch_group = self._wrapped
+        return self
+
+    def __exit__(self, *exc):
+        self.engine._dispatch_group = self._orig
+        self._orig = None
+        return False
+
+
+# --- liveness-under-faults scenario (CI smoke) ------------------------------
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import SamplerConfig
+    from repro.launch.serve import ServingEngine
+    from repro.launch.sharded_parity import toy_ensemble
+    from repro.models import dit as D
+    from repro.models.config import dit_b2, router_b2
+    from repro.training import (
+        expert_metadata, load_checkpoint, save_checkpoint,
+    )
+
+    ndev = jax.device_count()
+    assert ndev >= 2, f"need a forced multi-device host, got {ndev}"
+    KEY = jax.random.PRNGKey(0)
+    verdict = {"devices": ndev}
+
+    # --- A. quarantine at assembly: a directory with corrupt artifacts
+    # still serves, holes masked, on the forced expert-sharded mesh.
+    cfg = dit_b2().reduced(latent_size=8)
+    rcfg = router_b2(num_clusters=4).reduced(latent_size=8)
+    with tempfile.TemporaryDirectory() as d:
+        for cid in (0, 1, 3):
+            save_checkpoint(
+                os.path.join(d, f"expert{cid}.npz"),
+                D.init(cfg, jax.random.PRNGKey(10 + cid)),
+                metadata=expert_metadata(
+                    name=f"e{cid}", objective="fm", schedule="linear",
+                    cluster_id=cid, arch=cfg.name,
+                ),
+            )
+        # cid 2 truncated (leaves a hole → masked EMPTY slot), plus one
+        # pure-garbage artifact that never yields a cluster id at all.
+        save_checkpoint(
+            os.path.join(d, "expert2.npz"),
+            D.init(cfg, jax.random.PRNGKey(12)),
+            metadata=expert_metadata(
+                name="e2", objective="fm", schedule="linear",
+                cluster_id=2, arch=cfg.name,
+            ),
+        )
+        truncate_checkpoint(os.path.join(d, "expert2.npz"), 0.5)
+        with open(os.path.join(d, "expert9.npz"), "wb") as f:
+            f.write(b"not an archive")
+        save_checkpoint(
+            os.path.join(d, "router.npz"),
+            D.init(rcfg, jax.random.PRNGKey(99)),
+        )
+        eng = ServingEngine.from_checkpoint_dir(
+            d, dit_cfg=cfg, router_cfg=rcfg,
+            sampler=SamplerConfig(num_steps=2, cfg_scale=3.0,
+                                  strategy="topk", top_k=2),
+            on_bad_checkpoint="skip",
+            n_expert_shards=ndev, n_data_shards=1,
+        )
+        assert eng.elastic and eng.num_live_experts == 3
+        assert len(eng.quarantine) == 2, eng.quarantine
+        assert eng.expert_health[2] == "EMPTY"
+        text = jax.random.normal(KEY, (2, cfg.text_len, cfg.text_dim))
+        out = np.asarray(eng.generate(KEY, text, 2))
+        assert np.isfinite(out).all()
+        assert "quarantined=2" in eng.membership_line()
+    verdict["assembly_quarantine"] = "ok"
+
+    # --- B. membership churn mid-traffic on the toy elastic engine:
+    # hot-add + evict between submit() and flush(); the in-flight
+    # request must match its admission-time snapshot bit-for-bit.
+    experts, params, router_fn, latent = toy_ensemble(8)
+    sampler = SamplerConfig(num_steps=4, cfg_scale=3.0,
+                            strategy="topk", top_k=2)
+    eng = ServingEngine(
+        experts=experts[:6], expert_params=params[:6],
+        router_fn=router_fn, latent_shape=latent, sampler=sampler,
+        capacity=8, n_expert_shards=ndev, n_data_shards=1,
+    )
+    text = jax.random.normal(jax.random.PRNGKey(3), (2, 5, 6))
+    admitted = np.asarray(eng.generate(KEY, text, 2))
+    h_old = eng.submit(KEY, text, 2)            # admitted under epoch 0
+    with tempfile.TemporaryDirectory() as d:
+        ck = os.path.join(d, "expert6.npz")
+        save_checkpoint(ck, params[6], metadata=expert_metadata(
+            name="e6", objective=experts[6].objective,
+            schedule=experts[6].schedule, cluster_id=6, arch="toy",
+        ))
+        slot = eng.add_expert(ck)
+    assert slot == 6
+    eng.evict_expert(2)
+    h_new = eng.submit(KEY, text, 2)            # admitted under epoch 2
+    assert eng.flush() == 2                     # one dispatch per epoch
+    old = np.asarray(h_old.result())
+    new = np.asarray(h_new.result())
+    assert np.array_equal(old, admitted), \
+        "in-flight request must be bit-identical to its admission plan"
+    assert not np.array_equal(new, old), \
+        "post-churn request must see the new membership"
+    assert np.isfinite(new).all()
+    assert eng.num_live_experts == 6
+    verdict["inflight_snapshot"] = "ok"
+
+    # Graceful retire: masked immediately, DRAINING until the next
+    # flush completes, then the slot is reusable.
+    h = eng.submit(jax.random.PRNGKey(5), text, 2)
+    eng.retire_expert(5)
+    assert eng.expert_health[5] == "DRAINING"
+    eng.flush()
+    assert np.isfinite(np.asarray(h.result())).all()
+    assert eng.expert_health[5] == "EVICTED"
+    verdict["retire_drain"] = "ok"
+
+    # --- C. bad artifacts at add_expert time: every corruption class is
+    # rejected with a named error, quarantined, and leaves the slot dead.
+    q0 = eng.stats["quarantined_checkpoints"]
+    with tempfile.TemporaryDirectory() as d:
+        bad = []
+        for i, corrupt in enumerate((
+            truncate_checkpoint, scramble_checkpoint,
+            poison_checkpoint_nonfinite, mismatch_checkpoint_shapes,
+        )):
+            p = os.path.join(d, f"bad{i}.npz")
+            save_checkpoint(p, params[7], metadata=expert_metadata(
+                name=f"bad{i}", objective="fm", schedule="linear",
+                cluster_id=7, arch="toy",
+            ))
+            bad.append(corrupt(p))
+        for p in bad:
+            try:
+                eng.add_expert(p)
+            except ValueError:
+                pass
+            else:
+                raise AssertionError(f"{p}: corrupt artifact was admitted")
+    assert eng.stats["quarantined_checkpoints"] == q0 + 4
+    assert eng.expert_health[2] == "EVICTED"    # slot untouched by failures
+    verdict["add_expert_quarantine"] = "ok"
+
+    # --- D. flush-failure isolation: the injected failure takes down
+    # only its own group; the healthy group dispatches the same flush.
+    h_text = eng.submit(jax.random.PRNGKey(6), text, 2)
+    h_uncond = eng.submit(jax.random.PRNGKey(7), None, 2)
+    with FlushFaultInjector(eng, fail_on={1}) as inj:
+        ok = eng.flush()
+    assert ok == 1 and inj.calls == 2, (ok, inj.calls)
+    done = [h for h in (h_text, h_uncond) if h.state == "DONE"]
+    queued = [h for h in (h_text, h_uncond) if h.state == "QUEUED"]
+    assert len(done) == 1 and len(queued) == 1
+    assert np.isfinite(np.asarray(done[0].result())).all()
+    assert eng.flush() == 1                     # re-queued group recovers
+    assert queued[0].state == "DONE"
+    # and a *persistent* failure exhausts the cap onto the handle:
+    h_poison = eng.submit(jax.random.PRNGKey(8), text, 2)
+    with FlushFaultInjector(eng, fail_on={1, 2}):
+        eng.flush()
+        eng.flush()
+    assert h_poison.state == "FAILED"
+    try:
+        h_poison.result()
+    except RuntimeError as e:
+        assert "injected dispatch failure" in str(e)
+    else:
+        raise AssertionError("FAILED handle must raise from result()")
+    verdict["flush_isolation"] = "ok"
+
+    verdict["membership"] = eng.membership_line()
+    print(json.dumps(verdict))
+
+
+if __name__ == "__main__":
+    main()

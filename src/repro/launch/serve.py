@@ -108,7 +108,9 @@ from repro.core import (
     DenseStore,
     ExpertSpec,
     SamplerConfig,
+    coeff_tables_cached,
     make_store,
+    pad_to_capacity,
     params_are_stackable,
     sample_ensemble,
 )
@@ -126,18 +128,80 @@ from repro.training import load_checkpoint
 #: fallback when the metadata carries no ``cluster_id``).
 _EXPERT_IDX_RE = re.compile(r"expert[_-]?(\d+)")
 
+#: Per-capacity-slot health states (elastic membership):
+#: ``EMPTY`` — never-filled capacity padding (zero params, masked);
+#: ``ACTIVE`` — live, routable;
+#: ``DRAINING`` — ``retire_expert``: masked immediately (no NEW routing)
+#: but held until the next ``flush()`` completes the in-flight requests
+#: admitted under it, then transitions to ``EVICTED``;
+#: ``QUARANTINED`` — masked because its artifact/params failed integrity
+#: checks (recorded in ``ServingEngine.quarantine``);
+#: ``EVICTED`` — masked by ``evict_expert``; the slot is reusable by
+#: ``add_expert``.
+EXPERT_HEALTH_STATES = ("EMPTY", "ACTIVE", "DRAINING", "QUARANTINED",
+                        "EVICTED")
+
+
+def _validate_expert_params(params, template, path: str) -> None:
+    """Integrity gate for a contributor checkpoint's param pytree.
+
+    Raises ``ValueError`` naming the file and the reason: tree-structure
+    or leaf-shape mismatch against the ensemble's slot template, or
+    non-finite (NaN/Inf) leaf values — the failure classes a corrupt or
+    foreign artifact produces *after* the archive itself parsed.
+    """
+    leaves, treedef = jax.tree.flatten(params)
+    if template is not None:
+        tdef, shapes = template
+        if treedef != tdef:
+            raise ValueError(
+                f"{path}: param tree structure does not match the "
+                f"ensemble's expert template — wrong architecture or a "
+                f"partially-written checkpoint"
+            )
+        for leaf, shape in zip(leaves, shapes):
+            if tuple(np.shape(leaf)) != tuple(shape):
+                raise ValueError(
+                    f"{path}: leaf shape mismatch {tuple(np.shape(leaf))} "
+                    f"!= template {tuple(shape)}"
+                )
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+            raise ValueError(
+                f"{path}: non-finite leaf values (NaN/Inf) — corrupt "
+                f"training artifact"
+            )
+
 
 @dataclasses.dataclass
 class PendingRequest:
-    """Handle returned by ``ServingEngine.submit``; resolved by ``flush``."""
+    """Handle returned by ``ServingEngine.submit``; resolved by ``flush``.
+
+    ``state`` walks QUEUED → DONE, or QUEUED → FAILED once the request's
+    dispatch group exhausted its automatic re-queues — ``result()`` then
+    re-raises the carried dispatch error instead of hanging the caller.
+    On an elastic engine the request also snapshots the membership it was
+    admitted under (store + coefficient tables + cluster map, all
+    immutable), so later evictions/hot-adds cannot change its output.
+    """
 
     key: jax.Array
     text_emb: jnp.ndarray | None
     batch_size: int
     _result: jnp.ndarray | None = None
     done: bool = False
+    state: str = "QUEUED"
+    error: BaseException | None = None
+    requeues: int = 0
+    _membership: tuple | None = None
 
     def result(self) -> jnp.ndarray:
+        if self.state == "FAILED":
+            raise RuntimeError(
+                f"request failed after {self.requeues} dispatch "
+                f"attempt(s): {self.error!r}"
+            ) from self.error
         if not self.done:
             raise RuntimeError(
                 "request not yet flushed — submit() only enqueues; call "
@@ -172,6 +236,21 @@ class ServingEngine:
     #: embeddings pass through unhashed (no forced device→host copy).
     #: 0 disables.
     cond_cache_size: int = 64
+    #: elastic membership: when set, the stacked store pads to this many
+    #: capacity slots with a traced ``(K_cap,)`` validity mask, and the
+    #: engine gains ``add_expert``/``evict_expert``/``retire_expert``/
+    #: ``quarantine_expert`` — membership changes reach the compiled
+    #: sampler as new argument *values* (store, coefficient tables,
+    #: cluster map), never a retrace.  None keeps the classic
+    #: fixed-membership engine bit-identical.
+    capacity: int | None = None
+    #: automatic re-queues per request before a failing dispatch group
+    #: marks its requests FAILED (carrying the exception) instead of
+    #: re-poisoning every subsequent ``flush()`` forever.
+    max_request_requeues: int = 1
+    #: per-slot startup health (elastic): lets ``from_checkpoint_dir``
+    #: mark quarantined-at-load slots; defaults to all-ACTIVE.
+    initial_health: list | None = None
 
     def __post_init__(self) -> None:
         self._compiled: dict = {}
@@ -180,7 +259,12 @@ class ServingEngine:
         self.stats = {"traces": 0, "requests": 0,
                       "merged_batches": 0, "batched_requests": 0,
                       "cond_cache_hits": 0, "cond_cache_misses": 0,
-                      "plan_refreshes": 0}
+                      "plan_refreshes": 0,
+                      "experts_added": 0, "experts_evicted": 0,
+                      "quarantined_checkpoints": 0, "degraded_steps": 0,
+                      "request_requeues": 0, "failed_requests": 0}
+        self.quarantine: list[dict] = []
+        self.elastic = self.capacity is not None
         self.homogeneous = len(self.experts) <= 1 or (
             all(e.apply_fn is self.experts[0].apply_fn for e in self.experts)
             and params_are_stackable(self.expert_params)
@@ -221,12 +305,24 @@ class ServingEngine:
             make_store(D.stack_expert_params(self.expert_params), dtype=pd)
             if self.homogeneous and self.expert_params else None
         )
+        # Slot template for integrity-validating incoming checkpoints
+        # (captured before a quantized store drops the fp list).
+        self._slot_template = None
+        if self.expert_params:
+            leaves, treedef = jax.tree.flatten(self.expert_params[0])
+            self._slot_template = (
+                treedef, [tuple(np.shape(leaf)) for leaf in leaves]
+            )
         if quantized:
             # The quantized store IS the resident representation: drop
             # the full-precision per-expert list so the ~4x byte saving
             # is real, not an extra copy.  (The dense fallback and the
             # reference engine need that list; they raise clearly.)
             self.expert_params = None
+        self.expert_health = ["ACTIVE"] * len(self.experts)
+        self.membership_epoch = 0
+        if self.elastic:
+            self._init_elastic()
         self.mesh = None
         if self.n_expert_shards != 1 or self.n_data_shards is not None:
             if self.n_expert_shards > 1 and \
@@ -242,16 +338,266 @@ class ServingEngine:
             self.mesh = make_expert_mesh(self.n_expert_shards,
                                          self.n_data_shards)
             if self.param_store is not None:
-                # Stores are registered pytrees: the quantized scales are
-                # (K,) leaves annotated with the same leading "expert"
-                # axis, so they shard with the leaves they rescale.
-                self.param_store = jax.device_put(
-                    self.param_store,
-                    expert_param_shardings(
-                        self.param_store, self.mesh,
-                        logical_axes=self.param_store.logical_axes(),
-                    ),
+                self.param_store = self._put_store(self.param_store)
+
+    def _put_store(self, store):
+        """Place a store on the expert mesh (no-op unsharded).
+
+        Stores are registered pytrees: the quantized scales AND the
+        elastic validity mask are ``(K,)`` leaves annotated with the same
+        leading "expert" axis, so they shard with the leaves they
+        rescale/gate.  Membership updates re-place the (functionally
+        new) store through the same shardings.
+        """
+        if store is None or self.mesh is None:
+            return store
+        return jax.device_put(
+            store,
+            expert_param_shardings(
+                store, self.mesh, logical_axes=store.logical_axes(),
+            ),
+        )
+
+    # -- elastic membership -------------------------------------------------
+
+    def _init_elastic(self) -> None:
+        k0 = len(self.experts)
+        if self.param_store is None:
+            raise ValueError(
+                "elastic serving (capacity=...) needs a homogeneous "
+                "ensemble with stackable params — the validity-masked "
+                "capacity layout lives in the stacked ExpertParamStore"
+            )
+        if self.capacity < k0:
+            raise ValueError(
+                f"capacity={self.capacity} < {k0} loaded experts"
+            )
+        if self.sampler.strategy not in ("top1", "topk"):
+            raise ValueError(
+                f"elastic serving requires per-sample routing (strategy "
+                f"'top1' or 'topk'); got {self.sampler.strategy!r}"
+            )
+        if self.engine not in ("auto", "routed"):
+            raise ValueError(
+                f"elastic serving requires the routed engine (engine "
+                f"'auto' or 'routed'); got {self.engine!r}"
+            )
+        if self.router_fn is None:
+            raise ValueError(
+                "elastic serving routes per sample; a router_fn is "
+                "required"
+            )
+        if self.sampler.ddpm_low_noise_only > 0.0:
+            raise ValueError(
+                "elastic serving is incompatible with ddpm_low_noise_only "
+                "> 0: the §7.3 gate bakes each slot's objective into the "
+                "trace, so a hot-added expert changing a slot's objective "
+                "would silently bypass it"
+            )
+        # Own the membership lists: slots mutate on add/evict and must not
+        # alias the caller's.
+        self.experts = list(self.experts)
+        health = (list(self.initial_health) if self.initial_health
+                  else ["ACTIVE"] * k0)
+        if len(health) != k0 or any(
+            h not in EXPERT_HEALTH_STATES for h in health
+        ):
+            raise ValueError(
+                f"initial_health must be {k0} states from "
+                f"{EXPERT_HEALTH_STATES}; got {health}"
+            )
+        # Capacity padding: EMPTY slots carry zero params, a placeholder
+        # spec (same apply_fn — objectives/schedules reach the sampler as
+        # traced coefficient tables, so the placeholder values never
+        # execute), and a dead validity bit.
+        for i in range(k0, self.capacity):
+            self.experts.append(dataclasses.replace(
+                self.experts[0], name=f"<empty:{i}>", objective="fm",
+                schedule="linear", cluster_id=0,
+            ))
+        self.expert_health = health + ["EMPTY"] * (self.capacity - k0)
+        self.param_store = pad_to_capacity(self.param_store, self.capacity)
+        mask = jnp.array([h == "ACTIVE" for h in self.expert_health])
+        self.param_store = self.param_store.with_valid(mask)
+        self._refresh_membership_arrays()
+
+    def _refresh_membership_arrays(self) -> None:
+        """Rebuild the traced membership side-cars from the slot specs.
+
+        The ``(S, 5, K_cap)`` unified-coefficient tables and the
+        ``(K_cap,)`` cluster map are jit *arguments* on elastic engines —
+        a hot-added expert's objective/schedule/cluster lands as new
+        values under the existing trace (``coeff_tables_cached`` makes
+        the rebuild a process-wide cache hit for repeated memberships).
+        """
+        self._coeff_tables = coeff_tables_cached(
+            tuple(e.objective for e in self.experts),
+            tuple(e.schedule for e in self.experts),
+            self.sampler.num_steps, self.sampler.conversion,
+        )
+        self._cluster_map = jnp.array(
+            [max(e.cluster_id, 0) for e in self.experts], jnp.int32
+        )
+
+    def _membership(self) -> tuple | None:
+        """Immutable admission-time snapshot (epoch, store, tables, map).
+
+        Store/table/map updates are pure-functional, so holding the tuple
+        pins a request's routing substrate bit-exactly whatever
+        membership ops happen before its flush.
+        """
+        if not self.elastic:
+            return None
+        return (self.membership_epoch, self.param_store,
+                self._coeff_tables, self._cluster_map)
+
+    def _require_elastic(self, op: str) -> None:
+        if not self.elastic:
+            raise ValueError(
+                f"{op} requires an elastic engine — construct the "
+                f"ServingEngine with capacity=<K_cap> (or "
+                f"from_checkpoint_dir(capacity=...))"
+            )
+
+    @property
+    def num_live_experts(self) -> int:
+        return sum(h == "ACTIVE" for h in self.expert_health)
+
+    def add_expert(self, ckpt_path: str, *, slot: int | None = None) -> int:
+        """Hot-add a contributor checkpoint into a free capacity slot.
+
+        Pipeline: integrity-validate (named ``ValueError``s; failures are
+        recorded in ``self.quarantine`` and counted before re-raising —
+        the engine itself stays healthy) → quantize per
+        ``sampler.param_dtype`` into the slot (``store.set_expert``) →
+        incremental router-cluster refresh (coefficient tables + cluster
+        map rebuilt from the slot specs) → flip the slot's validity bit.
+        A reader can never observe a half-installed expert: the store
+        update is functional and the mask flips last, in the same new
+        store object.  Returns the slot index.
+        """
+        self._require_elastic("add_expert")
+        if slot is None:
+            free = [i for i, h in enumerate(self.expert_health)
+                    if h in ("EMPTY", "EVICTED")]
+            if not free:
+                raise RuntimeError(
+                    f"no free capacity slot (capacity={self.capacity}, "
+                    f"health={self.expert_health}); evict or retire an "
+                    f"expert first"
                 )
+            slot = free[0]
+        elif self.expert_health[slot] in ("ACTIVE", "DRAINING"):
+            raise ValueError(
+                f"slot {slot} is {self.expert_health[slot]}; evict it "
+                f"before overwriting"
+            )
+        try:
+            params, meta = load_checkpoint(ckpt_path)
+            for field in ("objective", "schedule"):
+                if field not in meta:
+                    raise ValueError(
+                        f"{ckpt_path}: metadata missing {field!r} — not a "
+                        f"self-describing expert checkpoint"
+                    )
+            _validate_expert_params(params, self._slot_template, ckpt_path)
+        except (ValueError, FileNotFoundError) as e:
+            self.quarantine.append(
+                {"path": ckpt_path, "reason": str(e), "slot": None}
+            )
+            self.stats["quarantined_checkpoints"] += 1
+            raise
+        store = self.param_store.set_expert(slot, params)
+        store = store.with_valid(store.valid_mask().at[slot].set(True))
+        cid = int(meta.get("cluster_id", slot))
+        self.experts[slot] = dataclasses.replace(
+            self.experts[0],
+            name=meta.get("name", os.path.basename(ckpt_path)),
+            objective=meta["objective"], schedule=meta["schedule"],
+            cluster_id=max(cid, 0),
+        )
+        self.expert_health[slot] = "ACTIVE"
+        self.param_store = self._put_store(store)
+        self._refresh_membership_arrays()
+        self.membership_epoch += 1
+        self.stats["experts_added"] += 1
+        return slot
+
+    def _mask_slot(self, e: int, state: str) -> int:
+        if not (0 <= e < len(self.experts)):
+            raise IndexError(
+                f"expert slot {e} out of range [0, {len(self.experts)})"
+            )
+        if self.expert_health[e] not in ("ACTIVE", "DRAINING"):
+            raise ValueError(
+                f"slot {e} is {self.expert_health[e]}, not servable"
+            )
+        store = self.param_store.with_valid(
+            self.param_store.valid_mask().at[e].set(False)
+        )
+        self.param_store = self._put_store(store)
+        self.expert_health[e] = state
+        self.membership_epoch += 1
+        return e
+
+    def evict_expert(self, e: int) -> int:
+        """Mask slot ``e`` immediately (state ``EVICTED``).
+
+        New ``generate``/``submit`` calls route over the survivors; any
+        already-``submit()``ed request completes against its
+        admission-time membership snapshot, bit-identical to a flush
+        issued before the eviction.
+        """
+        self._require_elastic("evict_expert")
+        self._mask_slot(e, "EVICTED")
+        self.stats["experts_evicted"] += 1
+        return e
+
+    def retire_expert(self, e: int) -> int:
+        """Graceful eviction: masked immediately, ``DRAINING`` until the
+        next ``flush()`` completes the in-flight requests admitted under
+        it, then ``EVICTED`` (and reusable by ``add_expert``)."""
+        self._require_elastic("retire_expert")
+        self._mask_slot(e, "DRAINING")
+        self.stats["experts_evicted"] += 1
+        return e
+
+    def quarantine_expert(self, e: int, reason: str = "") -> int:
+        """Mask slot ``e`` as ``QUARANTINED`` (suspect params at runtime,
+        e.g. a health checker caught NaNs) and record it."""
+        self._require_elastic("quarantine_expert")
+        self._mask_slot(e, "QUARANTINED")
+        self.quarantine.append(
+            {"path": self.experts[e].name, "reason": reason or "runtime",
+             "slot": e}
+        )
+        self.stats["quarantined_checkpoints"] += 1
+        return e
+
+    def _note_degraded(self, store) -> None:
+        """Count degraded-mode steps: serving with fewer live experts
+        than the routing width wants (k slots renormalize over the
+        survivors — correct, but quality-degraded; §3.1)."""
+        if not self.elastic:
+            return
+        n_live = int(np.asarray(store.valid_mask()).sum())
+        k_slots = 1 if self.sampler.strategy == "top1" \
+            else min(self.sampler.top_k, store.num_experts)
+        if n_live < k_slots:
+            self.stats["degraded_steps"] += self.sampler.num_steps
+
+    def membership_line(self) -> str:
+        """One-line membership/fault summary (the serve CLI prints it, and
+        the quarantine counters round-trip through it — tested)."""
+        s = self.stats
+        cap = self.capacity if self.elastic else len(self.experts)
+        return (f"membership: live={self.num_live_experts}/{cap} "
+                f"added={s['experts_added']} "
+                f"evicted={s['experts_evicted']} "
+                f"quarantined={s['quarantined_checkpoints']} "
+                f"degraded_steps={s['degraded_steps']} "
+                f"requeues={s['request_requeues']} "
+                f"failed={s['failed_requests']}")
 
     @property
     def stacked_params(self):
@@ -276,6 +622,8 @@ class ServingEngine:
         n_expert_shards: int = 1,
         n_data_shards: int | None = None,
         cond_cache_size: int = 64,
+        capacity: int | None = None,
+        on_bad_checkpoint: str = "raise",
     ) -> "ServingEngine":
         """Assemble an engine from a directory of expert checkpoints.
 
@@ -284,7 +632,17 @@ class ServingEngine:
         filename index), never lexicographically — with ≥10 experts
         ``sorted(glob(...))`` would load ``expert10`` before ``expert2``
         and silently scramble the router's positional cluster→expert
-        mapping.  Duplicate or non-contiguous cluster ids raise.
+        mapping.  Duplicate cluster ids always raise.
+
+        ``on_bad_checkpoint`` controls what a corrupt/truncated/
+        shape-mismatched artifact does: ``'raise'`` (default) propagates
+        the named ``ValueError``; ``'skip'`` quarantines the file
+        (recorded on ``engine.quarantine`` and in
+        ``stats['quarantined_checkpoints']``) and serves the remaining
+        experts, filling any cluster-id hole the bad file leaves with a
+        masked EMPTY slot — which forces the elastic (capacity) path so
+        the hole never routes.  ``capacity`` (> number of slots) reserves
+        padded slots for :meth:`add_expert` hot-joins.
 
         ``param_dtype`` (overrides ``sampler.param_dtype`` when given)
         selects the stacked-store storage: ``'int8'``/``'fp8'`` quantize
@@ -292,23 +650,53 @@ class ServingEngine:
         8-expert ensemble holds ~¼ the resident expert-param bytes of
         the fp32 checkpoints it was assembled from.
         """
+        if on_bad_checkpoint not in ("raise", "skip"):
+            raise ValueError(
+                f"on_bad_checkpoint must be 'raise' or 'skip', "
+                f"got {on_bad_checkpoint!r}"
+            )
         apply_fn = D.make_expert_apply(dit_cfg)
         paths = glob.glob(os.path.join(ckpt_dir, "expert*.npz"))
         if not paths:
             raise FileNotFoundError(f"no expert*.npz under {ckpt_dir}")
         loaded: list[tuple[int, str, object, dict]] = []
-        for path in paths:
-            p, meta = load_checkpoint(path)
-            cid = int(meta.get("cluster_id", -1))
-            if cid < 0:
-                m = _EXPERT_IDX_RE.search(os.path.basename(path))
-                if m is None:
-                    raise ValueError(
-                        f"{path}: no cluster_id metadata and no numeric "
-                        f"index in the filename — cannot place this expert"
-                    )
-                cid = int(m.group(1))
+        quarantined: list[dict] = []
+        template = None
+        for path in sorted(paths):
+            try:
+                p, meta = load_checkpoint(path)
+                for field in ("objective", "schedule"):
+                    if field not in meta:
+                        raise ValueError(
+                            f"{path}: missing '{field}' metadata — not a "
+                            f"self-describing expert checkpoint"
+                        )
+                cid = int(meta.get("cluster_id", -1))
+                if cid < 0:
+                    m = _EXPERT_IDX_RE.search(os.path.basename(path))
+                    if m is None:
+                        raise ValueError(
+                            f"{path}: no cluster_id metadata and no numeric "
+                            f"index in the filename — cannot place this "
+                            f"expert"
+                        )
+                    cid = int(m.group(1))
+                if template is None:
+                    leaves, treedef = jax.tree_util.tree_flatten(p)
+                    template = (treedef, [tuple(np.shape(x)) for x in leaves])
+                else:
+                    _validate_expert_params(p, template, path)
+            except (ValueError, FileNotFoundError) as e:
+                if on_bad_checkpoint == "raise":
+                    raise
+                quarantined.append({"path": path, "reason": str(e)})
+                continue
             loaded.append((cid, path, p, meta))
+        if not loaded:
+            raise ValueError(
+                f"every expert checkpoint under {ckpt_dir} was quarantined: "
+                f"{[q['path'] for q in quarantined]}"
+            )
         seen: dict[int, str] = {}
         for cid, path, _, _ in loaded:
             if cid in seen:
@@ -316,24 +704,40 @@ class ServingEngine:
                     f"duplicate cluster_id {cid}: {seen[cid]} and {path}"
                 )
             seen[cid] = path
-        want = range(len(loaded))
-        if set(seen) != set(want):
+        n_slots = max(seen) + 1
+        holes = sorted(set(range(n_slots)) - set(seen))
+        if holes and on_bad_checkpoint == "raise":
             raise ValueError(
-                f"expert checkpoints must cover cluster ids 0..{len(loaded) - 1} "
+                f"expert checkpoints must cover cluster ids 0..{n_slots - 1} "
                 f"exactly (the router posterior's columns are positional); "
-                f"got {sorted(seen)} — missing {sorted(set(want) - set(seen))}"
+                f"got {sorted(seen)} — missing {holes}"
             )
         loaded.sort(key=lambda item: item[0])
-        experts, params = [], []
-        for cid, path, p, meta in loaded:
-            experts.append(ExpertSpec(
-                name=meta.get("name", os.path.basename(path)),
-                objective=meta["objective"],
-                schedule=meta["schedule"],
-                apply_fn=apply_fn,
-                cluster_id=cid,
-            ))
-            params.append(p)
+        by_cid = {cid: (path, p, meta) for cid, path, p, meta in loaded}
+        experts, params, health = [], [], []
+        for cid in range(n_slots):
+            if cid in by_cid:
+                path, p, meta = by_cid[cid]
+                experts.append(ExpertSpec(
+                    name=meta.get("name", os.path.basename(path)),
+                    objective=meta["objective"],
+                    schedule=meta["schedule"],
+                    apply_fn=apply_fn,
+                    cluster_id=cid,
+                ))
+                params.append(p)
+                health.append("ACTIVE")
+            else:
+                # Masked placeholder for a quarantined slot: zero params,
+                # valid=False — never routed, never gathered.
+                experts.append(ExpertSpec(
+                    name=f"<quarantined:{cid}>", objective="fm",
+                    schedule="linear", apply_fn=apply_fn, cluster_id=cid,
+                ))
+                params.append(jax.tree.map(jnp.zeros_like, loaded[0][2]))
+                health.append("EMPTY")
+        if holes and capacity is None:
+            capacity = n_slots                   # masking needs elastic mode
         router_fn = None
         router_path = os.path.join(ckpt_dir, "router.npz")
         if router_cfg is not None and os.path.exists(router_path):
@@ -342,7 +746,7 @@ class ServingEngine:
         sampler = sampler if sampler is not None else SamplerConfig()
         if param_dtype is not None:
             sampler = dataclasses.replace(sampler, param_dtype=param_dtype)
-        return cls(
+        eng = cls(
             experts=experts, expert_params=params, router_fn=router_fn,
             latent_shape=(dit_cfg.latent_size, dit_cfg.latent_size,
                           dit_cfg.latent_channels),
@@ -350,7 +754,13 @@ class ServingEngine:
             engine=engine,
             n_expert_shards=n_expert_shards, n_data_shards=n_data_shards,
             cond_cache_size=cond_cache_size,
+            capacity=capacity,
+            initial_health=health if capacity is not None else None,
         )
+        if quarantined:
+            eng.quarantine.extend(quarantined)
+            eng.stats["quarantined_checkpoints"] += len(quarantined)
+        return eng
 
     # -- cross-request conditioning cache -----------------------------------
 
@@ -419,24 +829,59 @@ class ServingEngine:
                 plan_sharding = dispatch_plan_sharding(self.mesh)
                 batch_sharded = len(lat_spec) > 0 and lat_spec[0] is not None
                 text_spec = P("data") if (has_text and batch_sharded) else P()
-                jit_kwargs["in_shardings"] = (
+                in_shardings = [
                     NamedSharding(self.mesh, P()),        # PRNG key
                     latent_sharding,                      # initial noise
                     NamedSharding(self.mesh, text_spec),  # text embeddings
-                )
+                ]
+                if self.elastic:
+                    in_shardings += [
+                        expert_param_shardings(
+                            self.param_store, self.mesh,
+                            logical_axes=self.param_store.logical_axes(),
+                        ),                                # membership store
+                        NamedSharding(self.mesh, P()),    # coeff tables
+                        NamedSharding(self.mesh, P()),    # cluster map
+                    ]
+                jit_kwargs["in_shardings"] = tuple(in_shardings)
 
-            def _sample(key, noise, text_emb):
-                self.stats["traces"] += 1      # runs at trace time only
-                cond = {"text_emb": text_emb} if has_text else None
-                null = {"text_emb": None} if has_text else None
-                return sample_ensemble(
-                    key, self.experts, self.expert_params, self.router_fn,
-                    shape, cond=cond, null_cond=null, config=self.sampler,
-                    engine=self.engine, init_noise=noise,
-                    stacked_params=self.param_store,
-                    latent_sharding=latent_sharding,
-                    plan_sharding=plan_sharding,
-                )
+            if self.elastic:
+                # Elastic engines take the membership substrate — store
+                # (with its validity mask), coefficient tables, cluster
+                # map — as jit ARGUMENTS: closing over them would bake
+                # membership into the trace as constants, forcing a
+                # recompile per add/evict.  Shapes are capacity-stable,
+                # so every epoch hits the same compiled fn.
+                def _sample(key, noise, text_emb, store, tables, cmap):
+                    self.stats["traces"] += 1  # runs at trace time only
+                    cond = {"text_emb": text_emb} if has_text else None
+                    null = {"text_emb": None} if has_text else None
+                    return sample_ensemble(
+                        key, self.experts, self.expert_params,
+                        self.router_fn,
+                        shape, cond=cond, null_cond=null,
+                        config=self.sampler,
+                        engine=self.engine, init_noise=noise,
+                        stacked_params=store,
+                        latent_sharding=latent_sharding,
+                        plan_sharding=plan_sharding,
+                        coeff_tables=tables, cluster_map=cmap,
+                    )
+            else:
+                def _sample(key, noise, text_emb):
+                    self.stats["traces"] += 1  # runs at trace time only
+                    cond = {"text_emb": text_emb} if has_text else None
+                    null = {"text_emb": None} if has_text else None
+                    return sample_ensemble(
+                        key, self.experts, self.expert_params,
+                        self.router_fn,
+                        shape, cond=cond, null_cond=null,
+                        config=self.sampler,
+                        engine=self.engine, init_noise=noise,
+                        stacked_params=self.param_store,
+                        latent_sharding=latent_sharding,
+                        plan_sharding=plan_sharding,
+                    )
 
             # donation is a no-op (with a warning) on CPU; only request it
             # where XLA can actually alias the buffer.
@@ -444,6 +889,19 @@ class ServingEngine:
             fn = jax.jit(_sample, donate_argnums=donate, **jit_kwargs)
             self._compiled[cache_key] = fn
         return fn
+
+    def _run_compiled(self, fn, key, noise, text, membership=None):
+        """Invoke a compiled sampler with the right membership arguments.
+
+        ``membership`` is an admission-time snapshot tuple for queued
+        requests; ``None`` means current membership (``generate``)."""
+        if not self.elastic:
+            return fn(key, noise, text)
+        if membership is None:
+            membership = self._membership()
+        _, store, tables, cmap = membership
+        self._note_degraded(store)
+        return fn(key, noise, text, store, tables, cmap)
 
     def generate(
         self, key, batch_text_emb: jnp.ndarray | None, batch_size: int,
@@ -459,7 +917,7 @@ class ServingEngine:
         else:
             batch_text_emb = jnp.zeros((0,), jnp.float32)   # static filler
         self._count_plan_refreshes()
-        return fn(key, noise, batch_text_emb)
+        return self._run_compiled(fn, key, noise, batch_text_emb)
 
     # -- cross-request batching queue ---------------------------------------
 
@@ -481,7 +939,8 @@ class ServingEngine:
                 f"{batch_size}"
             )
         req = PendingRequest(key=key, text_emb=self._cached_cond(text_emb),
-                             batch_size=batch_size)
+                             batch_size=batch_size,
+                             _membership=self._membership())
         self._queue.append(req)
         self.stats["requests"] += 1
         return req
@@ -491,13 +950,24 @@ class ServingEngine:
 
         Latent shape and sampler config are engine invariants, so within
         one engine compatibility reduces to the conditioning signature
-        (text present + trailing text shape).  Each group becomes ONE
-        batched sampler dispatch; the merged batch is padded up to a
-        power-of-two bucket (bounding compile count under varying request
-        mixes) that is also a multiple of the mesh "data" axis on a
-        sharded engine (so the batch dim always shards cleanly), and
+        (text present + trailing text shape) — plus, on an elastic
+        engine, the membership epoch the request was admitted under, so
+        every request executes against its own snapshot.  Each group
+        becomes ONE batched sampler dispatch; the merged batch is padded
+        up to a power-of-two bucket (bounding compile count under varying
+        request mixes) that is also a multiple of the mesh "data" axis on
+        a sharded engine (so the batch dim always shards cleanly), and
         per-request slices (padding dropped) are written back to the
-        handles.  Returns the number of merged dispatches.
+        handles.
+
+        Failures are isolated **per group**: a failing dispatch (compile
+        error, OOM on a new bucket size, a poison request) re-queues only
+        its own group's requests — every other group still dispatches —
+        and each request is automatically re-queued at most
+        ``max_request_requeues`` times before being marked FAILED with
+        the exception on its handle (``result()`` re-raises it), so a
+        persistently-bad group can't re-poison every subsequent flush.
+        Returns the number of successfully merged dispatches.
         """
         if not self._queue:
             return 0
@@ -505,21 +975,33 @@ class ServingEngine:
         for req in self._queue:
             sig = (req.text_emb is not None,
                    tuple(req.text_emb.shape[1:])
-                   if req.text_emb is not None else ())
+                   if req.text_emb is not None else (),
+                   req._membership[0] if req._membership is not None
+                   else -1)
             groups.setdefault(sig, []).append(req)
         self._queue = []
-        pending = list(groups.items())
-        for gi, ((has_text, text_tail), reqs) in enumerate(pending):
+        ok = 0
+        for (has_text, text_tail, _epoch), reqs in groups.items():
             try:
                 self._dispatch_group(has_text, text_tail, reqs)
-            except Exception:
-                # re-queue this and every unprocessed group so a failed
-                # dispatch (compile error, OOM on a new bucket size)
-                # doesn't strand the other handles undone forever.
-                for _, rs in pending[gi:]:
-                    self._queue.extend(rs)
-                raise
-        return len(pending)
+                ok += 1
+            except Exception as e:
+                for r in reqs:
+                    r.requeues += 1
+                    if r.requeues > self.max_request_requeues:
+                        r.state = "FAILED"
+                        r.error = e
+                        self.stats["failed_requests"] += 1
+                    else:
+                        self.stats["request_requeues"] += 1
+                        self._queue.append(r)
+        if self.elastic:
+            # DRAINING slots held for their in-flight snapshots are done
+            # (dispatched or failed/re-queued with the snapshot intact).
+            for i, h in enumerate(self.expert_health):
+                if h == "DRAINING":
+                    self.expert_health[i] = "EVICTED"
+        return ok
 
     def _dispatch_group(
         self, has_text: bool, text_tail: tuple, reqs: list[PendingRequest],
@@ -553,12 +1035,14 @@ class ServingEngine:
             text = jnp.zeros((0,), jnp.float32)             # static filler
         fn = self._get_compiled(total + pad, has_text)
         self._count_plan_refreshes()
-        out = fn(reqs[0].key, noise, text)
+        out = self._run_compiled(fn, reqs[0].key, noise, text,
+                                 membership=reqs[0]._membership)
         self.stats["merged_batches"] += 1
         self.stats["batched_requests"] += len(reqs)
         off = 0
         for r in reqs:
             r._result = out[off:off + r.batch_size]
+            r.state = "DONE"
             r.done = True
             off += r.batch_size
 
@@ -613,6 +1097,16 @@ def main() -> None:
     ap.add_argument("--coalesce", action="store_true",
                     help="drive requests through submit()/flush() instead "
                          "of per-request generate()")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="expert-slot capacity (>= checkpoint count): pads "
+                         "the store with masked EMPTY slots and enables "
+                         "elastic membership (hot add_expert/evict_expert "
+                         "without recompiling)")
+    ap.add_argument("--on-bad-checkpoint", default="raise",
+                    choices=("raise", "skip"),
+                    help="'skip' quarantines corrupt/truncated/mismatched "
+                         "expert checkpoints and serves the rest in "
+                         "degraded mode instead of refusing to start")
     args = ap.parse_args()
 
     dit_cfg = dit_b2()
@@ -632,11 +1126,15 @@ def main() -> None:
         engine=args.engine,
         n_expert_shards=args.expert_shards, n_data_shards=args.data_shards,
         cond_cache_size=args.cond_cache,
+        capacity=args.capacity,
+        on_bad_checkpoint=args.on_bad_checkpoint,
     )
     print(f"loaded {len(engine.experts)} experts "
           f"({[e.objective for e in engine.experts]}) "
           f"homogeneous={engine.homogeneous} "
           f"mesh={dict(engine.mesh.shape) if engine.mesh else None}")
+    if engine.elastic:
+        print(engine.membership_line())
     if args.coalesce:
         t0 = time.time()
         handles = []
@@ -660,6 +1158,8 @@ def main() -> None:
               f"cond_misses={engine.stats['cond_cache_misses']} "
               f"plan_refreshes={engine.stats['plan_refreshes']} "
               f"(R={args.plan_refresh}, {args.steps} steps/dispatch)")
+        if engine.elastic:
+            print(engine.membership_line())
         return
     for r in range(args.requests):
         key = jax.random.PRNGKey(r)
@@ -679,6 +1179,8 @@ def main() -> None:
           f"cond_misses={engine.stats['cond_cache_misses']} "
           f"plan_refreshes={engine.stats['plan_refreshes']} "
           f"(R={args.plan_refresh}, {args.steps} steps/request)")
+    if engine.elastic:
+        print(engine.membership_line())
 
 
 if __name__ == "__main__":

@@ -23,6 +23,13 @@ and asserts, for the same seed:
      data-sharded meshes, and a plan-reused (R=2) sharded engine matches
      the plan-reused unsharded engine (atol 1e-5 — same config across
      mesh layouts; R>1 is not expected to match per-step routing)
+  8. masked elastic membership (ServingEngine capacity=...) on the
+     expert-sharded AND data-sharded meshes: the capacity-padded
+     store's validity mask shards over the "expert" axis with its
+     store, padded slots contribute nothing (full-capacity output ==
+     the dense K-expert baseline), and evicting a live expert on each
+     sharded engine matches the same eviction on the unsharded elastic
+     engine
 
 ``--dit`` swaps the toy closed-form experts for real (reduced) DiT
 experts — slower, exercised by the slow-marked test variant.
@@ -253,6 +260,36 @@ def main() -> None:
             out = np.asarray(rsh.generate(KEY, text, args.batch))
             np.testing.assert_allclose(out, ref_reuse, atol=1e-5)
 
+    # 8. masked elastic membership on the expert-sharded mesh.  The
+    #    capacity-padded store carries a (K_cap,) validity mask that
+    #    shards over "expert" with the params it masks; padded slots
+    #    must contribute nothing (full-capacity == dense baseline), and
+    #    a mid-life eviction must behave identically sharded/unsharded.
+    elastic_checked = not args.dit
+    if elastic_checked:
+        cap = len(experts) + ndev
+        el_ref = _engine(experts, params, router_fn, latent, sampler,
+                         capacity=cap)
+        el_ref.evict_expert(3)
+        masked_ref = np.asarray(el_ref.generate(KEY, text, args.batch))
+        assert not np.array_equal(masked_ref, ref), \
+            "evicting a routed expert must change the output"
+        for shards in ((ndev, 1), (1, ndev)):
+            el_sh = _engine(experts, params, router_fn, latent, sampler,
+                            n_expert_shards=shards[0],
+                            n_data_shards=shards[1], capacity=cap)
+            if shards[0] == ndev:
+                vmask = el_sh.param_store.valid
+                assert vmask.sharding.spec[0] == "expert", (
+                    f"validity mask must shard over the expert axis "
+                    f"with its store, got {vmask.sharding}"
+                )
+            out = np.asarray(el_sh.generate(KEY, text, args.batch))
+            np.testing.assert_allclose(out, ref, atol=1e-5)
+            el_sh.evict_expert(3)
+            out = np.asarray(el_sh.generate(KEY, text, args.batch))
+            np.testing.assert_allclose(out, masked_ref, atol=1e-5)
+
     print(json.dumps({
         "devices": ndev, "dit": bool(args.dit),
         "batch": args.batch, "steps": args.steps,
@@ -260,6 +297,7 @@ def main() -> None:
         "grouped_parity": "ok" if grouped_checked else "skipped",
         "quantized_parity": "ok" if quantized_checked else "skipped",
         "step_fusion_parity": "ok" if step_fusion_checked else "skipped",
+        "elastic_masked_parity": "ok" if elastic_checked else "skipped",
         "coalesced_requests": esh.stats["batched_requests"],
         "merged_batches": esh.stats["merged_batches"],
     }))

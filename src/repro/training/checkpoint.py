@@ -69,11 +69,14 @@ def save_checkpoint(
 def load_checkpoint(path: str) -> tuple[Any, dict]:
     """Load a ``save_checkpoint`` artifact, failing with *named* errors.
 
-    A missing file raises ``FileNotFoundError`` naming the resolved path
-    and a missing ``__metadata__`` entry raises ``ValueError`` naming the
-    file — never an opaque ``KeyError`` from deep inside ``np.load``
-    (decentralized contributors hand us arbitrary npz files; the error
-    must say which file is wrong and why).
+    A missing file raises ``FileNotFoundError`` naming the resolved path;
+    a missing ``__metadata__`` entry, a truncated/corrupt archive, or a
+    non-zip file raises ``ValueError`` naming the file and the reason —
+    never an opaque ``KeyError``/``BadZipFile``/``OSError`` from deep
+    inside ``np.load`` (decentralized contributors hand us arbitrary
+    bytes over unreliable transports; the error must say which file is
+    wrong and why, so the serving engine's quarantine path can record it
+    instead of crashing).
     """
     if not path.endswith(".npz"):
         path = path + ".npz"
@@ -82,15 +85,32 @@ def load_checkpoint(path: str) -> tuple[Any, dict]:
             f"checkpoint not found: {path} (expected an .npz written by "
             f"repro.training.save_checkpoint)"
         )
-    with np.load(path, allow_pickle=False) as z:
-        if "__metadata__" not in z.files:
-            raise ValueError(
-                f"{path}: missing '__metadata__' entry — not a "
-                f"save_checkpoint artifact (archive keys: "
-                f"{sorted(z.files)[:5]}{'...' if len(z.files) > 5 else ''})"
-            )
-        meta = json.loads(str(z["__metadata__"]))
-        flat = {k: z[k] for k in z.files if k != "__metadata__"}
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            names = sorted(z.files)
+            has_meta = "__metadata__" in z.files
+            raw_meta = str(z["__metadata__"]) if has_meta else ""
+            flat = {k: z[k] for k in z.files if k != "__metadata__"}
+    except Exception as e:
+        # zipfile.BadZipFile (non-zip bytes), OSError/EOFError (archive
+        # truncated mid-member), struct.error, np.load's own bare
+        # ValueError on unpicklable garbage, ...
+        raise ValueError(
+            f"{path}: corrupt or truncated checkpoint archive — "
+            f"{type(e).__name__}: {e}"
+        ) from e
+    if not has_meta:
+        raise ValueError(
+            f"{path}: missing '__metadata__' entry — not a "
+            f"save_checkpoint artifact (archive keys: {names[:5]}"
+            f"{'...' if len(names) > 5 else ''})"
+        )
+    try:
+        meta = json.loads(raw_meta)
+    except json.JSONDecodeError as e:
+        raise ValueError(
+            f"{path}: mangled '__metadata__' JSON — {e}"
+        ) from e
     return _unflatten(flat), meta
 
 

@@ -1,0 +1,311 @@
+"""Fault tolerance: masked routing, elastic membership, quarantine.
+
+Covers the robustness rung (ROADMAP item 4):
+  (a) masked routing invariants — a dead expert is never selected, even
+      when the routing width k exceeds the live count; masked serving is
+      bit-identical to a dense rebuild over the live subset;
+  (b) elastic membership ops — hot add_expert/evict_expert/retire_expert
+      mutate membership without retracing, in-flight requests complete
+      bit-identically against their admission-time snapshot, and the
+      health state machine transitions as documented;
+  (c) checkpoint quarantine — every corruption class manufactured by
+      launch.faults (truncated, scrambled, non-finite, shape-mismatched)
+      is rejected with a named ValueError, recorded, and counted, both
+      at assembly (from_checkpoint_dir) and at hot-add time;
+  (d) stats round-trip — the quarantine/membership counters surface in
+      membership_line(), the line the serve CLI prints.
+
+The multi-device variant of (a)+(b) lives in sharded_parity step 8 and
+the launch.faults __main__ scenario (subprocess, forced 2-device host).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SamplerConfig,
+    fusion_weights,
+    make_dispatch_plan,
+    select_topk,
+)
+from repro.launch.faults import (
+    FlushFaultInjector,
+    mismatch_checkpoint_shapes,
+    poison_checkpoint_nonfinite,
+    scramble_checkpoint,
+    truncate_checkpoint,
+)
+from repro.launch.serve import ServingEngine
+from repro.launch.sharded_parity import toy_ensemble
+from repro.models.config import dit_b2, router_b2
+from repro.training import expert_metadata, save_checkpoint
+
+KEY = jax.random.PRNGKey(0)
+LATENT = (4, 4, 2)
+SAMPLER = SamplerConfig(num_steps=4, cfg_scale=3.0,
+                        strategy="topk", top_k=2)
+
+EXPERTS, PARAMS, ROUTER_FN, _ = toy_ensemble(8)
+
+
+def _elastic(k=6, capacity=8, **kw):
+    return ServingEngine(
+        experts=EXPERTS[:k], expert_params=PARAMS[:k],
+        router_fn=ROUTER_FN, latent_shape=LATENT, sampler=SAMPLER,
+        capacity=capacity, **kw,
+    )
+
+
+def _dense(idx):
+    return ServingEngine(
+        experts=[EXPERTS[i] for i in idx],
+        expert_params=[PARAMS[i] for i in idx],
+        router_fn=ROUTER_FN, latent_shape=LATENT, sampler=SAMPLER,
+    )
+
+
+def _toy_ckpt(path, i, cid=None):
+    save_checkpoint(path, PARAMS[i], metadata=expert_metadata(
+        name=f"e{i}", objective=EXPERTS[i].objective,
+        schedule=EXPERTS[i].schedule,
+        cluster_id=i if cid is None else cid, arch="toy",
+    ))
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+TEXT = jax.random.normal(jax.random.PRNGKey(3), (4, 5, 6))
+
+
+# --- (a) masked routing invariants ------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 6])
+def test_masked_plan_never_selects_invalid(k):
+    """Even with k > live count, no plan slot may reference a dead
+    expert — extra slots remap to a live fallback with weight 0."""
+    kcap = 8
+    valid = jnp.array([False, True, False, True, False,
+                       False, True, False])          # 3 live of 8
+    probs = jax.nn.softmax(
+        jax.random.normal(KEY, (5, kcap)), axis=-1)
+    w, _ = select_topk(probs * valid[None, :], k)    # the pipeline's form
+    plan = make_dispatch_plan(w, k, valid=valid)
+    live = {1, 3, 6}
+    assert set(np.asarray(plan.slot_idx).ravel()) <= live
+    np.testing.assert_allclose(
+        np.asarray(plan.slot_w).sum(axis=-1), 1.0, atol=1e-6)
+    if k > 3:     # the remapped overflow slots carry exactly zero weight
+        sw = np.asarray(plan.slot_w)
+        assert (np.sort(sw, axis=-1)[:, : k - 3] == 0.0).all()
+
+
+def test_masked_fusion_weights_zero_on_dead_experts():
+    valid = jnp.array([True, False, True, True])
+    x = jax.random.normal(KEY, (3, 4, 4, 2))
+    t = jnp.full((3,), 0.5)
+
+    def router(xx, tt):
+        return jax.nn.softmax(
+            jax.random.normal(jax.random.PRNGKey(1), (xx.shape[0], 4)),
+            axis=-1)
+
+    w = fusion_weights(EXPERTS[:4], router, x, t,
+                       strategy="topk", top_k=3, valid=valid)
+    assert np.asarray(w)[:, 1].max() == 0.0
+    np.testing.assert_allclose(np.asarray(w).sum(-1), 1.0, atol=1e-6)
+
+
+def test_masked_serving_matches_dense_rebuild_bitwise():
+    """Acceptance: capacity-8 store with 6 live == dense 6-expert engine,
+    and NaN bytes in a dead slot never reach the output."""
+    el = _elastic(6, 8)
+    # poison a dead capacity slot's params: must be unobservable
+    store = el.param_store
+    poisoned = store.set_expert(7, jax.tree.map(
+        lambda x: jnp.full_like(x, jnp.nan), PARAMS[0]))
+    el.param_store = poisoned.with_valid(store.valid_mask())
+    out = np.asarray(el.generate(KEY, TEXT, 4))
+    ref = np.asarray(_dense(range(6)).generate(KEY, TEXT, 4))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_degraded_mode_counts_and_serves():
+    """Fewer live experts than the routing width: still serves (weights
+    renormalize over survivors), degraded_steps accumulates."""
+    el = _elastic(6, 8)
+    for e in (0, 1, 2, 3, 4):
+        el.evict_expert(e)
+    assert el.num_live_experts == 1              # < top_k=2
+    out = np.asarray(el.generate(KEY, TEXT, 4))
+    assert np.isfinite(out).all()
+    assert el.stats["degraded_steps"] == SAMPLER.num_steps
+    # single survivor == the dense single-expert routed output
+    ref = np.asarray(_dense([5]).generate(KEY, TEXT, 4))
+    np.testing.assert_array_equal(out, ref)
+
+
+# --- (b) elastic membership -------------------------------------------------
+
+
+def test_hot_add_and_evict_without_retrace(tmp_path):
+    el = _elastic(6, 8)
+    base = np.asarray(el.generate(KEY, TEXT, 4))
+    assert el.stats["traces"] == 1
+    slot = el.add_expert(_toy_ckpt(os.path.join(tmp_path, "e6.npz"), 6))
+    assert slot == 6 and el.expert_health[6] == "ACTIVE"
+    out7 = np.asarray(el.generate(KEY, TEXT, 4))
+    np.testing.assert_array_equal(
+        out7, np.asarray(_dense(range(7)).generate(KEY, TEXT, 4)))
+    el.evict_expert(2)
+    assert el.expert_health[2] == "EVICTED"
+    out = np.asarray(el.generate(KEY, TEXT, 4))
+    assert np.isfinite(out).all() and not np.array_equal(out, base)
+    # membership is traced data: add + evict never recompiled
+    assert el.stats["traces"] == 1
+    assert el.stats["experts_added"] == 1
+    assert el.stats["experts_evicted"] == 1
+
+
+def test_eviction_mid_submit_is_bit_identical(tmp_path):
+    """Acceptance: in-flight requests complete against the admission-time
+    plan, bit-identical, while hot-add + evict land for new traffic."""
+    el = _elastic(6, 8)
+    admitted = np.asarray(el.generate(KEY, TEXT, 4))
+    h_old = el.submit(KEY, TEXT, 4)
+    el.add_expert(_toy_ckpt(os.path.join(tmp_path, "e6.npz"), 6))
+    el.evict_expert(2)
+    h_new = el.submit(KEY, TEXT, 4)
+    assert el.flush() == 2                       # one dispatch per epoch
+    np.testing.assert_array_equal(np.asarray(h_old.result()), admitted)
+    assert not np.array_equal(np.asarray(h_new.result()), admitted)
+    assert h_old.state == "DONE" and h_new.state == "DONE"
+
+
+def test_retire_drains_then_frees_slot(tmp_path):
+    el = _elastic(6, 8)
+    h = el.submit(KEY, TEXT, 4)
+    el.retire_expert(5)
+    assert el.expert_health[5] == "DRAINING"
+    with pytest.raises(ValueError, match="DRAINING"):
+        el.add_expert(_toy_ckpt(os.path.join(tmp_path, "e7.npz"), 7),
+                      slot=5)
+    el.flush()
+    assert np.isfinite(np.asarray(h.result())).all()
+    assert el.expert_health[5] == "EVICTED"
+    assert el.add_expert(
+        _toy_ckpt(os.path.join(tmp_path, "e7b.npz"), 7)) == 5
+
+
+def test_membership_ops_require_elastic_engine():
+    dense = _dense(range(4))
+    assert not dense.elastic
+    with pytest.raises(ValueError, match="capacity"):
+        dense.evict_expert(0)
+    with pytest.raises(ValueError, match="capacity"):
+        dense.add_expert("whatever.npz")
+
+
+def test_elastic_guards_reject_unroutable_configs():
+    with pytest.raises(ValueError, match="capacity=4 < 6"):
+        _elastic(6, capacity=4)
+    with pytest.raises(ValueError, match="router_fn"):
+        ServingEngine(experts=EXPERTS[:2], expert_params=PARAMS[:2],
+                      router_fn=None, latent_shape=LATENT,
+                      sampler=SAMPLER, capacity=4)
+
+
+# --- (c) checkpoint quarantine ----------------------------------------------
+
+
+@pytest.mark.parametrize("corrupt,reason", [
+    (truncate_checkpoint, "corrupt or truncated"),
+    (scramble_checkpoint, "corrupt or truncated"),
+    (poison_checkpoint_nonfinite, "non-finite"),
+    (mismatch_checkpoint_shapes, "shape"),
+])
+def test_add_expert_quarantines_every_corruption_class(
+        tmp_path, corrupt, reason):
+    el = _elastic(6, 8)
+    p = corrupt(_toy_ckpt(os.path.join(tmp_path, "bad.npz"), 7))
+    with pytest.raises(ValueError, match=reason):
+        el.add_expert(p)
+    assert el.stats["quarantined_checkpoints"] == 1
+    assert el.quarantine[0]["path"] == p
+    assert el.expert_health[6] == "EMPTY"        # slot still free
+    assert el.num_live_experts == 6
+    # engine still serves after the rejected add
+    assert np.isfinite(np.asarray(el.generate(KEY, TEXT, 4))).all()
+
+
+def test_from_checkpoint_dir_skip_quarantines_and_masks_holes(tmp_path):
+    cfg = dit_b2().reduced(latent_size=8)
+    rcfg = router_b2(num_clusters=4).reduced(latent_size=8)
+    from repro.models import dit as D
+    for cid in (0, 1, 3):
+        save_checkpoint(
+            os.path.join(tmp_path, f"expert{cid}.npz"),
+            D.init(cfg, jax.random.PRNGKey(10 + cid)),
+            metadata=expert_metadata(
+                name=f"e{cid}", objective="fm", schedule="linear",
+                cluster_id=cid, arch=cfg.name))
+    save_checkpoint(
+        os.path.join(tmp_path, "expert2.npz"),
+        D.init(cfg, jax.random.PRNGKey(12)),
+        metadata=expert_metadata(name="e2", objective="fm",
+                                 schedule="linear", cluster_id=2,
+                                 arch=cfg.name))
+    truncate_checkpoint(os.path.join(tmp_path, "expert2.npz"), 0.4)
+    save_checkpoint(os.path.join(tmp_path, "router.npz"),
+                    D.init(rcfg, jax.random.PRNGKey(99)))
+    # default: refuse to start on the bad artifact
+    with pytest.raises(ValueError, match="expert2"):
+        ServingEngine.from_checkpoint_dir(
+            str(tmp_path), dit_cfg=cfg, router_cfg=rcfg)
+    # skip mode: quarantine it, mask the hole, serve degraded
+    eng = ServingEngine.from_checkpoint_dir(
+        str(tmp_path), dit_cfg=cfg, router_cfg=rcfg,
+        sampler=SamplerConfig(num_steps=2, cfg_scale=3.0,
+                              strategy="topk", top_k=2),
+        on_bad_checkpoint="skip")
+    assert eng.elastic and eng.capacity == 4
+    assert eng.num_live_experts == 3
+    assert eng.expert_health[2] == "EMPTY"
+    assert len(eng.quarantine) == 1
+    assert "expert2" in eng.quarantine[0]["path"]
+    assert eng.stats["quarantined_checkpoints"] == 1
+
+
+# --- (d) stats round-trip ---------------------------------------------------
+
+
+def test_quarantine_counters_roundtrip_membership_line(tmp_path):
+    el = _elastic(6, 8)
+    el.add_expert(_toy_ckpt(os.path.join(tmp_path, "e6.npz"), 6))
+    el.evict_expert(2)
+    with pytest.raises(ValueError):
+        el.add_expert(truncate_checkpoint(
+            _toy_ckpt(os.path.join(tmp_path, "bad.npz"), 7)))
+    el.quarantine_expert(4, reason="health check caught NaNs")
+    line = el.membership_line()
+    assert "live=5/8" in line
+    assert "added=1" in line
+    assert "evicted=1" in line
+    assert "quarantined=2" in line               # bad ckpt + runtime slot
+    assert el.expert_health[4] == "QUARANTINED"
+
+
+def test_flush_fault_injector_isolates_groups():
+    el = _elastic(6, 8)
+    h_text = el.submit(KEY, TEXT, 4)
+    h_uncond = el.submit(jax.random.PRNGKey(1), None, 4)
+    with FlushFaultInjector(el, fail_on={1}) as inj:
+        assert el.flush() == 1
+    assert inj.calls == 2
+    states = sorted((h_text.state, h_uncond.state))
+    assert states == ["DONE", "QUEUED"]
+    assert el.flush() == 1                       # re-queued group recovers
+    assert {h_text.state, h_uncond.state} == {"DONE"}

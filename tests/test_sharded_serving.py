@@ -98,6 +98,8 @@ def test_multi_shard_parity_toy_two_devices():
     assert '"quantized_parity": "ok"' in proc.stdout
     # step fusion bit-parity + plan-reuse (R=2) parity across mesh layouts
     assert '"step_fusion_parity": "ok"' in proc.stdout
+    # masked elastic membership: sharded validity mask + eviction parity
+    assert '"elastic_masked_parity": "ok"' in proc.stdout
     assert '"devices": 2' in proc.stdout
 
 
@@ -266,7 +268,9 @@ def test_flush_groups_incompatible_signatures_separately():
 
 
 def test_flush_failure_requeues_pending_requests(monkeypatch):
-    """A failed group dispatch must not strand other queued handles."""
+    """A failed group dispatch must not strand other queued handles —
+    and must not raise out of flush(): the failing group re-queues (up
+    to the requeue cap) while the caller keeps control of the loop."""
     engine = _toy_engine()
     text = jax.random.normal(KEY, (2, 5, 6))
     h1 = engine.submit(jax.random.PRNGKey(0), text, 2)
@@ -277,13 +281,40 @@ def test_flush_failure_requeues_pending_requests(monkeypatch):
         raise RuntimeError("compile blew up")
 
     monkeypatch.setattr(engine, "_get_compiled", boom)
-    with pytest.raises(RuntimeError, match="compile blew up"):
-        engine.flush()
-    assert len(engine._queue) == 2               # both groups restored
+    assert engine.flush() == 0                   # no group dispatched...
+    assert len(engine._queue) == 2               # ...both re-queued
+    assert engine.stats["request_requeues"] == 2
     monkeypatch.setattr(engine, "_get_compiled", orig)
     assert engine.flush() == 2                   # retry succeeds
     assert h1.result().shape == (2,) + LATENT
     assert h2.result().shape == (2,) + LATENT
+    assert h1.state == "DONE" and h2.state == "DONE"
+
+
+def test_flush_partial_failure_isolated_to_poison_group(monkeypatch):
+    """One poison group must not take down the healthy group's dispatch."""
+    engine = _toy_engine()
+    text = jax.random.normal(KEY, (2, 5, 6))
+    h_text = engine.submit(jax.random.PRNGKey(0), text, 2)      # group A
+    h_uncond = engine.submit(jax.random.PRNGKey(1), None, 2)    # group B
+    orig = engine._dispatch_group
+
+    def poison(has_text, text_tail, reqs):
+        if has_text:
+            raise RuntimeError("poison group")
+        return orig(has_text, text_tail, reqs)
+
+    monkeypatch.setattr(engine, "_dispatch_group", poison)
+    assert engine.flush() == 1                   # healthy group dispatched
+    assert h_uncond.result().shape == (2,) + LATENT
+    assert len(engine._queue) == 1               # poison group re-queued once
+    # cap exhausted on the second failure: FAILED, exception on the handle
+    assert engine.flush() == 0
+    assert h_text.state == "FAILED"
+    assert engine.stats["failed_requests"] == 1
+    assert len(engine._queue) == 0               # not re-poisoning every flush
+    with pytest.raises(RuntimeError, match="poison group"):
+        h_text.result()
 
 
 def test_flush_mismatched_batch_raises():

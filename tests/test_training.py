@@ -131,6 +131,48 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_load_checkpoint_truncated_archive_named_error(tmp_path):
+    """Decentralized transports hand us partial bytes: a checkpoint cut
+    off mid-archive must raise a ValueError naming the file and reason,
+    never an opaque zipfile/EOF error from inside np.load."""
+    import pytest
+
+    path = os.path.join(tmp_path, "expert0.npz")
+    save_checkpoint(path, {"a": jnp.ones((64, 64)), "b": jnp.zeros((7,))},
+                    metadata=expert_metadata(
+                        name="e0", objective="fm", schedule="linear",
+                        cluster_id=0, arch="toy"))
+    blob = open(path, "rb").read()
+    for frac in (0.25, 0.6, 0.95):       # cut in the header, middle, tail
+        cut = os.path.join(tmp_path, f"cut{frac}.npz")
+        with open(cut, "wb") as f:
+            f.write(blob[: int(len(blob) * frac)])
+        with pytest.raises(ValueError, match=rf"cut{frac}\.npz.*(corrupt|truncated|metadata)"):
+            load_checkpoint(cut)
+
+
+def test_load_checkpoint_non_zip_bytes_named_error(tmp_path):
+    import pytest
+
+    path = os.path.join(tmp_path, "garbage.npz")
+    with open(path, "wb") as f:
+        f.write(b"these are not the archive bytes you are looking for")
+    with pytest.raises(ValueError, match=r"garbage\.npz.*corrupt or truncated"):
+        load_checkpoint(path)
+
+
+def test_load_checkpoint_missing_file_and_metadata(tmp_path):
+    import pytest
+
+    with pytest.raises(FileNotFoundError, match="nope"):
+        load_checkpoint(os.path.join(tmp_path, "nope.npz"))
+    # a real npz that was not written by save_checkpoint
+    path = os.path.join(tmp_path, "foreign.npz")
+    np.savez(path, w=np.ones((2, 2)))
+    with pytest.raises(ValueError, match=r"foreign\.npz.*__metadata__"):
+        load_checkpoint(path)
+
+
 def test_pretrained_init_transfers_into_model():
     """Eq. 20 end-to-end: an 'ImageNet DiT' checkpoint (no text stack)
     initializes a text-conditioned expert; transferred groups match, the
