@@ -1,0 +1,49 @@
+"""Static + runtime hazard analysis for the repro codebase.
+
+Three layers (see ``docs/analysis.md`` for the rule catalogue):
+
+* :mod:`repro.analysis.astlint` + :mod:`repro.analysis.rules` — pure-AST
+  lint rules for JAX hazards (JX1xx): host syncs reachable from traced
+  code, Python branches on tracers, unhashable jit-cache-key configs,
+  unregistered carry dataclasses, unthreaded PRNG keys.
+* :mod:`repro.analysis.kernel_contracts` — the Pallas kernel contract
+  (KC2xx): every kernel keeps a signature-matched ``ref_<name>`` oracle,
+  threads ``interpret=``, reuses ``_tile_pad``, and is parity-tested.
+* :mod:`repro.analysis.sanitize` — runtime serving invariants (RT3xx):
+  trace budgets, NaN/Inf escape detection, store-sharding drift.
+
+CLI: ``python -m repro.analysis --check src/`` (the CI gate),
+``--explain JX101``, ``--baseline`` to adopt existing findings.
+
+This package imports no heavy dependencies at lint time — the AST and
+contract layers run without jax installed; only ``sanitize`` needs a
+live engine.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.astlint import (
+    Finding,
+    Rule,
+    apply_baseline,
+    lint_paths,
+    lint_source,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.kernel_contracts import check_kernel_contracts
+from repro.analysis.rules import ALL_RULES, default_rules, find_rule
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "Rule",
+    "apply_baseline",
+    "check_kernel_contracts",
+    "default_rules",
+    "find_rule",
+    "lint_paths",
+    "lint_source",
+    "load_baseline",
+    "write_baseline",
+]

@@ -1,0 +1,143 @@
+"""``python -m repro.analysis`` — the lint + contract CLI (the CI gate).
+
+Exit status: 0 when clean (or every finding is baselined), 1 when any
+finding survives, 2 on usage errors.
+
+Examples::
+
+    python -m repro.analysis --check src/          # lint + contracts
+    python -m repro.analysis --explain JX101       # rule documentation
+    python -m repro.analysis --list-rules
+    python -m repro.analysis --check src/ --baseline   # adopt findings
+    python -m repro.analysis --check src/ --report lint-report.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.astlint import (
+    Finding,
+    apply_baseline,
+    lint_paths,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.kernel_contracts import check_kernel_contracts
+from repro.analysis.rules import default_rules, find_rule, rule_classes
+
+
+def _find_kernels_dir(paths: list[str]) -> str | None:
+    """Locate the kernels package under the checked paths (the directory
+    holding ``ref.py`` next to kernel modules)."""
+    for path in paths:
+        if os.path.isfile(path):
+            path = os.path.dirname(path)
+        for root, dirs, files in os.walk(path):
+            dirs[:] = [d for d in dirs
+                       if not d.startswith(".") and d != "__pycache__"]
+            if os.path.basename(root) == "kernels" and "ref.py" in files:
+                return root
+    return None
+
+
+def _find_tests_dir(paths: list[str]) -> str | None:
+    """tests/ sibling of the checked tree (for KC204 coverage checks)."""
+    for path in paths:
+        cur = os.path.abspath(path)
+        if os.path.isfile(cur):
+            cur = os.path.dirname(cur)
+        for _ in range(4):
+            cand = os.path.join(cur, "tests")
+            if os.path.isdir(cand):
+                return cand
+            cur = os.path.dirname(cur)
+    return None
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas hazard linter + kernel-contract checker",
+    )
+    ap.add_argument("--check", nargs="+", metavar="PATH",
+                    help="lint these files/directories")
+    ap.add_argument("--explain", metavar="RULE",
+                    help="print one rule's documentation (id or slug)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list every rule id, slug, and title")
+    ap.add_argument("--baseline", action="store_true",
+                    help="with --check: write current findings to the "
+                         "baseline file instead of failing on them")
+    ap.add_argument("--baseline-file", default=".analysis-baseline.json",
+                    help="baseline fingerprint file "
+                         "(default: %(default)s)")
+    ap.add_argument("--report", metavar="FILE",
+                    help="also write findings as JSON (CI artifact)")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip the kernel-contract checks (AST lint only)")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        cls = find_rule(args.explain)
+        if cls is None:
+            known = ", ".join(c.id for c in rule_classes())
+            print(f"unknown rule {args.explain!r}; known: {known}",
+                  file=sys.stderr)
+            return 2
+        print(cls.explain())
+        return 0
+
+    if args.list_rules:
+        for cls in rule_classes():
+            print(f"{cls.id:7s} [{cls.slug}] {cls.title}")
+        return 0
+
+    if not args.check:
+        ap.print_usage(sys.stderr)
+        print("error: one of --check/--explain/--list-rules is required",
+              file=sys.stderr)
+        return 2
+
+    findings: list[Finding] = lint_paths(args.check, default_rules())
+    if not args.no_contracts:
+        kernels_dir = _find_kernels_dir(args.check)
+        if kernels_dir is not None:
+            findings.extend(check_kernel_contracts(
+                kernels_dir, tests_dir=_find_tests_dir(args.check)))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    if args.baseline:
+        n = write_baseline(findings, args.baseline_file)
+        print(f"baseline: {n} fingerprint(s) -> {args.baseline_file}")
+        return 0
+
+    baseline = load_baseline(args.baseline_file)
+    fresh = apply_baseline(findings, baseline)
+
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as fh:
+            json.dump({
+                "checked": args.check,
+                "findings": [f.as_dict() for f in fresh],
+                "baselined": len(findings) - len(fresh),
+            }, fh, indent=2)
+            fh.write("\n")
+
+    for f in fresh:
+        print(f.format())
+    n_base = len(findings) - len(fresh)
+    tail = f" ({n_base} baselined)" if n_base else ""
+    if fresh:
+        print(f"\n{len(fresh)} finding(s){tail} — "
+              f"`python -m repro.analysis --explain <RULE>` for details")
+        return 1
+    print(f"clean: 0 findings{tail}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,436 @@
+"""AST lint engine for repo-specific JAX/Pallas hazard rules.
+
+Six PRs of hot-path work made correctness depend on invariants no
+compiler enforces: jit cache keys must stay hashable, traced values must
+never hit Python control flow or host syncs, pytree dataclasses must be
+registered before entering ``lax.scan`` carries, and every Pallas kernel
+must keep a signature-matched oracle.  This module is the enforcement
+layer: a small, dependency-free engine that parses each source file once
+and runs a registry of :class:`Rule` objects over it.
+
+Design notes
+------------
+* **Pure AST** — nothing is imported or executed; the linter is safe to
+  run on a broken tree and costs milliseconds in CI.
+* **Traced-reachability** (:class:`TracedAnalysis`) — rules that only
+  make sense under a ``jax.jit``/``lax.scan`` trace (host syncs, Python
+  branches on tracers) fire only inside functions that are statically
+  reachable from a trace entry point *within the module*: functions
+  decorated with ``jax.jit``, functions passed (directly or through
+  ``functools.partial``/local aliases) to ``jit``/``scan``/``cond``/
+  ``while_loop``/``switch``/``pallas_call``/``vmap``/…, functions they
+  transitively call by name, and functions nested inside any of those.
+  Cross-module reachability is intentionally out of scope: each module
+  is analyzed standalone, so moving a helper never silently changes
+  another file's lint results.
+* **Pragmas** — every finding can be suppressed at the line that raised
+  it (or a pure-comment line directly above) with
+  ``# lint: allow-<slug>`` (e.g. ``# lint: allow-host-sync``),
+  ``# lint: allow-<RULE-ID>``, or ``# lint: disable`` (all rules).
+  ``# lint: skip-file`` in the first ten lines skips the whole file.
+  An intentional host sync at an explicit device→host boundary is
+  *supposed* to carry the pragma — it documents the sync for reviewers.
+* **Baselines** — ``write_baseline``/``load_baseline`` store content
+  fingerprints (rule id + file basename + stripped source line), so a
+  baseline survives unrelated edits and line renumbering but expires
+  when the offending line itself changes.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import os
+import re
+from typing import Iterable, Iterator
+
+#: modules whose attribute chains mark an expression as "device-valued":
+#: ``float(jnp.mean(x))`` forces a blocking device→host transfer.
+JAX_ROOTS = frozenset({"jnp", "jax", "lax", "pl", "pltpu"})
+
+#: call tails that wrap a function into a traced context.
+TRACE_WRAPPERS = frozenset({
+    "jit", "pallas_call", "vmap", "pmap", "grad", "value_and_grad",
+    "checkpoint", "remat", "shard_map", "eval_shape", "make_jaxpr",
+})
+
+#: structured-control-flow HOFs whose callables run under the trace.
+TRACE_HOFS = frozenset({
+    "scan", "cond", "while_loop", "switch", "fori_loop",
+    "associative_scan", "map", "custom_root",
+})
+
+_PRAGMA_RE = re.compile(r"#\s*lint:\s*([a-zA-Z][\w,-]*)")
+
+
+# ---------------------------------------------------------------------------
+# Findings
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str          # rule id, e.g. "JX102"
+    slug: str          # pragma name, e.g. "host-sync"
+    path: str
+    line: int
+    col: int
+    message: str
+    snippet: str = ""
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}:{self.col}"
+        out = f"{loc}: {self.rule} [{self.slug}] {self.message}"
+        if self.snippet:
+            out += f"\n    {self.snippet.strip()}"
+        return out
+
+    def fingerprint(self) -> str:
+        """Content fingerprint for baselines: stable under line moves,
+        invalidated when the offending line's text changes."""
+        key = f"{self.rule}|{os.path.basename(self.path)}|" \
+              f"{self.snippet.strip()}"
+        return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self) | {"fingerprint": self.fingerprint()}
+
+
+# ---------------------------------------------------------------------------
+# Expression helpers shared by rules
+# ---------------------------------------------------------------------------
+
+
+def attr_root(node: ast.AST) -> str | None:
+    """Leftmost name of an attribute chain: ``jnp.exp(x).T`` → ``jnp``."""
+    while isinstance(node, (ast.Attribute, ast.Call, ast.Subscript)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def call_tail(call: ast.Call) -> str | None:
+    """Rightmost name of a call's callee: ``jax.lax.scan(...)`` → ``scan``."""
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``np.ndarray`` → ``"np.ndarray"``; bare names pass through."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def is_jax_rooted(expr: ast.AST) -> bool:
+    """True if the expression contains an attribute chain rooted at a jax
+    namespace — the static proxy for "this value lives on device"."""
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Attribute) and attr_root(n) in JAX_ROOTS:
+            return True
+    return False
+
+
+def referenced_names(node: ast.AST) -> set[str]:
+    """Bare names + attribute tails referenced anywhere inside ``node``
+    (used to seed traced-reachability conservatively)."""
+    out: set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Traced-reachability analysis
+# ---------------------------------------------------------------------------
+
+_FnDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+class TracedAnalysis:
+    """Which functions of a module execute under a JAX trace?
+
+    Name-level and conservative: seeds are decorator matches and names
+    referenced inside trace-entry calls (expanded through simple local
+    aliases like ``kernel = functools.partial(_ssd_kernel, ...)``), then
+    reachability propagates through same-module calls-by-name and into
+    nested function definitions.
+    """
+
+    def __init__(self, tree: ast.Module) -> None:
+        self._defs: dict[str, list[ast.AST]] = {}
+        self._parent: dict[ast.AST, ast.AST | None] = {}
+        self._calls: dict[ast.AST, set[str]] = {}
+        self._aliases: dict[str, set[str]] = {}
+        seeds: set[str] = set()
+        decorated: set[ast.AST] = set()
+
+        stack: list[ast.AST] = []
+
+        def visit(node: ast.AST) -> None:
+            if isinstance(node, _FnDef):
+                self._defs.setdefault(node.name, []).append(node)
+                self._parent[node] = stack[-1] if stack else None
+                self._calls[node] = set()
+                for dec in node.decorator_list:
+                    names = referenced_names(dec)
+                    if names & (TRACE_WRAPPERS | TRACE_HOFS):
+                        decorated.add(node)
+                stack.append(node)
+                for child in ast.iter_child_nodes(node):
+                    visit(child)
+                stack.pop()
+                return
+            if isinstance(node, ast.Call):
+                tail = call_tail(node)
+                if stack and tail is not None:
+                    self._calls[stack[-1]].add(tail)
+                if tail in TRACE_WRAPPERS or tail in TRACE_HOFS:
+                    for arg in list(node.args) + [
+                        kw.value for kw in node.keywords
+                    ]:
+                        seeds.update(referenced_names(arg))
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                self._aliases.setdefault(
+                    node.targets[0].id, set()
+                ).update(referenced_names(node.value))
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        visit(tree)
+
+        # Expand seeds through assignment aliases to a fixpoint:
+        # pallas_call(kernel) + kernel = partial(_ssd_kernel) → _ssd_kernel.
+        changed = True
+        while changed:
+            changed = False
+            for name in list(seeds):
+                extra = self._aliases.get(name, set()) - seeds
+                if extra:
+                    seeds |= extra
+                    changed = True
+
+        # Traced fixpoint over the call graph + nesting.
+        traced: set[ast.AST] = set(decorated)
+        traced |= {
+            fn for name in seeds for fn in self._defs.get(name, [])
+        }
+        changed = True
+        while changed:
+            changed = False
+            for fn, calls in self._calls.items():
+                if fn in traced:
+                    for name in calls:
+                        for callee in self._defs.get(name, []):
+                            if callee not in traced:
+                                traced.add(callee)
+                                changed = True
+                elif self._parent.get(fn) in traced:
+                    traced.add(fn)
+                    changed = True
+        self.traced = traced
+
+    def is_traced(self, fn: ast.AST) -> bool:
+        return fn in self.traced
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+
+class Rule:
+    """One hazard class.  Subclasses set the metadata class attributes
+    and implement :meth:`check`."""
+
+    id: str = "JX000"
+    slug: str = "generic"
+    title: str = ""
+    hazard: str = ""
+    bad: str = ""
+    good: str = ""
+
+    def check(self, ctx: "ModuleContext") -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: "ModuleContext", node: ast.AST,
+                message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        snippet = ctx.lines[line - 1] if 0 < line <= len(ctx.lines) else ""
+        return Finding(
+            rule=self.id, slug=self.slug, path=ctx.path, line=line,
+            col=getattr(node, "col_offset", 0), message=message,
+            snippet=snippet,
+        )
+
+    @classmethod
+    def explain(cls) -> str:
+        parts = [f"{cls.id} [{cls.slug}] — {cls.title}", "", cls.hazard]
+        if cls.bad:
+            parts += ["", "Bad:", "    " + cls.bad.replace("\n", "\n    ")]
+        if cls.good:
+            parts += ["", "Good:", "    " + cls.good.replace("\n", "\n    ")]
+        parts += ["", f"Suppress with: # lint: allow-{cls.slug}"]
+        return "\n".join(parts)
+
+
+class ModuleContext:
+    """Everything a rule needs about one parsed source file."""
+
+    def __init__(self, path: str, src: str, tree: ast.Module) -> None:
+        self.path = path
+        self.src = src
+        self.lines = src.splitlines()
+        self.tree = tree
+        self.traced = TracedAnalysis(tree)
+        # parent links for enclosing-function lookups
+        self._parents: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self._parents[child] = node
+
+    def enclosing_function(self, node: ast.AST) -> ast.AST | None:
+        cur = self._parents.get(node)
+        while cur is not None and not isinstance(cur, _FnDef):
+            cur = self._parents.get(cur)
+        return cur
+
+    def in_traced(self, node: ast.AST) -> bool:
+        fn = node if isinstance(node, _FnDef) \
+            else self.enclosing_function(node)
+        return fn is not None and self.traced.is_traced(fn)
+
+    def traced_functions(self) -> list[ast.AST]:
+        return [fn for fn in self.traced.traced]
+
+
+# ---------------------------------------------------------------------------
+# Pragma suppression
+# ---------------------------------------------------------------------------
+
+
+def _pragmas_on(line_text: str) -> set[str]:
+    out: set[str] = set()
+    for m in _PRAGMA_RE.finditer(line_text):
+        tok = m.group(1)
+        if tok in ("disable", "skip-file"):
+            out.add(tok)
+        elif tok.startswith("allow-"):
+            out.update(t.strip() for t in tok[len("allow-"):].split(","))
+    return out
+
+
+def file_skipped(src: str) -> bool:
+    head = src.splitlines()[:10]
+    return any("skip-file" in _pragmas_on(ln) for ln in head)
+
+
+def suppressed(finding: Finding, lines: list[str]) -> bool:
+    """A finding is suppressed by a pragma on its own line or on a
+    pure-comment line directly above it."""
+    cand: list[str] = []
+    if 0 < finding.line <= len(lines):
+        cand.append(lines[finding.line - 1])
+        if finding.line >= 2 and lines[finding.line - 2].lstrip().startswith("#"):
+            cand.append(lines[finding.line - 2])
+    for text in cand:
+        tokens = _pragmas_on(text)
+        if "disable" in tokens or finding.slug in tokens \
+                or finding.rule in tokens:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def iter_py_files(paths: Iterable[str]) -> Iterator[str]:
+    for path in paths:
+        if os.path.isfile(path):
+            if path.endswith(".py"):
+                yield path
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(
+                d for d in dirs
+                if not d.startswith(".") and d != "__pycache__"
+            )
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    yield os.path.join(root, name)
+
+
+def lint_source(path: str, src: str, rules: Iterable[Rule]) -> list[Finding]:
+    """Run ``rules`` over one in-memory source file (pragmas applied)."""
+    if file_skipped(src):
+        return []
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(
+            rule="JX000", slug="parse", path=path, line=e.lineno or 1,
+            col=e.offset or 0, message=f"syntax error: {e.msg}",
+        )]
+    ctx = ModuleContext(path, src, tree)
+    lines = ctx.lines
+    out: list[Finding] = []
+    for rule in rules:
+        for f in rule.check(ctx):
+            if not suppressed(f, lines):
+                out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out
+
+
+def lint_paths(paths: Iterable[str], rules: Iterable[Rule]) -> list[Finding]:
+    rules = list(rules)
+    out: list[Finding] = []
+    for path in iter_py_files(paths):
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        out.extend(lint_source(path, src, rules))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+
+def write_baseline(findings: Iterable[Finding], path: str) -> int:
+    fps = sorted({f.fingerprint() for f in findings})
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"version": 1, "fingerprints": fps}, fh, indent=2)
+        fh.write("\n")
+    return len(fps)
+
+
+def load_baseline(path: str) -> set[str]:
+    if not os.path.exists(path):
+        return set()
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    return set(data.get("fingerprints", ()))
+
+
+def apply_baseline(findings: Iterable[Finding],
+                   baseline: set[str]) -> list[Finding]:
+    return [f for f in findings if f.fingerprint() not in baseline]

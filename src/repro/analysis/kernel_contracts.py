@@ -1,0 +1,328 @@
+"""Static contract checker for the Pallas kernels in ``repro.kernels``.
+
+``kernels/ref.py`` promises: *each* ``<name>`` *kernel in this package
+has a* ``ref_<name>`` *here with the exact same signature*.  Nothing
+enforced that promise until now — a drifted oracle signature means the
+parity tests silently compare the kernel against the wrong reference
+semantics (exactly how a dequant-path regression in one expert's slot
+would ship unnoticed).  This module parses the kernels package (pure
+AST, nothing imported) and verifies, per public kernel entry point:
+
+KC201  a ``ref_<name>`` oracle exists in ``ref.py``;
+KC202  the oracle's signature matches the kernel's, ignoring plumbing
+       parameters (``interpret``, ``block_*``, ``chunk``, ...);
+KC203  the entry declares an ``interpret`` parameter and threads it
+       into every ``pl.pallas_call`` it makes;
+KC204  at least one test references the kernel by name (interpret-mode
+       parity coverage);
+KC205  lane-tiling arithmetic (``% 128`` / ``// 128``) lives in the
+       shared ``_tile_pad`` helper, not inlined per call site.
+
+Findings reuse :class:`repro.analysis.astlint.Finding` and respect the
+same ``# lint: allow-<slug>`` pragmas.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterator
+
+from repro.analysis.astlint import (
+    Finding,
+    Rule,
+    call_tail,
+    suppressed,
+)
+
+#: parameters that tune execution, not semantics — a ref oracle runs in
+#: plain jnp and legitimately omits them.
+PLUMBING_PARAMS = frozenset({"interpret", "debug", "chunk", "head_block"})
+
+#: files in kernels/ that are not kernel-entry modules.
+_NON_KERNEL_FILES = frozenset({"ref.py", "ops.py", "__init__.py"})
+
+
+def _is_plumbing(name: str) -> bool:
+    return name in PLUMBING_PARAMS or name.startswith("block")
+
+
+def _param_names(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args] \
+        + [p.arg for p in a.kwonlyargs]
+
+
+def _contract_params(fn: ast.FunctionDef) -> list[str]:
+    return [p for p in _param_names(fn) if not _is_plumbing(p)]
+
+
+# --- rule metadata (for --explain; checks run in check_kernel_contracts) ---
+
+
+class MissingRefOracle(Rule):
+    id = "KC201"
+    slug = "missing-ref-oracle"
+    title = "Pallas kernel without a ref_<name> oracle"
+    hazard = (
+        "ref.py is the correctness ground truth: every public kernel "
+        "entry needs a pure-jnp ref_<name> with the same semantics, or "
+        "there is nothing to parity-test the Pallas path against."
+    )
+    bad = "def my_kernel(x, *, interpret=False): ...   # no ref_my_kernel"
+    good = ("# kernels/my_kernel.py\ndef my_kernel(x, *, interpret=False)"
+            "\n# kernels/ref.py\ndef ref_my_kernel(x): ...")
+
+
+class OracleSignatureMismatch(Rule):
+    id = "KC202"
+    slug = "oracle-signature"
+    title = "ref oracle signature drifted from its kernel"
+    hazard = (
+        "When the oracle's non-plumbing parameters differ from the "
+        "kernel's, parity tests exercise different semantics than the "
+        "kernel exposes — new kernel knobs (out_dtype, cfg_scale, ...) "
+        "go unverified, and stale oracle knobs test dead paths."
+    )
+    bad = ("def kern(q, scale, *, out_dtype, interpret=False): ...\n"
+           "def ref_kern(q, scale): ...   # out_dtype unverified")
+    good = ("def kern(q, scale, *, out_dtype, interpret=False): ...\n"
+            "def ref_kern(q, scale, *, out_dtype=jnp.float32): ...")
+
+
+class MissingInterpretPlumbing(Rule):
+    id = "KC203"
+    slug = "interpret-plumbing"
+    title = "kernel entry does not thread interpret= into pallas_call"
+    hazard = (
+        "Every kernel entry must accept interpret= and pass it to each "
+        "pl.pallas_call so the whole suite runs on CPU in interpret "
+        "mode; a hard-coded pallas_call only executes on TPU and is "
+        "untestable in CI."
+    )
+    bad = "out = pl.pallas_call(kern, out_shape=...)(x)"
+    good = ("def entry(x, *, interpret=False):\n"
+            "    return pl.pallas_call(kern, ..., interpret=interpret)(x)")
+
+
+class UntestedKernel(Rule):
+    id = "KC204"
+    slug = "untested-kernel"
+    title = "kernel entry never referenced by any test"
+    hazard = (
+        "A kernel with no interpret-mode parity test is dead reckoning: "
+        "the oracle may exist, but nothing runs kernel-vs-ref, so any "
+        "regression ships silently."
+    )
+    bad = "def new_kernel(...): ...   # grep tests/ -> no hits"
+    good = "tests/test_kernels.py::test_new_kernel_matches_ref"
+
+
+class InlineTilePad(Rule):
+    id = "KC205"
+    slug = "tile-pad"
+    title = "inline %128 //128 lane arithmetic outside _tile_pad"
+    hazard = (
+        "Lane-tiling padding (round a dimension up to the 128-lane "
+        "register width) is subtle: the shared ops._tile_pad handles "
+        "block-size clamping and remainders in one audited place.  An "
+        "inlined `(t + 127) // 128 * 128` re-derivation eventually "
+        "disagrees with it on some shape and produces a wrong BlockSpec."
+    )
+    bad = "pad = (t + 127) // 128 * 128   # ad-hoc copy"
+    good = "padded, block = _tile_pad(t)"
+
+
+CONTRACT_RULES: list[type[Rule]] = [
+    MissingRefOracle, OracleSignatureMismatch, MissingInterpretPlumbing,
+    UntestedKernel, InlineTilePad,
+]
+
+
+def _finding(rule: type[Rule], path: str, node: ast.AST, message: str,
+             lines: list[str]) -> Finding:
+    line = getattr(node, "lineno", 1)
+    snippet = lines[line - 1] if 0 < line <= len(lines) else ""
+    return Finding(rule=rule.id, slug=rule.slug, path=path, line=line,
+                   col=getattr(node, "col_offset", 0), message=message,
+                   snippet=snippet)
+
+
+def _kernel_entries(tree: ast.Module) -> list[ast.FunctionDef]:
+    """Public top-level functions that launch a pallas_call (directly or
+    via a name bound to one inside the function)."""
+    out = []
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef) and not node.name.startswith("_"):
+            if any(isinstance(n, ast.Call) and call_tail(n) == "pallas_call"
+                   for n in ast.walk(node)):
+                out.append(node)
+    return out
+
+
+def _test_corpus(tests_dir: str | None) -> str:
+    if tests_dir is None or not os.path.isdir(tests_dir):
+        return ""
+    chunks = []
+    for name in sorted(os.listdir(tests_dir)):
+        if name.endswith(".py"):
+            with open(os.path.join(tests_dir, name), encoding="utf-8") as fh:
+                chunks.append(fh.read())
+    return "\n".join(chunks)
+
+
+def check_kernel_contracts(
+    kernels_dir: str,
+    tests_dir: str | None = None,
+) -> list[Finding]:
+    """Run KC201–KC205 over a kernels package directory."""
+    findings: list[Finding] = []
+
+    ref_path = os.path.join(kernels_dir, "ref.py")
+    refs: dict[str, ast.FunctionDef] = {}
+    if os.path.exists(ref_path):
+        with open(ref_path, encoding="utf-8") as fh:
+            ref_tree = ast.parse(fh.read(), filename=ref_path)
+        refs = {
+            node.name: node for node in ref_tree.body
+            if isinstance(node, ast.FunctionDef)
+            and node.name.startswith("ref_")
+        }
+
+    corpus = _test_corpus(tests_dir)
+
+    for name in sorted(os.listdir(kernels_dir)):
+        if not name.endswith(".py") or name in _NON_KERNEL_FILES:
+            continue
+        path = os.path.join(kernels_dir, name)
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        lines = src.splitlines()
+        tree = ast.parse(src, filename=path)
+
+        for fn in _kernel_entries(tree):
+            # KC201 / KC202 — oracle existence and signature parity.
+            ref = refs.get(f"ref_{fn.name}")
+            if ref is None:
+                findings.append(_finding(
+                    MissingRefOracle, path, fn,
+                    f"kernel '{fn.name}' has no ref_{fn.name} oracle in "
+                    f"ref.py — the docstring contract promises one",
+                    lines))
+            else:
+                want = _contract_params(fn)
+                got = _contract_params(ref)
+                if want != got:
+                    extra = [p for p in got if p not in want]
+                    missing = [p for p in want if p not in got]
+                    detail = []
+                    if missing:
+                        detail.append(
+                            f"oracle missing {missing} (kernel semantics "
+                            f"unverified)")
+                    if extra:
+                        detail.append(
+                            f"oracle has stale params {extra} the kernel "
+                            f"lacks")
+                    if not detail:
+                        detail.append(
+                            f"parameter order differs: kernel {want} vs "
+                            f"oracle {got}")
+                    findings.append(_finding(
+                        OracleSignatureMismatch, path, fn,
+                        f"ref_{fn.name} signature drifted from kernel "
+                        f"'{fn.name}': " + "; ".join(detail),
+                        lines))
+
+            # KC203 — interpret declared and threaded into every launch.
+            params = set(_param_names(fn))
+            calls = [
+                n for n in ast.walk(fn)
+                if isinstance(n, ast.Call) and call_tail(n) == "pallas_call"
+            ]
+            if "interpret" not in params:
+                findings.append(_finding(
+                    MissingInterpretPlumbing, path, fn,
+                    f"kernel '{fn.name}' does not accept interpret= — "
+                    f"it cannot run in CPU interpret mode",
+                    lines))
+            else:
+                for call in calls:
+                    if not any(kw.arg == "interpret" for kw in call.keywords):
+                        findings.append(_finding(
+                            MissingInterpretPlumbing, path, call,
+                            f"pallas_call inside '{fn.name}' does not "
+                            f"forward interpret=",
+                            lines))
+
+            # KC204 — referenced by at least one test.
+            if corpus and not re.search(
+                    rf"\b{re.escape(fn.name)}\b", corpus):
+                findings.append(_finding(
+                    UntestedKernel, path, fn,
+                    f"kernel '{fn.name}' is not referenced by any file "
+                    f"in {tests_dir} — no parity coverage",
+                    lines))
+
+        # KC205 — inline lane arithmetic (module-wide, incl. ops.py scan
+        # below would be nice, but _tile_pad itself lives in ops.py; here
+        # we flag kernel modules re-deriving it).
+        findings.extend(_tile_pad_findings(path, tree, lines))
+
+    # ops.py: allowed only inside _tile_pad itself.
+    ops_path = os.path.join(kernels_dir, "ops.py")
+    if os.path.exists(ops_path):
+        with open(ops_path, encoding="utf-8") as fh:
+            src = fh.read()
+        lines = src.splitlines()
+        tree = ast.parse(src, filename=ops_path)
+        findings.extend(
+            _tile_pad_findings(ops_path, tree, lines, allow_in="_tile_pad"))
+
+    # pragma suppression, same grammar as the AST rules
+    by_path: dict[str, list[str]] = {}
+    kept: list[Finding] = []
+    for f in findings:
+        if f.path not in by_path:
+            with open(f.path, encoding="utf-8") as fh:
+                by_path[f.path] = fh.read().splitlines()
+        if not suppressed(f, by_path[f.path]):
+            kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept
+
+
+def _tile_pad_findings(path: str, tree: ast.Module, lines: list[str],
+                       allow_in: str | None = None) -> list[Finding]:
+    out: list[Finding] = []
+
+    def owner(node: ast.AST, parents: dict) -> str | None:
+        cur = parents.get(node)
+        while cur is not None:
+            if isinstance(cur, ast.FunctionDef):
+                return cur.name
+            cur = parents.get(cur)
+        return None
+
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.BinOp):
+            continue
+        if not isinstance(node.op, (ast.Mod, ast.FloorDiv)):
+            continue
+        rhs = node.right
+        if isinstance(rhs, ast.Constant) and rhs.value == 128:
+            fn_name = owner(node, parents)
+            if allow_in is not None and fn_name == allow_in:
+                continue
+            out.append(_finding(
+                InlineTilePad, path, node,
+                "inline lane-tiling arithmetic (const 128) — use the "
+                "shared ops._tile_pad helper",
+                lines))
+    return out

@@ -1,0 +1,51 @@
+"""Rule registry for the repro lint engine.
+
+Every AST rule ships here; ``python -m repro.analysis --list-rules``
+and ``--explain`` resolve through this module, and the kernel-contract
+checker contributes its KC2xx rule metadata for ``--explain`` even
+though those checks run outside the per-file AST pass.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.astlint import Rule
+from repro.analysis.rules.configs import (
+    UnhashableConfigField,
+    UnregisteredCarryDataclass,
+)
+from repro.analysis.rules.control_flow import (
+    TracedPythonBranch,
+    UnthreadedPRNGKey,
+)
+from repro.analysis.rules.host_sync import HostSyncInTraced, ImplicitHostSync
+
+#: AST rules, in reporting order.
+ALL_RULES: list[type[Rule]] = [
+    HostSyncInTraced,       # JX101
+    ImplicitHostSync,       # JX102
+    TracedPythonBranch,     # JX103
+    UnhashableConfigField,  # JX104
+    UnregisteredCarryDataclass,  # JX105
+    UnthreadedPRNGKey,      # JX106
+]
+
+
+def default_rules() -> list[Rule]:
+    return [cls() for cls in ALL_RULES]
+
+
+def rule_classes() -> list[type[Rule]]:
+    """AST rules plus contract/sanitizer rule metadata, for --explain."""
+    from repro.analysis.kernel_contracts import CONTRACT_RULES
+    from repro.analysis.sanitize import SANITIZER_RULES
+
+    return [*ALL_RULES, *CONTRACT_RULES, *SANITIZER_RULES]
+
+
+def find_rule(token: str) -> type[Rule] | None:
+    """Resolve a rule by id (``JX101``) or slug (``host-sync``)."""
+    token = token.strip()
+    for cls in rule_classes():
+        if token.upper() == cls.id or token.lower() == cls.slug:
+            return cls
+    return None

@@ -1,0 +1,245 @@
+"""Config-hashability and pytree-registration rules (JX104, JX105).
+
+The serving engine keys its compiled-sampler cache on frozen config
+dataclasses (``SamplerConfig`` and friends): one unhashable or
+mutable-default field turns every ``generate()`` into either a
+``TypeError`` or — worse, with hash-by-id objects — a silent recompile
+per request.  Separately, a dataclass carrying arrays through a
+``lax.scan``/``lax.cond`` carry must be registered as a pytree first,
+or JAX treats the whole instance as a static leaf and leaks tracers.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astlint import (
+    Finding,
+    ModuleContext,
+    Rule,
+    call_tail,
+    dotted_name,
+)
+
+_MUTABLE_CONTAINERS = frozenset({
+    "list", "dict", "set", "List", "Dict", "Set", "MutableMapping",
+    "bytearray", "defaultdict", "OrderedDict",
+})
+
+_ARRAY_TYPES = frozenset({
+    "np.ndarray", "numpy.ndarray", "jnp.ndarray", "jax.Array", "Array",
+    "ndarray", "chex.Array", "ArrayLike", "jax.numpy.ndarray",
+})
+
+_REGISTRATIONS = frozenset({
+    "register_dataclass", "register_pytree_node",
+    "register_pytree_node_class", "register_pytree_with_keys",
+    "register_pytree_with_keys_class", "register_static",
+})
+
+_HOF_TRIGGERS = frozenset({"scan", "cond", "while_loop", "switch",
+                           "fori_loop"})
+
+
+def _dataclass_decorator(cls: ast.ClassDef) -> tuple[bool, bool]:
+    """(is_dataclass, is_frozen) from the decorator list."""
+    for dec in cls.decorator_list:
+        name = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+        if name is None or name.split(".")[-1] != "dataclass":
+            continue
+        frozen = False
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                    frozen = bool(kw.value.value)
+        return True, frozen
+    return False, False
+
+
+def _annotation_bases(ann: ast.AST) -> set[str]:
+    """Top-level type names of an annotation, unwrapping Optional/unions
+    and string annotations — but NOT descending into subscripts, so
+    ``Callable[..., Array]`` resolves to ``Callable``, not ``Array``."""
+    out: set[str] = set()
+
+    def walk(node: ast.AST) -> None:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            try:
+                walk(ast.parse(node.value, mode="eval").body)
+            except SyntaxError:
+                pass
+            return
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+            walk(node.left)
+            walk(node.right)
+            return
+        if isinstance(node, ast.Subscript):
+            base = dotted_name(node.value)
+            if base is not None and base.split(".")[-1] in (
+                "Optional", "Union", "Annotated", "Final", "ClassVar",
+            ):
+                elts = node.slice.elts if isinstance(
+                    node.slice, ast.Tuple) else [node.slice]
+                for e in elts:
+                    walk(e)
+            else:
+                walk(node.value)
+            return
+        name = dotted_name(node)
+        if name is not None:
+            out.add(name)
+
+    walk(ann)
+    return out
+
+
+def _registered_classes(tree: ast.Module) -> set[str]:
+    """Class names pytree-registered anywhere in the module (call form
+    ``register_dataclass(Cls)``/``register_pytree_node(Cls, ...)``,
+    decorator form, or ``functools.partial(register_dataclass, ...)``
+    used as a decorator)."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and call_tail(node) in _REGISTRATIONS:
+            for arg in node.args:
+                name = dotted_name(arg)
+                if name is not None:
+                    out.add(name.split(".")[-1])
+        if isinstance(node, ast.ClassDef):
+            for dec in node.decorator_list:
+                tails = {
+                    call_tail(n) if isinstance(n, ast.Call) else None
+                    for n in ast.walk(dec) if isinstance(n, ast.Call)
+                }
+                name = dotted_name(dec if not isinstance(dec, ast.Call)
+                                   else dec.func)
+                tails.add(None if name is None else name.split(".")[-1])
+                for n in ast.walk(dec):
+                    if isinstance(n, (ast.Name, ast.Attribute)):
+                        dn = dotted_name(n)
+                        if dn is not None:
+                            tails.add(dn.split(".")[-1])
+                if tails & _REGISTRATIONS:
+                    out.add(node.name)
+    return out
+
+
+def _field_findings(cls: ast.ClassDef):
+    """Yield (stmt, kind, detail) for hazardous fields of a dataclass."""
+    for stmt in cls.body:
+        if not isinstance(stmt, ast.AnnAssign) or not isinstance(
+                stmt.target, ast.Name):
+            continue
+        bases = _annotation_bases(stmt.annotation)
+        short = {b.split(".")[-1] for b in bases}
+        if short & _MUTABLE_CONTAINERS:
+            yield stmt, "container", sorted(short & _MUTABLE_CONTAINERS)[0]
+        elif bases & _ARRAY_TYPES or short & {"ndarray"}:
+            yield stmt, "array", sorted(bases)[0]
+        if stmt.value is not None:
+            for n in ast.walk(stmt.value):
+                if isinstance(n, ast.Call) \
+                        and call_tail(n) == "field":
+                    for kw in n.keywords:
+                        if kw.arg == "default_factory" and dotted_name(
+                                kw.value) in ("list", "dict", "set"):
+                            yield stmt, "default", dotted_name(kw.value)
+                elif isinstance(n, (ast.List, ast.Dict, ast.Set)) \
+                        and n is stmt.value:
+                    yield stmt, "default", type(n).__name__.lower()
+
+
+class UnhashableConfigField(Rule):
+    id = "JX104"
+    slug = "mutable-config"
+    title = "unhashable or mutable-default field on a frozen config"
+    hazard = (
+        "Frozen config dataclasses are jit-cache keys (the ServingEngine "
+        "keys compiled samplers on SamplerConfig).  A list/dict/set "
+        "field, a mutable default_factory, or a bare ndarray field makes "
+        "hash() raise — or, for hash-by-id values, makes every request "
+        "miss the compile cache and silently retrace.  Use tuples, "
+        "frozen sub-configs via default_factory, or move array state out "
+        "of the config."
+    )
+    bad = ("@dataclasses.dataclass(frozen=True)\n"
+           "class Config:\n"
+           "    steps: list = dataclasses.field(default_factory=list)")
+    good = ("@dataclasses.dataclass(frozen=True)\n"
+            "class Config:\n"
+            "    steps: tuple = ()")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        registered = _registered_classes(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            is_dc, frozen = _dataclass_decorator(node)
+            if not is_dc or not frozen:
+                continue
+            if node.name in registered:
+                continue  # registered pytrees are traced data, not keys
+            for stmt, kind, detail in _field_findings(node):
+                if kind == "container":
+                    msg = (f"frozen dataclass {node.name}: field typed "
+                           f"'{detail}' is unhashable — breaks jit cache "
+                           f"keys; use a tuple/frozen sub-config")
+                elif kind == "array":
+                    msg = (f"frozen dataclass {node.name}: ndarray-typed "
+                           f"field ('{detail}') makes hash() raise if the "
+                           f"config is ever used as a jit cache key")
+                else:
+                    msg = (f"frozen dataclass {node.name}: mutable "
+                           f"default ({detail}) — unhashable instance")
+                yield self.finding(ctx, stmt, msg)
+
+
+class UnregisteredCarryDataclass(Rule):
+    id = "JX105"
+    slug = "pytree-dataclass"
+    title = "array-carrying dataclass not registered as a pytree"
+    hazard = (
+        "In a module that threads values through lax.scan/lax.cond, a "
+        "dataclass holding jax arrays MUST be registered "
+        "(jax.tree_util.register_dataclass or register_pytree_node) "
+        "before an instance enters a carry: unregistered instances are "
+        "treated as static leaves, so the carried arrays leak tracers or "
+        "get baked into the trace as constants."
+    )
+    bad = ("@dataclasses.dataclass(frozen=True)\n"
+           "class Plan:\n"
+           "    idx: jax.Array\n"
+           "...\n"
+           "x, _ = jax.lax.scan(step, (x0, Plan(idx)), ts)")
+    good = ("@functools.partial(jax.tree_util.register_dataclass, ...)\n"
+            "@dataclasses.dataclass(frozen=True)\n"
+            "class Plan:\n"
+            "    idx: jax.Array")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        uses_hof = any(
+            isinstance(n, ast.Call) and call_tail(n) in _HOF_TRIGGERS
+            for n in ast.walk(ctx.tree)
+        )
+        if not uses_hof:
+            return
+        registered = _registered_classes(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            is_dc, _ = _dataclass_decorator(node)
+            if not is_dc or node.name in registered:
+                continue
+            array_fields = [
+                stmt.target.id for stmt, kind, _ in _field_findings(node)
+                if kind == "array"
+            ]
+            if array_fields:
+                yield self.finding(
+                    ctx, node,
+                    f"dataclass {node.name} holds array fields "
+                    f"({', '.join(array_fields)}) in a module using "
+                    f"lax.scan/lax.cond but is not registered as a "
+                    f"pytree — it cannot enter a carry safely",
+                )

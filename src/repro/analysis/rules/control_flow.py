@@ -1,0 +1,102 @@
+"""Traced-control-flow and PRNG-discipline rules (JX103, JX106).
+
+Python ``if``/``while`` evaluate their condition eagerly at trace time:
+on a traced value that raises ``TracerBoolConversionError`` — or, when
+the value happens to be concrete (weak types, shape-dependent consts),
+silently specializes the trace to one branch.  ``jax.random`` calls are
+only reproducible when their key is threaded from the caller; minting a
+fresh ``PRNGKey`` at the call site yields the same "random" numbers on
+every invocation and hides the seed from the request plumbing.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astlint import (
+    Finding,
+    ModuleContext,
+    Rule,
+    call_tail,
+    dotted_name,
+    is_jax_rooted,
+)
+
+#: jax.random functions that *derive* keys — an inline PRNGKey feeding
+#: these is deterministic seed plumbing, not a sampling hazard.
+_KEY_DERIVERS = frozenset({
+    "PRNGKey", "key", "split", "fold_in", "wrap_key_data", "key_data",
+    "clone",
+})
+
+
+class TracedPythonBranch(Rule):
+    id = "JX103"
+    slug = "traced-branch"
+    title = "Python if/while on a traced value"
+    hazard = (
+        "A Python branch inside jitted/scanned code runs once, at trace "
+        "time.  If the condition involves a device value it either "
+        "raises TracerBoolConversionError or silently freezes the "
+        "decision for every later call — the compiled program keeps "
+        "taking the branch the tracer took.  Use lax.cond / lax.select / "
+        "jnp.where so the decision stays in the compiled program."
+    )
+    bad = ("def body(x, t):      # lax.scan body\n"
+           "    if jnp.any(jnp.isnan(x)):\n"
+           "        x = jnp.zeros_like(x)")
+    good = ("def body(x, t):\n"
+            "    x = jnp.where(jnp.any(jnp.isnan(x)),\n"
+            "                  jnp.zeros_like(x), x)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            if not ctx.in_traced(node):
+                continue
+            if is_jax_rooted(node.test):
+                kw = "while" if isinstance(node, ast.While) else "if"
+                yield self.finding(
+                    ctx, node,
+                    f"Python `{kw}` on a traced (device-valued) condition "
+                    f"inside traced code — trace-time crash or silently "
+                    f"specialized branch; use lax.cond/jnp.where",
+                )
+
+
+class UnthreadedPRNGKey(Rule):
+    id = "JX106"
+    slug = "prng-key"
+    title = "jax.random sampling with an inline (unthreaded) PRNGKey"
+    hazard = (
+        "jax.random.<sampler>(jax.random.PRNGKey(c), ...) draws the SAME "
+        "numbers every call: the key is minted at the call site instead "
+        "of being threaded from the caller.  Library code must accept a "
+        "key argument (split/fold_in upstream) so randomness is "
+        "reproducible AND actually varies across requests."
+    )
+    bad = "noise = jax.random.normal(jax.random.PRNGKey(0), shape)"
+    good = ("def sample(key, shape):\n"
+            "    noise = jax.random.normal(key, shape)   # key threaded in")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            name = dotted_name(node.func) or ""
+            if not name.endswith(".random." + (call_tail(node) or "")):
+                continue
+            fn = call_tail(node)
+            if fn in _KEY_DERIVERS:
+                continue
+            key_arg = node.args[0]
+            if isinstance(key_arg, ast.Call) \
+                    and call_tail(key_arg) in ("PRNGKey", "key"):
+                yield self.finding(
+                    ctx, node,
+                    f"jax.random.{fn} called with an inline "
+                    f"PRNGKey(...) — the key is not threaded, so every "
+                    f"call draws identical values",
+                )

@@ -1,0 +1,115 @@
+"""Host-synchronization hazard rules (JX101, JX102).
+
+A ``float()``/``.item()``/``np.asarray()`` on a device value forces a
+blocking device→host transfer; inside a traced function it is worse —
+the call either crashes at trace time (``TracerConversionError``) or,
+when it happens to run on a concrete value, silently bakes that value
+into the compiled program as a constant, so the next call with different
+data serves stale numbers without any error.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astlint import (
+    Finding,
+    ModuleContext,
+    Rule,
+    attr_root,
+    call_tail,
+    is_jax_rooted,
+)
+
+#: builtins that coerce a device scalar to a host scalar.
+_COERCIONS = frozenset({"float", "int", "bool", "complex"})
+
+#: method calls that always force a device→host sync.
+_SYNC_METHODS = frozenset({"item", "tolist", "block_until_ready"})
+
+#: numpy entry points that pull a traced/device value to host.
+_NP_SINKS = frozenset({"asarray", "array", "copy", "save", "savez"})
+
+
+def _sync_call_kind(node: ast.Call) -> str | None:
+    """Classify a call as a host sync, or None."""
+    tail = call_tail(node)
+    fn = node.func
+    if isinstance(fn, ast.Name) and fn.id in _COERCIONS and node.args:
+        if is_jax_rooted(node.args[0]):
+            return f"{fn.id}() on a device expression"
+    if isinstance(fn, ast.Attribute) and tail in _SYNC_METHODS:
+        return f".{tail}()"
+    if isinstance(fn, ast.Attribute) and tail == "device_get" \
+            and attr_root(fn) == "jax":
+        return "jax.device_get()"
+    return None
+
+
+class HostSyncInTraced(Rule):
+    id = "JX101"
+    slug = "host-sync"
+    title = "host sync reachable from jitted/scanned code"
+    hazard = (
+        "Inside a function that executes under jax.jit / lax.scan / "
+        "pallas_call, any device→host conversion (.item(), float(jnp...), "
+        "np.asarray on a traced value, jax.device_get) either raises a "
+        "TracerConversionError at trace time or freezes the value into "
+        "the compiled program as a constant — the served result silently "
+        "stops depending on that input."
+    )
+    bad = ("@jax.jit\n"
+           "def step(x):\n"
+           "    if float(jnp.mean(x)) > 0:   # trace-time sync\n"
+           "        ...")
+    good = ("@jax.jit\n"
+            "def step(x):\n"
+            "    return jnp.where(jnp.mean(x) > 0, ..., ...)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or not ctx.in_traced(node):
+                continue
+            kind = _sync_call_kind(node)
+            if kind is None and isinstance(node.func, ast.Attribute) \
+                    and call_tail(node) in _NP_SINKS \
+                    and attr_root(node.func) == "np" and node.args:
+                kind = f"np.{call_tail(node)}() on a traced value"
+            if kind is not None:
+                yield self.finding(
+                    ctx, node,
+                    f"{kind} inside traced code — moves a traced value to "
+                    f"host (trace-time crash or silently baked constant)",
+                )
+
+
+class ImplicitHostSync(Rule):
+    id = "JX102"
+    slug = "host-sync"
+    title = "implicit device→host sync outside an explicit boundary"
+    hazard = (
+        "float(jnp...), int(jnp...), and .item() block the caller until "
+        "the device finishes every queued computation — a hidden "
+        "synchronization point that serializes the pipeline.  Device→host "
+        "conversions belong at one explicit boundary, marked with "
+        "'# lint: allow-host-sync' so the sync is visible in review."
+    )
+    bad = "ppl = float(jnp.exp(-jnp.mean(picked)))"
+    good = ("def _host_scalar(x):\n"
+            "    return jnp.asarray(x).item()  # lint: allow-host-sync\n"
+            "ppl = _host_scalar(jnp.exp(-jnp.mean(picked)))")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or ctx.in_traced(node):
+                continue  # traced contexts are JX101's jurisdiction
+            kind = _sync_call_kind(node)
+            if kind is not None and "device_get" not in kind \
+                    and "block_until_ready" not in kind:
+                yield self.finding(
+                    ctx, node,
+                    f"implicit host sync: {kind} — move the device→host "
+                    f"conversion to an explicit boundary and mark it with "
+                    f"'# lint: allow-host-sync'",
+                )

@@ -1,0 +1,288 @@
+"""Runtime sanitizer for ``ServingEngine`` (RT301–RT303).
+
+The static rules catch hazards the AST can prove; three serving
+invariants only manifest at runtime and get a cheap wrapper instead:
+
+RT301  **trace budget** — the engine promises retrace-free serving
+       (compiled-sampler cache; elastic membership passes the store /
+       coefficient tables / cluster map as jit *arguments*).  A
+       regression here is silent: everything still returns the right
+       numbers, just recompiling per request.  The sanitizer watches
+       ``engine.stats['traces']`` and raises when a checked operation
+       (or the whole wrapped lifetime) exceeds its budget — membership
+       ops (``add_expert``/``evict_expert``/…) get a hard budget of 0.
+RT302  **numerical hazard** — NaN/Inf escaping the fused kernel outputs
+       corrupts one expert's slot without failing any test; the wrapper
+       blocks on each checked result and raises naming the operation.
+RT303  **sharding mismatch** — store leaves must actually lie on the
+       placements ``launch.sharding.expert_param_shardings`` derives
+       from the store's declared logical axes; a silently-replicated
+       leaf costs the whole memory saving of expert placement.
+
+Use as a drop-in wrapper in tests/benches/examples::
+
+    eng = EngineSanitizer(engine, trace_budget=1)
+    out = eng.generate(key, text, batch)      # checked
+    with assert_no_retrace(engine):
+        engine.add_expert(path)               # membership must not trace
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+import jax
+import numpy as np
+
+from repro.analysis.astlint import Rule
+
+
+class SanitizerError(RuntimeError):
+    """Base class for runtime sanitizer violations."""
+
+
+class TraceBudgetExceeded(SanitizerError):
+    rule = "RT301"
+
+
+class NumericalHazard(SanitizerError):
+    rule = "RT302"
+
+
+class ShardingMismatch(SanitizerError):
+    rule = "RT303"
+
+
+# --- rule metadata (for `python -m repro.analysis --explain RT30x`) ---------
+
+
+class TraceBudgetRule(Rule):
+    id = "RT301"
+    slug = "trace-budget"
+    title = "ServingEngine retraced past its budget"
+    hazard = (
+        "The engine caches one compiled sampler per (batch, latent "
+        "shape, sampler config, conditioning signature); elastic "
+        "membership changes arrive as jit-argument VALUES.  Any code "
+        "path that bakes membership (or an unhashable config) into the "
+        "trace recompiles per request — numerically correct, "
+        "catastrophically slow, and invisible to assert-based tests.  "
+        "EngineSanitizer(engine, trace_budget=N) raises "
+        "TraceBudgetExceeded the moment stats['traces'] passes N, and "
+        "assert_no_retrace(engine) pins membership ops to zero traces."
+    )
+    bad = "engine.add_expert(p)   # retraces: membership closed over"
+    good = ("with assert_no_retrace(engine):\n"
+            "    engine.add_expert(p)   # store arrives as an argument")
+
+
+class NumericalHazardRule(Rule):
+    id = "RT302"
+    slug = "numerical-hazard"
+    title = "NaN/Inf escaped a checked engine output"
+    hazard = (
+        "One contributor checkpoint with a bad leaf (or a dequant-scale "
+        "regression) poisons only the samples routed through its slot — "
+        "aggregate tests keep passing while a fraction of served images "
+        "are garbage.  The sanitizer blocks on each checked result and "
+        "raises NumericalHazard naming the operation that produced the "
+        "non-finite values."
+    )
+    bad = "out = engine.generate(key, text, 8)   # silently NaN"
+    good = "out = EngineSanitizer(engine).generate(key, text, 8)"
+
+
+class ShardingMismatchRule(Rule):
+    id = "RT303"
+    slug = "sharding-mismatch"
+    title = "store leaf placement drifted from its declared logical axes"
+    hazard = (
+        "expert_param_shardings maps the store's logical axes "
+        "('expert' on the leading K dim) to mesh placements.  If a "
+        "membership update or a load path re-places a leaf with a "
+        "different spec (e.g. fully replicated), GSPMD still computes "
+        "correct results — while quietly holding K/n_shards times the "
+        "intended bytes per device.  check_store_sharding compares every "
+        "leaf's actual sharding spec against the declared one."
+    )
+    bad = "store = jax.device_put(store, NamedSharding(mesh, P()))"
+    good = ("store = jax.device_put(store, expert_param_shardings(\n"
+            "    store, mesh, logical_axes=store.logical_axes()))")
+
+
+SANITIZER_RULES: list[type[Rule]] = [
+    TraceBudgetRule, NumericalHazardRule, ShardingMismatchRule,
+]
+
+
+# --- trace budget ----------------------------------------------------------
+
+
+@contextlib.contextmanager
+def assert_no_retrace(engine, budget: int = 0) -> Iterator[None]:
+    """Fail if the wrapped block compiles more than ``budget`` traces.
+
+    Membership operations and repeat same-shape requests promise zero;
+    a first-contact request legitimately compiles once (budget=1).
+    """
+    before = engine.stats["traces"]
+    yield
+    traced = engine.stats["traces"] - before
+    if traced > budget:
+        raise TraceBudgetExceeded(
+            f"RT301: {traced} trace(s) inside a block budgeted for "
+            f"{budget} — the compiled-sampler cache was bypassed "
+            f"(unhashable cache key, membership closed over, or a "
+            f"shape/config drifting per call)"
+        )
+
+
+# --- numerics --------------------------------------------------------------
+
+
+def nonfinite_leaves(tree, prefix: str = "out") -> list[str]:
+    """Paths of floating leaves containing NaN/Inf (blocks on device)."""
+    bad: list[str] = []
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)  # lint: allow-host-sync — sanitizer boundary
+        if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+            n = int((~np.isfinite(arr)).sum())
+            bad.append(f"{prefix}{jax.tree_util.keystr(path)}: "
+                       f"{n}/{arr.size} non-finite")
+    return bad
+
+
+def check_finite(value, op: str) -> None:
+    bad = nonfinite_leaves(value)
+    if bad:
+        raise NumericalHazard(
+            f"RT302: non-finite values escaped {op}: " + "; ".join(bad)
+        )
+
+
+# --- sharding --------------------------------------------------------------
+
+
+def _norm_spec(spec) -> tuple:
+    """PartitionSpec → comparable tuple with trailing Nones stripped
+    (P('expert') and P('expert', None) are the same placement)."""
+    t = tuple(spec) if spec is not None else ()
+    while t and t[-1] is None:
+        t = t[:-1]
+    return t
+
+
+def check_store_sharding(engine) -> list[str]:
+    """Compare each store leaf's actual sharding against the placement
+    declared by its logical axes.  Returns mismatch descriptions
+    (empty = clean); no-op on unsharded engines."""
+    store = getattr(engine, "param_store", None)
+    mesh = getattr(engine, "mesh", None)
+    if store is None or mesh is None:
+        return []
+    from repro.launch.sharding import expert_param_shardings
+
+    declared = expert_param_shardings(
+        store, mesh, logical_axes=store.logical_axes()
+    )
+    leaves = jax.tree_util.tree_leaves_with_path(store)
+    decl_leaves = jax.tree_util.tree_leaves(declared)
+    out: list[str] = []
+    for (path, leaf), want in zip(leaves, decl_leaves):
+        if not isinstance(leaf, jax.Array):
+            continue
+        got_spec = getattr(leaf.sharding, "spec", None)
+        want_spec = getattr(want, "spec", None)
+        if _norm_spec(got_spec) != _norm_spec(want_spec):
+            out.append(
+                f"store{jax.tree_util.keystr(path)}: placed as "
+                f"{_norm_spec(got_spec) or '(replicated)'} but logical "
+                f"axes declare {_norm_spec(want_spec) or '(replicated)'}"
+            )
+    return out
+
+
+def assert_store_sharding(engine) -> None:
+    bad = check_store_sharding(engine)
+    if bad:
+        raise ShardingMismatch(
+            "RT303: store placement drifted from declared logical axes: "
+            + "; ".join(bad)
+        )
+
+
+# --- engine wrapper --------------------------------------------------------
+
+
+class EngineSanitizer:
+    """Checked facade over a ``ServingEngine``.
+
+    ``generate``/``flush`` run under the trace budget and (optionally)
+    finiteness + sharding checks; membership mutators run under a hard
+    zero-trace budget.  Everything else forwards to the engine
+    untouched, so the wrapper is a drop-in for tests and benches.
+
+    ``trace_budget`` is a LIFETIME cap on ``stats['traces']`` growth
+    from the moment of wrapping: budget=1 means "one compile, ever" —
+    exactly the retrace-free serving contract for a fixed-shape
+    workload.  ``None`` disables the budget (numerics/sharding only).
+    """
+
+    _CHECKED = ("generate", "flush")
+    _MEMBERSHIP = ("add_expert", "evict_expert", "retire_expert",
+                   "quarantine_expert")
+
+    def __init__(self, engine, *, trace_budget: int | None = None,
+                 check_numerics: bool = True,
+                 check_sharding: bool = True) -> None:
+        self.engine = engine
+        self.trace_budget = trace_budget
+        self.check_numerics = check_numerics
+        self.check_sharding = check_sharding
+        self._traces_at_wrap = engine.stats["traces"]
+        self.events: list[str] = []
+
+    # -- checked operations --
+
+    def generate(self, key, batch_text_emb, batch_size):
+        out = self.engine.generate(key, batch_text_emb, batch_size)
+        self._post_op(f"generate(batch={batch_size})")
+        if self.check_numerics:
+            check_finite(out, f"generate(batch={batch_size})")
+        return out
+
+    def submit(self, key, text_emb=None, batch_size=None):
+        return self.engine.submit(key, text_emb=text_emb,
+                                  batch_size=batch_size)
+
+    def flush(self) -> int:
+        n = self.engine.flush()
+        self._post_op(f"flush() -> {n} dispatch(es)")
+        return n
+
+    def __getattr__(self, name: str):
+        attr = getattr(self.engine, name)
+        if name in self._MEMBERSHIP and callable(attr):
+            def checked(*args, **kwargs):
+                with assert_no_retrace(self.engine, budget=0):
+                    result = attr(*args, **kwargs)
+                self._post_op(f"{name}()")
+                return result
+            return checked
+        return attr
+
+    # -- internals --
+
+    def _post_op(self, op: str) -> None:
+        traced = self.engine.stats["traces"] - self._traces_at_wrap
+        self.events.append(f"{op}: traces={traced}")
+        if self.trace_budget is not None and traced > self.trace_budget:
+            raise TraceBudgetExceeded(
+                f"RT301: {op} pushed the engine to {traced} trace(s), "
+                f"budget is {self.trace_budget} — retrace-free serving "
+                f"contract violated"
+            )
+        if self.check_sharding:
+            assert_store_sharding(self.engine)

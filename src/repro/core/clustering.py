@@ -91,11 +91,17 @@ def kmeans(
 
 
 @dataclasses.dataclass(frozen=True)
+# Host-side fitted model: the scan above carries raw centroid arrays, a
+# ClusterModel never enters a carry or a jit cache key — assign() lifts
+# the centroids to device per call.  # lint: allow-pytree-dataclass
 class ClusterModel:
     """Fitted two-stage clustering: fine centroids + fine->coarse map."""
 
+    # lint: allow-mutable-config (host-side, see class comment)
     fine_centroids: np.ndarray      # (F, D)
+    # lint: allow-mutable-config
     coarse_centroids: np.ndarray    # (K, D)
+    # lint: allow-mutable-config
     fine_to_coarse: np.ndarray      # (F,)
 
     @property

@@ -47,6 +47,8 @@ class TokenPrototypeRouter:
     a calibrated stand-in for the paper's learned DiT router.
     """
 
+    # Host-side fitted state, never a jit cache key (posterior() lifts it
+    # to device per call).  # lint: allow-mutable-config
     prototypes: np.ndarray          # (K, V) normalized token frequencies
     temperature: float = 0.05
 
@@ -79,6 +81,17 @@ class TokenPrototypeRouter:
         h = self._histogram(tokens, vocab)                   # (B, V)
         sims = h @ jnp.asarray(self.prototypes).T            # (B, K)
         return jax.nn.softmax(sims / self.temperature, axis=-1)
+
+
+def _host_scalar(x: Array) -> float:
+    """The module's one explicit device→host boundary.
+
+    Perplexity numbers are returned to callers as Python floats (they go
+    to logs and assertions, not back to device), so the blocking
+    transfer is intentional and lives here, visibly, instead of as
+    ``float(jnp...)`` scattered through the scoring paths.
+    """
+    return float(jnp.asarray(x).item())  # lint: allow-host-sync
 
 
 # ---------------------------------------------------------------------------
@@ -114,7 +127,7 @@ class LMExpertEnsemble:
     def perplexity(self, tokens: Array, labels: Array) -> float:
         lp = self.fused_logprobs(tokens)
         picked = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
-        return float(jnp.exp(-jnp.mean(picked)))
+        return _host_scalar(jnp.exp(-jnp.mean(picked)))
 
     def decode_greedy(self, prompt: Array, steps: int) -> Array:
         """Greedy continuation with router weights fixed from the prompt."""
@@ -153,4 +166,4 @@ def expert_perplexity(cfg: LMConfig, params, tokens: Array,
     logits, _ = zoo.forward_train(cfg, params, {"tokens": tokens})
     lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
     picked = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
-    return float(jnp.exp(-jnp.mean(picked)))
+    return _host_scalar(jnp.exp(-jnp.mean(picked)))

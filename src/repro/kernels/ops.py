@@ -231,7 +231,7 @@ def dequant_params(
             interpret=_interpret(),
         )[:, :t]
     else:
-        out = _ref.ref_hetero_fuse_dequant(qf, scale).astype(out_dtype)
+        out = _ref.ref_hetero_fuse_dequant(qf, scale, out_dtype=out_dtype)
     return out.reshape((rows,) + trailing)
 
 

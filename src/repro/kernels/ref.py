@@ -37,14 +37,17 @@ def ref_flash_attention(
     return out.astype(q.dtype)
 
 
-def ref_ssd_scan(
-    x: Array, dt: Array, A: Array, B: Array, C: Array,
-    init_state: Array | None = None,
-):
-    """Oracle SSD recurrence — delegates to the sequential reference."""
+def ref_ssd_scan(x: Array, dt: Array, A: Array, B: Array, C: Array):
+    """Oracle SSD recurrence — delegates to the sequential reference.
+
+    Matches the kernel's contract exactly: the Pallas ``ssd_scan`` always
+    starts from a zero state, so the oracle takes no ``init_state``
+    (resumable-state scans go through ``models.mamba2.ssd_sequential``
+    directly).
+    """
     from repro.models.mamba2 import ssd_sequential
 
-    return ssd_sequential(x, dt, A, B, C, init_state=init_state)
+    return ssd_sequential(x, dt, A, B, C)
 
 
 def ref_adaln_fuse(
@@ -98,9 +101,17 @@ def ref_hetero_fuse(
 def ref_hetero_fuse_dequant(
     q: Array,            # (R, T) quantized values (int8 / float8_e4m3fn)
     scale: Array,        # (R,) symmetric per-row scales
+    *,
+    out_dtype=jnp.float32,
 ) -> Array:
-    """Oracle for the fused ``scale · q`` dequantization op."""
-    return q.astype(jnp.float32) * scale.astype(jnp.float32)[:, None]
+    """Oracle for the fused ``scale · q`` dequantization op.
+
+    ``out_dtype`` mirrors the kernel's output-cast knob: the multiply
+    always runs in float32, the cast is the last op — same as the Pallas
+    path, so mixed-precision parity tests compare like against like.
+    """
+    out = q.astype(jnp.float32) * scale.astype(jnp.float32)[:, None]
+    return out.astype(out_dtype)
 
 
 def ref_hetero_fuse_step(

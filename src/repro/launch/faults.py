@@ -240,7 +240,8 @@ def main() -> None:
         router_fn=router_fn, latent_shape=latent, sampler=sampler,
         capacity=8, n_expert_shards=ndev, n_data_shards=1,
     )
-    text = jax.random.normal(jax.random.PRNGKey(3), (2, 5, 6))
+    # deterministic harness conditioning — same text every run by design
+    text = jax.random.normal(jax.random.PRNGKey(3), (2, 5, 6))  # lint: allow-prng-key
     admitted = np.asarray(eng.generate(KEY, text, 2))
     h_old = eng.submit(KEY, text, 2)            # admitted under epoch 0
     with tempfile.TemporaryDirectory() as d:

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.hlo_cost import HloCostModel, parse_hlo
-from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.hlo_analysis import (collective_bytes,
+                                       compiled_bytes_accessed)
 
 
 def test_scan_trip_count_multiplies_flops():
@@ -71,3 +72,54 @@ def test_parse_hlo_computations():
     comps = parse_hlo(compiled.as_text())
     assert comps, "no computations parsed"
     assert any("main" in n for n in comps)
+
+
+# --- compiled_bytes_accessed degradation (interpret-mode/CPU backends) -------
+
+
+class _FakeCompiled:
+    """Stand-in for a jax compiled executable with a fixed cost_analysis."""
+
+    def __init__(self, ca):
+        self._ca = ca
+
+    def cost_analysis(self):
+        if isinstance(self._ca, Exception):
+            raise self._ca
+        return self._ca
+
+
+def test_bytes_accessed_real_compiled_is_nonnegative_float():
+    x = jnp.zeros((8, 8))
+    compiled = jax.jit(lambda x: x @ x + 1.0).lower(x).compile()
+    out = compiled_bytes_accessed(compiled)
+    assert isinstance(out, float) and out >= 0.0
+
+
+def test_bytes_accessed_raising_backend_degrades_to_zero():
+    """Backends without a cost model raise from cost_analysis()."""
+    fake = _FakeCompiled(NotImplementedError("no cost model on this backend"))
+    assert compiled_bytes_accessed(fake) == 0.0
+
+
+def test_bytes_accessed_empty_cost_analysis_list():
+    """Older jax: cost_analysis() -> [] (no properties reported)."""
+    assert compiled_bytes_accessed(_FakeCompiled([])) == 0.0
+
+
+def test_bytes_accessed_missing_key_degrades_to_zero():
+    """CPU/interpret builds report flops but no 'bytes accessed' key."""
+    assert compiled_bytes_accessed(_FakeCompiled({"flops": 123.0})) == 0.0
+    assert compiled_bytes_accessed(_FakeCompiled([{"flops": 1.0}])) == 0.0
+
+
+def test_bytes_accessed_non_dict_payload_degrades_to_zero():
+    assert compiled_bytes_accessed(_FakeCompiled("bogus")) == 0.0
+    assert compiled_bytes_accessed(_FakeCompiled(None)) == 0.0
+
+
+def test_bytes_accessed_reads_key_old_and_new_shapes():
+    assert compiled_bytes_accessed(
+        _FakeCompiled({"bytes accessed": 42.0})) == 42.0
+    assert compiled_bytes_accessed(
+        _FakeCompiled([{"bytes accessed": 7.0}])) == 7.0
