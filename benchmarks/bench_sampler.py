@@ -99,16 +99,17 @@ LATENT = int(os.environ.get("REPRO_BENCH_SAMPLER_LATENT", 16))
 REPS = int(os.environ.get("REPRO_BENCH_SAMPLER_REPS", 5))
 
 
-@functools.lru_cache(maxsize=1)
-def _build():
+@functools.lru_cache(maxsize=2)
+def _build(latent: int = LATENT):
     """8 heterogeneous (DDPM/FM) experts sharing one instrumented apply.
 
     16×16 latents (256-token sequences after 2×2 patching at d=128) are
     the smallest scale where CPU wall-clock is forward-compute- rather
     than dispatch/gather-dominated, so the measured speedup reflects the
-    forward-count reduction rather than scan overhead.
+    forward-count reduction rather than scan overhead.  (The continuous
+    section passes a smaller ``latent`` — see ``collect_continuous``.)
     """
-    cfg = dit_b2().reduced(latent_size=LATENT)
+    cfg = dit_b2().reduced(latent_size=latent)
     base_apply = D.make_expert_apply(cfg)
     counter = {"n": 0}
 
@@ -124,7 +125,7 @@ def _build():
             counted_apply, i,
         ))
         params.append(D.init(cfg, jax.random.PRNGKey(10 + i)))
-    rcfg = router_b2(num_clusters=NUM_EXPERTS).reduced(latent_size=LATENT)
+    rcfg = router_b2(num_clusters=NUM_EXPERTS).reduced(latent_size=latent)
     router_fn = D.make_router_fn(rcfg, D.init(rcfg, jax.random.PRNGKey(99)))
     text = jax.random.normal(
         jax.random.PRNGKey(5), (BATCH, cfg.text_len, cfg.text_dim)
@@ -577,6 +578,124 @@ def collect_quantized(param_dtype: str) -> dict:
     }
 
 
+def collect_continuous(
+    n_requests: int = 144, max_resident: int = 48, arrival_every: int = 1,
+    arrivals_per_tick: int = 6, latent: int = 4,
+) -> dict:
+    """Continuous-batching section (``repro.serving``), vs lockstep flush.
+
+    Two arms over the same DiT ensemble and the same ``n_requests``
+    single-image text-conditioned requests:
+
+    * **continuous** — ``arrivals_per_tick`` requests arrive every
+      ``arrival_every`` scheduler ticks into a
+      :class:`repro.serving.ContinuousScheduler` rolling batch of
+      ``max_resident``; mixed-timestep residents share one fused-step
+      launch per tick, so arrivals overlap instead of queueing behind
+      full ``num_steps`` runs.  Latency percentiles come from the
+      scheduler's own ``LatencyRecorder`` (what ``ServingEngine.stats``
+      reports in production).
+    * **lockstep flush baseline** — the pre-existing serving path: each
+      request is a dedicated ``submit`` + ``flush()`` pair, i.e. a full
+      ``num_steps`` batch-1 scan per request, one after another.
+
+    Regime choice: this harness runs on a single CPU core, where the
+    expert forward itself scales nearly linearly in batch — the only
+    real batching economy is the grouped executor's per-expert gemms,
+    whose dispatch/sort/padding overhead amortizes at LARGE resident
+    batches and SMALL latents.  Measured per-row-step cost at
+    ``latent=4``: lockstep B=1 ≈ 2.1 ms vs rolling B=16 ≈ 1.28 ms,
+    B=48 ≈ 0.87 ms — the headroom the gate certifies.
+    ``arrivals_per_tick=6`` matches the offered load to the service
+    rate (``max_resident/num_steps`` = 6 requests per tick), keeping
+    the rolling batch full; at 1/tick the steady-state residency is
+    only ``num_steps`` rows and capacity padding burns the advantage.
+    At the other sections' ``LATENT=16``, batch-1 already saturates the
+    core and no scheduler can beat sequential lockstep on wall-clock —
+    that regime measures kernels, not scheduling.
+
+    Both arms pay one warm-up request first (compile excluded; the
+    scheduler's recorder is reset after warm-up).  Acceptance gate:
+    continuous img/s ≥ 1.2× the lockstep baseline.
+    """
+    from repro.serving import ContinuousScheduler
+
+    cfg, experts, params, router_fn, text, counter = _build(latent)
+    sampler = SamplerConfig(
+        num_steps=STEPS, cfg_scale=CFG_SCALE, strategy="topk", top_k=TOP_K,
+    )
+    text1 = text[:1]
+
+    def make_engine():
+        return ServingEngine(
+            experts=experts, expert_params=params, router_fn=router_fn,
+            latent_shape=(latent, latent, 4), sampler=sampler,
+        )
+
+    # --- continuous arm -------------------------------------------------
+    engine = make_engine()
+    sched = ContinuousScheduler(engine, max_resident=max_resident)
+    warm = sched.submit(jax.random.PRNGKey(0), text1)     # compile
+    sched.run_until_idle()
+    jax.block_until_ready(warm.result())
+    sched.metrics.reset()
+    t0 = time.time()
+    handles = []
+    r = 0
+    while r < n_requests:
+        for _ in range(min(arrivals_per_tick, n_requests - r)):
+            handles.append(sched.submit(jax.random.PRNGKey(100 + r), text1))
+            r += 1
+        for _ in range(arrival_every):
+            sched.step()
+    sched.run_until_idle()
+    outs = [h.result() for h in handles]
+    jax.block_until_ready(outs)
+    cont_s = time.time() - t0
+    snap = sched.metrics.snapshot()
+    cont_ips = n_requests / cont_s
+    cont_ok = all(bool(np.isfinite(np.asarray(o)).all()) for o in outs)
+
+    # --- lockstep flush baseline ----------------------------------------
+    twin = make_engine()
+    h = twin.submit(jax.random.PRNGKey(0), text1, 1)      # compile
+    twin.flush()
+    jax.block_until_ready(h.result())
+    e2e: list[float] = []
+    t0 = time.time()
+    for r in range(n_requests):
+        rt0 = time.time()
+        h = twin.submit(jax.random.PRNGKey(100 + r), text1, 1)
+        twin.flush()
+        out = h.result()
+        jax.block_until_ready(out)
+        e2e.append(time.time() - rt0)
+    base_s = time.time() - t0
+    base_ips = n_requests / base_s
+    base_ok = bool(np.isfinite(np.asarray(out)).all())
+
+    from repro.serving import percentile
+    return {
+        "n_requests": n_requests,
+        "max_resident": max_resident,
+        "arrival_every_ticks": arrival_every,
+        "arrivals_per_tick": arrivals_per_tick,
+        "latent": [latent, latent, 4],
+        "img_per_s": cont_ips,
+        "img_per_s_lockstep_flush": base_ips,
+        "speedup_vs_lockstep": cont_ips / max(base_ips, 1e-9),
+        "meets_1p2x_throughput": bool(cont_ips >= 1.2 * base_ips),
+        "latency_p50_s": snap["latency_p50_s"],
+        "latency_p95_s": snap["latency_p95_s"],
+        "queue_wait_p50_s": snap["queue_wait_p50_s"],
+        "queue_wait_p95_s": snap["queue_wait_p95_s"],
+        "latency_p50_s_lockstep": percentile(e2e, 50),
+        "latency_p95_s_lockstep": percentile(e2e, 95),
+        "scheduler_traces": int(engine.stats["traces"]),
+        "finite": bool(cont_ok and base_ok),
+    }
+
+
 _LAST: dict = {}
 
 
@@ -654,6 +773,12 @@ def main() -> None:
                          "(core.param_store) against the dense baseline "
                          "and record it under the 'quantized' JSON "
                          "section (keyed by dtype)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="benchmark the repro.serving continuous-batching "
+                         "scheduler (staggered single-image requests, "
+                         "rolling mixed-timestep batch) against the "
+                         "lockstep submit+flush baseline and record it "
+                         "under the 'continuous' JSON section")
     ap.add_argument("--plan-refresh", type=int, default=8,
                     help="refresh interval R for the plan-reuse arm of "
                          "the step-fusion benchmark: the fused_step and "
@@ -699,6 +824,14 @@ def main() -> None:
         us = 1e6 / max(sec["img_per_s"], 1e-9)
         print(f"sampler_dispatch_{args.dispatch},{us:.1f},"
               f"fwd/step={sec['expert_forwards_per_step_executed']:.1f}")
+    if args.continuous:
+        sec = collect_continuous()
+        _LAST["continuous"] = sec
+        us = 1e6 / max(sec["img_per_s"], 1e-9)
+        print(f"sampler_continuous,{us:.1f},"
+              f"{sec['speedup_vs_lockstep']:.2f}x_vs_lockstep "
+              f"p50={sec['latency_p50_s']:.2f}s "
+              f"p95={sec['latency_p95_s']:.2f}s")
     if args.param_dtype:
         sec = collect_quantized(args.param_dtype)
         # sub-merge by dtype so an --param-dtype bf16 rerun doesn't drop

@@ -1,6 +1,6 @@
-"""Runtime sanitizer for ``ServingEngine`` (RT301–RT303).
+"""Runtime sanitizer for ``ServingEngine`` (RT301–RT304).
 
-The static rules catch hazards the AST can prove; three serving
+The static rules catch hazards the AST can prove; these serving
 invariants only manifest at runtime and get a cheap wrapper instead:
 
 RT301  **trace budget** — the engine promises retrace-free serving
@@ -18,6 +18,13 @@ RT303  **sharding mismatch** — store leaves must actually lie on the
        placements ``launch.sharding.expert_param_shardings`` derives
        from the store's declared logical axes; a silently-replicated
        leaf costs the whole memory saving of expert placement.
+RT304  **scheduler starvation** — the continuous scheduler
+       (``repro.serving``) promises FIFO admission with per-bucket
+       head-of-line blocking; a policy regression leaves the queue head
+       waiting unboundedly while throughput still looks healthy.
+       ``check_scheduler_liveness`` (or
+       ``EngineSanitizer.check_scheduler``) bounds the oldest queued
+       request's wait in scheduler ticks.
 
 Use as a drop-in wrapper in tests/benches/examples::
 
@@ -52,6 +59,10 @@ class NumericalHazard(SanitizerError):
 
 class ShardingMismatch(SanitizerError):
     rule = "RT303"
+
+
+class StarvationHazard(SanitizerError):
+    rule = "RT304"
 
 
 # --- rule metadata (for `python -m repro.analysis --explain RT30x`) ---------
@@ -111,8 +122,30 @@ class ShardingMismatchRule(Rule):
             "    store, mesh, logical_axes=store.logical_axes()))")
 
 
+class SchedulerLivenessRule(Rule):
+    id = "RT304"
+    slug = "scheduler-starvation"
+    title = "continuous scheduler starved a queued request"
+    hazard = (
+        "The rolling scheduler admits FIFO with per-bucket head-of-line "
+        "blocking; a policy regression (skipping the queue head, a "
+        "bucket that never frees rows, a request wider than any bucket "
+        "slipping past submit-time rejection) leaves requests QUEUED "
+        "forever while throughput metrics still look healthy.  "
+        "check_scheduler_liveness bounds the oldest queued request's "
+        "wait: with max_resident >= the widest queued request, the head "
+        "must admit within about num_steps ticks (one full drain of the "
+        "batch it is waiting on), so a wait past the bound is a "
+        "liveness bug, not load."
+    )
+    bad = "while True: sched.step()   # head waits unboundedly, unnoticed"
+    good = ("EngineSanitizer(engine, starvation_bound=2 * S)"
+            ".check_scheduler(sched)   # raises StarvationHazard")
+
+
 SANITIZER_RULES: list[type[Rule]] = [
     TraceBudgetRule, NumericalHazardRule, ShardingMismatchRule,
+    SchedulerLivenessRule,
 ]
 
 
@@ -213,6 +246,30 @@ def assert_store_sharding(engine) -> None:
         )
 
 
+# --- scheduler liveness ----------------------------------------------------
+
+
+def check_scheduler_liveness(scheduler, bound: int) -> None:
+    """RT304: fail if any queued request has waited > ``bound`` ticks.
+
+    ``scheduler`` is a ``repro.serving.ContinuousScheduler`` (duck-typed
+    on ``max_pending_wait_steps``).  Pick the bound from the workload:
+    the queue head admits as soon as its bucket frees ``batch_size``
+    rows, so with sane admission ``num_steps`` ticks (one full drain) is
+    the worst case and ``2 * num_steps`` a comfortable bound; any wait
+    beyond that means the FIFO policy regressed or a bucket leaks rows.
+    """
+    wait = scheduler.max_pending_wait_steps()
+    if wait > bound:
+        raise StarvationHazard(
+            f"RT304: a queued request has waited {wait} scheduler "
+            f"tick(s) > bound {bound} — queued={scheduler.queue_depth} "
+            f"resident={scheduler.num_resident}; the admission policy "
+            f"is starving the queue head (or a rolling bucket never "
+            f"frees rows)"
+        )
+
+
 # --- engine wrapper --------------------------------------------------------
 
 
@@ -236,13 +293,32 @@ class EngineSanitizer:
 
     def __init__(self, engine, *, trace_budget: int | None = None,
                  check_numerics: bool = True,
-                 check_sharding: bool = True) -> None:
+                 check_sharding: bool = True,
+                 starvation_bound: int | None = None) -> None:
         self.engine = engine
         self.trace_budget = trace_budget
         self.check_numerics = check_numerics
         self.check_sharding = check_sharding
+        #: RT304 wait bound for ``check_scheduler``; defaults (None) to
+        #: 2 * num_steps — one full drain of the batch the queue head
+        #: waits on, doubled for slack.
+        self.starvation_bound = starvation_bound
         self._traces_at_wrap = engine.stats["traces"]
         self.events: list[str] = []
+
+    # -- scheduler liveness (RT304) --
+
+    def check_scheduler(self, scheduler) -> None:
+        """Audit a ``ContinuousScheduler`` tick loop for starvation —
+        call per tick (cheap: one host-side max over the queue)."""
+        bound = self.starvation_bound
+        if bound is None:
+            bound = 2 * self.engine.sampler.num_steps
+        check_scheduler_liveness(scheduler, bound)
+        self.events.append(
+            f"check_scheduler: wait={scheduler.max_pending_wait_steps()}"
+            f"/{bound}"
+        )
 
     # -- checked operations --
 

@@ -59,7 +59,9 @@ from repro.core.dispatch import (
     make_executor,
     plan_from_slots,
     resolve_dispatch,
+    routed_slots,
     slot_coef,
+    slot_coef_rows,
     tile_plan,
     topk_slots,
 )
@@ -80,6 +82,7 @@ from repro.core.sampling import (
     params_are_stackable,
     sample_ddpm_ancestral,
     sample_ensemble,
+    sample_ensemble_step,
     sample_single_expert,
 )
 from repro.core.clustering import (

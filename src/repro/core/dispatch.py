@@ -176,6 +176,36 @@ def plan_from_slots(
     )
 
 
+def routed_slots(
+    weights: Array,
+    k: int,
+    *,
+    valid: Array | None = None,
+) -> tuple[Array, Array]:
+    """Top-``k`` slot selection with the elastic-membership guard.
+
+    The slot half of :func:`make_dispatch_plan`, exposed separately for
+    callers that carry raw ``(slot_idx, slot_w)`` row state across steps
+    (the continuous-batching scheduler refreshes slots per request on its
+    own R-phase and rebuilds the plan's group view with
+    :func:`plan_from_slots` each step).
+
+    ``valid`` (optional ``(K,)`` bool): any slot whose selected expert is
+    invalid — possible only when ``k`` exceeds the live count, since
+    masked fusion weights give dead slots zero probability — is remapped
+    to the first valid expert with weight exactly 0, keeping the slots
+    NaN-safe against whatever bytes an evicted capacity slot holds.
+    """
+    slot_idx, slot_w = topk_slots(weights, k)
+    if valid is not None:
+        valid = jnp.asarray(valid, dtype=bool)
+        fallback = jnp.argmax(valid).astype(jnp.int32)
+        ok = valid[slot_idx]                              # (B, k)
+        slot_idx = jnp.where(ok, slot_idx, fallback)
+        slot_w = jnp.where(ok, slot_w, jnp.zeros_like(slot_w))
+    return slot_idx, slot_w
+
+
 def make_dispatch_plan(
     weights: Array,
     k: int,
@@ -193,18 +223,13 @@ def make_dispatch_plan(
     any slot whose selected expert is invalid — possible only when ``k``
     exceeds the live count, since masked fusion weights give dead slots
     zero probability — is remapped to the first valid expert with weight
-    exactly 0.  The remap keeps the plan NaN-safe against whatever bytes
-    an evicted/empty capacity slot holds: a dead expert's params are
-    never gathered and never run a segment forward, and a zero-weight
-    fallback slot contributes exact ``0.0`` to the fused combine.
+    exactly 0 (see :func:`routed_slots`).  The remap keeps the plan
+    NaN-safe against whatever bytes an evicted/empty capacity slot
+    holds: a dead expert's params are never gathered and never run a
+    segment forward, and a zero-weight fallback slot contributes exact
+    ``0.0`` to the fused combine.
     """
-    slot_idx, slot_w = topk_slots(weights, k)
-    if valid is not None:
-        valid = jnp.asarray(valid, dtype=bool)
-        fallback = jnp.argmax(valid).astype(jnp.int32)
-        ok = valid[slot_idx]                              # (B, k)
-        slot_idx = jnp.where(ok, slot_idx, fallback)
-        slot_w = jnp.where(ok, slot_w, jnp.zeros_like(slot_w))
+    slot_idx, slot_w = routed_slots(weights, k, valid=valid)
     return plan_from_slots(slot_idx, slot_w, weights.shape[-1],
                            uniform=uniform)
 
@@ -323,6 +348,22 @@ def slot_coef(tab: Array, idx_all: Array) -> Array:
     the step-fused ``kernels.ops.fused_step``.
     """
     return jnp.moveaxis(tab[:, idx_all], 1, 2)
+
+
+def slot_coef_rows(tabs: Array, idx_all: Array) -> Array:
+    """Per-row variant of :func:`slot_coef` for mixed-timestep batches.
+
+    Each batch row carries its *own* ``(5, K)`` step table (``tabs`` is
+    ``(Bx, 5, K)`` — row ``r``'s slice of the per-run ``(S, 5, K)``
+    table at that row's current timestep), and the gather picks row
+    ``r``'s routed-slot columns from row ``r``'s table:
+    ``out[c, j, r] = tabs[r, c, idx_all[r, j]]``, returned ``(5, k,
+    Bx)``.  When every row holds the same table this is bitwise equal to
+    ``slot_coef(tab, idx_all)`` — the lockstep path is the uniform
+    special case.
+    """
+    g = jnp.take_along_axis(tabs, idx_all[:, None, :], axis=2)  # (Bx, 5, k)
+    return jnp.moveaxis(g, 0, 2)                                # (5, k, Bx)
 
 
 def _fused(

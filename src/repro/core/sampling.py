@@ -60,8 +60,11 @@ from repro.core.dispatch import (
     full_dispatch_plan,
     make_dispatch_plan,
     make_executor,
+    plan_from_slots,
     resolve_dispatch,
+    routed_slots,
     slot_coef,
+    slot_coef_rows,
 )
 from repro.kernels import ops
 from repro.core.fusion import (
@@ -298,6 +301,21 @@ def _stack_params(params: Sequence):
 
 
 @functools.lru_cache(maxsize=128)
+def _time_grid(num_steps: int) -> Array:
+    """Euler time grid ``linspace(1, 0, S+1)`` as a host-side constant.
+
+    Computed eagerly (compile-time) and cached so every jit program —
+    the lockstep scan and the stepwise continuous-batching entry —
+    embeds the *same bytes*.  ``jnp.linspace`` traced inside a program
+    can constant-fold to values 1 ulp away from its eager result
+    depending on the surrounding graph, which would silently break the
+    bitwise scan-vs-stepwise parity the rolling batch is built on.
+    """
+    with jax.ensure_compile_time_eval():
+        return jnp.linspace(1.0, 0.0, num_steps + 1)
+
+
+@functools.lru_cache(maxsize=128)
 def coeff_tables_cached(
     objectives: tuple[str, ...],
     schedule_names: tuple[str, ...],
@@ -406,7 +424,7 @@ def _sample_fused(
         else jax.random.normal(key, shape, dtype=jnp.float32)
     if latent_sharding is not None:
         x = jax.lax.with_sharding_constraint(x, latent_sharding)
-    ts = jnp.linspace(1.0, 0.0, config.num_steps + 1)
+    ts = _time_grid(config.num_steps)
     # Schedule-coefficient tables: computed ONCE per run key (cached
     # process-wide, so serving retraces reuse them), gathered per step.
     # Elastic engines instead pass ``coeff_tables`` as a traced argument:
@@ -705,6 +723,229 @@ def sample_ensemble(
         mode, init_noise, stacked_params, latent_sharding, plan_sharding,
         coeff_tables, cluster_map,
     )
+
+
+def sample_ensemble_step(
+    experts: Sequence[ExpertSpec],
+    params: Sequence | None,
+    router_fn: Callable[[Array, Array], Array] | None,
+    x: Array,
+    t_idx: Array,
+    slot_idx: Array,
+    slot_w: Array,
+    *,
+    cond: dict | None = None,
+    null_cond: dict | None = None,
+    config: SamplerConfig | None = None,
+    engine: str = "auto",
+    stacked_params=None,
+    latent_sharding=None,
+    plan_sharding=None,
+    coeff_tables=None,
+    cluster_map=None,
+) -> tuple[Array, Array, Array, Array]:
+    """One Euler step of a *mixed-timestep* batch (continuous batching).
+
+    The stepwise counterpart of :func:`sample_ensemble`'s fused scan: the
+    unit of work is one step of each resident row, where every row sits
+    at its **own** position ``t_idx[r]`` on the shared ``num_steps``-step
+    Euler grid.  The per-run ``(S, 5, K)`` coefficient tables are already
+    per-step lookups, so a mixed batch is a *gather* (``tables[t_idx]``,
+    per-row ``ts``/``dt``) feeding the same ``kernels.ops.fused_step``
+    launch — not a retrace and not a second kernel.  `repro.serving`
+    drives this in a rolling batch where requests join and leave at step
+    boundaries.
+
+    Row state (all ``(B, ...)``-leading, carried by the caller across
+    steps):
+
+    * ``x`` — current latents;
+    * ``t_idx`` — int32 step index per row: ``0 <= t_idx < num_steps``
+      is an active row, ``num_steps`` (or any out-of-range value) marks
+      a finished/empty row, which is frozen: its latent passes through
+      unchanged and its ``t_idx`` does not advance;
+    * ``slot_idx``/``slot_w`` — ``(B, k)`` carried routing slots
+      (``core.dispatch.routed_slots``), refreshed per row on the row's
+      own ``plan_refresh_every`` phase (``t_idx % R == 0``), so each
+      request carries its own R-phase exactly as the lockstep scan does.
+
+    Bitwise parity with the sequential scan rests on batch-row
+    independence: the router and expert forwards compute row ``r``'s
+    outputs from row ``r``'s inputs only (the same property `flush()`
+    coalescing already relies on), and the fused-step kernel is
+    elementwise per row with per-row ``dt``/coefficients.  A row
+    advancing from ``t_idx = i`` therefore sees exactly the values the
+    lockstep scan's step ``i`` would feed it, whatever its neighbors are
+    doing — proven bitwise in ``tests/test_continuous.py``.
+
+    Restrictions (fail loudly): routed engine, ``strategy`` in
+    ``('top1', 'topk')``, ``step_fused=True`` — threshold/uniform plans
+    collapse routing to a batch-global scalar gather, which has no
+    per-row meaning in a mixed batch.
+
+    Returns the advanced ``(x, t_idx, slot_idx, slot_w)``.
+    """
+    cond = cond or {}
+    config = config if config is not None else SamplerConfig()
+    if config.strategy not in ("top1", "topk"):
+        raise ValueError(
+            f"continuous batching requires per-sample routing (strategy "
+            f"in ('top1', 'topk')); strategy={config.strategy!r} plans "
+            f"are batch-uniform or dense and have no per-row meaning in "
+            f"a mixed-timestep batch"
+        )
+    if not config.step_fused:
+        raise ValueError(
+            "continuous batching runs on the step-fused hot path only "
+            "(step_fused=True): per-row dt is a fused-kernel operand"
+        )
+    mode = _resolve_engine(engine, experts, params, config)
+    if mode != "routed":
+        raise ValueError(
+            f"continuous batching requires the routed engine; this "
+            f"configuration resolved to {mode!r} (need a shared apply_fn "
+            f"with stackable params and >1 expert)"
+        )
+
+    K = len(experts)
+    B = x.shape[0]
+    conv = config.conversion
+    k_slots = 1 if config.strategy == "top1" else min(config.top_k, K)
+    if slot_idx.shape != (B, k_slots) or slot_w.shape != (B, k_slots):
+        raise ValueError(
+            f"slot state must be ({B}, {k_slots}); got "
+            f"slot_idx {slot_idx.shape}, slot_w {slot_w.shape}"
+        )
+    slot_idx = slot_idx.astype(jnp.int32)
+    slot_w = slot_w.astype(jnp.float32)
+    t_idx = t_idx.astype(jnp.int32)
+
+    use_cfg = null_cond is not None and config.cfg_scale != 1.0
+    batched = (
+        use_cfg and config.batched_cfg
+        and _cfg_batchable(cond, null_cond or {})
+    )
+
+    # Dispatch substrate — identical to _sample_fused's resolution.
+    stacked = as_store(stacked_params, dtype=config.param_dtype)
+    if stacked is None and params is None:
+        raise ValueError(
+            "params=None requires stacked_params (an ExpertParamStore or "
+            "raw stacked pytree)"
+        )
+    if stacked is None:
+        stacked = make_store(_stack_params(params),
+                             dtype=config.param_dtype)
+    # Bitwise-parity guard: expert params that are trace literals (toy
+    # closures, tests) must NOT constant-fold into the expert forward.
+    # The lockstep scan's loop body already treats them as opaque loop
+    # inputs, so folding here (a loop-free program) would reassociate
+    # constant adds — e.g. fma(x, a, b) + c vs fma(x, a, b + c) — and
+    # break rolling == lockstep at the ulp level.  Real checkpoints
+    # arrive as jit arguments and are unaffected.
+    stacked = jax.tree.map(jax.lax.optimization_barrier, stacked)
+    valid = getattr(stacked, "valid", None)
+    backend = resolve_dispatch(config.dispatch, mode, True, False)
+    executor = make_executor(
+        backend,
+        apply_fns=[e.apply_fn for e in experts],
+        params=params,
+        stacked_params=stacked,
+        conv=conv,
+    )
+
+    S = config.num_steps
+    ts = _time_grid(S)
+    if coeff_tables is not None:
+        tables = coeff_tables                             # (S, 5, K)
+    else:
+        tables = coeff_tables_cached(
+            tuple(e.objective for e in experts),
+            tuple(e.schedule for e in experts),
+            S, conv,
+        )
+    num_slots = tables.shape[-1]                          # capacity K
+
+    refresh_every = int(config.plan_refresh_every)
+    if refresh_every < 1:
+        raise ValueError(
+            f"plan_refresh_every must be >= 1, got {refresh_every}"
+        )
+
+    # Per-row grid state: finished/empty rows clip to a valid index (the
+    # gathered values are discarded by the `active` mask below).
+    i = jnp.clip(t_idx, 0, S - 1)                         # (B,)
+    active = (t_idx >= 0) & (t_idx < S)                   # (B,)
+    tb = ts[i]                                            # (B,)
+    dt = ts[i] - ts[i + 1]                                # (B,)
+    row_tab = tables[i]                                   # (B, 5, K)
+
+    # Per-request R-phase: a row refreshes its routing slots on ITS OWN
+    # refresh steps.  lax.cond skips the router forward entirely on
+    # ticks where no resident row is at a refresh phase.
+    refresh = active & (t_idx % refresh_every == 0)       # (B,)
+
+    def fresh_slots():
+        w = fusion_weights(
+            experts, router_fn, x, tb,
+            strategy=config.strategy, top_k=config.top_k,
+            threshold=config.threshold,
+            ddpm_low_noise_only=config.ddpm_low_noise_only,
+            valid=valid, cluster_map=cluster_map,
+        )                                                 # (B, K)
+        return routed_slots(w, k_slots, valid=valid)
+
+    new_idx, new_w = jax.lax.cond(
+        jnp.any(refresh), fresh_slots, lambda: (slot_idx, slot_w)
+    )
+    slot_idx = jnp.where(refresh[:, None], new_idx, slot_idx)
+    slot_w = jnp.where(refresh[:, None], new_w, slot_w)
+
+    plan = plan_from_slots(slot_idx, slot_w, num_slots)
+    if plan_sharding is not None:
+        plan = jax.tree.map(
+            lambda a: jax.lax.with_sharding_constraint(a, plan_sharding),
+            plan,
+        )
+
+    # CFG orchestration mirrors _sample_fused.fused_step_update; the
+    # `tab` executors receive is unused by `predictions` (only the
+    # unfused `velocity` reads it), so a representative (5, K) slice
+    # keeps the signature satisfied.
+    tab0 = tables[0]
+    if batched:
+        cond_g = _cfg_grouped_cond(cond, null_cond or {}, B)
+        preds, w_all, idx_all = executor.predictions(
+            plan, x, tb, cond_g, 2, tab0)
+        g, scale = 2, config.cfg_scale
+    elif use_cfg:
+        p_c, w1, i1 = executor.predictions(
+            plan, x, tb, _cfg_grouped_cond(cond, None, B), 1, tab0)
+        p_u, _, _ = executor.predictions(
+            plan, x, tb,
+            _cfg_grouped_cond(dict(null_cond or {}), None, B), 1, tab0)
+        preds = jnp.concatenate([p_c, p_u], axis=1)
+        w_all = jnp.concatenate([w1, w1], axis=0)
+        idx_all = jnp.concatenate([i1, i1], axis=0)
+        g, scale = 2, config.cfg_scale
+    else:
+        preds, w_all, idx_all = executor.predictions(
+            plan, x, tb, _cfg_grouped_cond(cond, None, B), 1, tab0)
+        g, scale = 1, 1.0
+    # Per-row coefficient slices, tiled branch-major like the weights.
+    tab_all = row_tab if g == 1 \
+        else jnp.concatenate([row_tab, row_tab], axis=0)  # (g·B, 5, K)
+    x_step = ops.fused_step(
+        preds, x, w_all, slot_coef_rows(tab_all, idx_all), dt,
+        g=g, cfg_scale=scale,
+        clamp=conv.clamp, alpha_min=conv.alpha_min,
+    )
+    mask = active.reshape((B,) + (1,) * (x.ndim - 1))
+    x = jnp.where(mask, x_step, x)
+    if latent_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, latent_sharding)
+    t_idx = t_idx + active.astype(jnp.int32)
+    return x, t_idx, slot_idx, slot_w
 
 
 def sample_single_expert(

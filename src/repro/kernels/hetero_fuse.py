@@ -163,7 +163,7 @@ def hetero_fuse_step(
     x_t: Array,       # (B, T) current latent
     weights: Array,   # (G, B, K) fusion weights per guidance branch
     coef: Array,      # (5, K, G, B) unified coefficient stack
-    dt: Array,        # (1,) Euler step size (traced per step)
+    dt: Array,        # (1,) shared or (B,) per-row Euler step size (traced)
     *,
     cfg_scale: float = 1.0,
     clamp: float = 20.0,
@@ -181,10 +181,24 @@ def hetero_fuse_step(
     latent is read once and the updated latent written once — instead of
     the three latent-sized HBM round-trips of the unfused
     ``fused_velocity → cfg_combine → x − u·dt`` op chain.
+
+    ``dt`` is either the classic batch-shared ``(1,)`` step size or a
+    per-row ``(B,)`` vector — the mixed-timestep rolling-batch case,
+    where each resident request sits at its own step of the schedule
+    grid.  Only the BlockSpec index map differs (grid step ``bi`` reads
+    row ``bi`` instead of row 0); the kernel body is identical, so the
+    per-row form is bitwise equal to the scalar form whenever the rows
+    agree.
     """
     k, g, b, t = preds.shape
     block_t = min(block_t, t)
     assert t % block_t == 0
+    assert dt.shape[0] in (1, b), dt.shape
+    dt_spec = (
+        pl.BlockSpec((1,), lambda bi, ti: (bi,))
+        if dt.shape[0] == b
+        else pl.BlockSpec((1,), lambda bi, ti: (0,))
+    )
     kernel = functools.partial(
         _fuse_step_kernel,
         cfg_scale=cfg_scale, clamp=clamp, alpha_min=alpha_min,
@@ -197,7 +211,7 @@ def hetero_fuse_step(
             pl.BlockSpec((1, block_t), lambda bi, ti: (bi, ti)),
             pl.BlockSpec((g, 1, k), lambda bi, ti: (0, bi, 0)),
             pl.BlockSpec((5, k, g, 1), lambda bi, ti: (0, 0, 0, bi)),
-            pl.BlockSpec((1,), lambda bi, ti: (0,)),
+            dt_spec,
         ],
         out_specs=pl.BlockSpec((1, block_t), lambda bi, ti: (bi, ti)),
         out_shape=jax.ShapeDtypeStruct((b, t), x_t.dtype),

@@ -150,7 +150,7 @@ def fused_step(
     x_t: Array,               # (B, *latent) current latent
     weights: Array,           # (G·B, K) fusion weights
     coef: Array,              # (5, K, G·B) unified coefficient stack
-    dt: Array,                # scalar Euler step size (traced)
+    dt: Array,                # scalar or (B,) per-row Euler step size (traced)
     *,
     g: int,
     cfg_scale: float = 1.0,
@@ -171,6 +171,11 @@ def fused_step(
     (``hetero_fuse_step``) on TPU, oracle elsewhere — the oracle
     delegates to ``ref_hetero_fuse_coeffs``, keeping the fused step
     bit-identical to the unfused op chain on the reference path.
+
+    ``dt`` is either the classic batch-shared scalar or a per-row
+    ``(B,)`` vector (mixed-timestep rolling batches); a per-row dt whose
+    entries equal the scalar is bitwise identical to the scalar form on
+    both dispatch paths.
     """
     k = preds.shape[0]
     b = x_t.shape[0]
@@ -182,7 +187,8 @@ def fused_step(
     xf = x_t.reshape(b, tsize)
     wf = weights.reshape(g, b, k)
     cf = coef.reshape(5, k, g, b)
-    dt = jnp.asarray(dt, jnp.float32).reshape((1,))
+    dt = jnp.asarray(dt, jnp.float32).reshape(-1)
+    assert dt.shape[0] in (1, b), dt.shape
     if use_pallas():
         t = tsize
         tp, block = _tile_pad(t)

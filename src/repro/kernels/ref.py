@@ -119,7 +119,7 @@ def ref_hetero_fuse_step(
     x_t: Array,          # (B, T)
     weights: Array,      # (G, B, K) fusion weights per guidance branch
     coef: Array,         # (5, K, G, B) unified coefficient stack
-    dt: Array,           # (1,) Euler step size
+    dt: Array,           # (1,) shared or (B,) per-row Euler step size
     *,
     cfg_scale: float = 1.0,
     clamp: float = 20.0,
@@ -134,6 +134,12 @@ def ref_hetero_fuse_step(
     single branch skips the combine), and the Euler update
     ``x ← x − u·dt``.  Delegating the fuse to the coeffs oracle keeps
     this numerically identical to the unfused three-op path.
+
+    ``dt`` may be the classic batch-shared ``(1,)`` scalar or a per-row
+    ``(B,)`` vector (mixed-timestep rolling batches, where each request
+    sits at its own step of the schedule grid); both forms broadcast
+    elementwise over the latent row, so a ``(B,)`` dt whose entries all
+    equal the scalar is bitwise identical to the scalar form.
     """
     k, g, b, t = preds.shape
     fused = ref_hetero_fuse_coeffs(
@@ -147,7 +153,7 @@ def ref_hetero_fuse_step(
         u = fused
     else:
         u = fused[b:] + cfg_scale * (fused[:b] - fused[b:])
-    return x_t - u * jnp.asarray(dt, jnp.float32).reshape(())
+    return x_t - u * jnp.asarray(dt, jnp.float32).reshape(-1, 1)
 
 
 def ref_hetero_fuse_coeffs(

@@ -195,6 +195,10 @@ class PendingRequest:
     error: BaseException | None = None
     requeues: int = 0
     _membership: tuple | None = None
+    #: global submission order (engine-wide monotonic counter) — the
+    #: deterministic FIFO key re-queues and the continuous scheduler
+    #: order by.  -1 until assigned by ``submit`` (or the scheduler).
+    seq: int = -1
 
     def result(self) -> jnp.ndarray:
         if self.state == "FAILED":
@@ -255,6 +259,7 @@ class ServingEngine:
     def __post_init__(self) -> None:
         self._compiled: dict = {}
         self._queue: list[PendingRequest] = []
+        self._seq = 0                      # global submission counter
         self._cond_cache: OrderedDict[tuple, jnp.ndarray] = OrderedDict()
         self.stats = {"traces": 0, "requests": 0,
                       "merged_batches": 0, "batched_requests": 0,
@@ -574,17 +579,23 @@ class ServingEngine:
         self.stats["quarantined_checkpoints"] += 1
         return e
 
-    def _note_degraded(self, store) -> None:
+    def _note_degraded(self, store, steps: int | None = None) -> None:
         """Count degraded-mode steps: serving with fewer live experts
         than the routing width wants (k slots renormalize over the
-        survivors — correct, but quality-degraded; §3.1)."""
+        survivors — correct, but quality-degraded; §3.1).
+
+        ``steps`` overrides the per-dispatch step count: a lockstep
+        dispatch runs ``num_steps`` Euler steps, a rolling-scheduler
+        tick runs exactly one."""
         if not self.elastic:
             return
         n_live = int(np.asarray(store.valid_mask()).sum())
         k_slots = 1 if self.sampler.strategy == "top1" \
             else min(self.sampler.top_k, store.num_experts)
         if n_live < k_slots:
-            self.stats["degraded_steps"] += self.sampler.num_steps
+            self.stats["degraded_steps"] += (
+                self.sampler.num_steps if steps is None else steps
+            )
 
     def membership_line(self) -> str:
         """One-line membership/fault summary (the serve CLI prints it, and
@@ -921,6 +932,14 @@ class ServingEngine:
 
     # -- cross-request batching queue ---------------------------------------
 
+    def _next_seq(self) -> int:
+        """Allocate the next global submission-order stamp (shared by
+        ``submit`` and the continuous scheduler, so the two admission
+        paths order against each other deterministically)."""
+        seq = self._seq
+        self._seq += 1
+        return seq
+
     def submit(
         self, key, text_emb: jnp.ndarray | None = None,
         batch_size: int | None = None,
@@ -940,7 +959,8 @@ class ServingEngine:
             )
         req = PendingRequest(key=key, text_emb=self._cached_cond(text_emb),
                              batch_size=batch_size,
-                             _membership=self._membership())
+                             _membership=self._membership(),
+                             seq=self._next_seq())
         self._queue.append(req)
         self.stats["requests"] += 1
         return req
@@ -995,6 +1015,12 @@ class ServingEngine:
                     else:
                         self.stats["request_requeues"] += 1
                         self._queue.append(r)
+        # Re-queues above appended in GROUP iteration order; restore the
+        # global submission order so a partially-failed flush retries
+        # requests deterministically FIFO (interleaved groups would
+        # otherwise leapfrog earlier failed requests — regression-tested
+        # in tests/test_continuous.py).
+        self._queue.sort(key=lambda r: r.seq)
         if self.elastic:
             # DRAINING slots held for their in-flight snapshots are done
             # (dispatched or failed/re-queued with the snapshot intact).
@@ -1097,6 +1123,20 @@ def main() -> None:
     ap.add_argument("--coalesce", action="store_true",
                     help="drive requests through submit()/flush() instead "
                          "of per-request generate()")
+    ap.add_argument("--continuous", action="store_true",
+                    help="drive requests through the rolling "
+                         "mixed-timestep scheduler (repro.serving): "
+                         "requests join/leave the always-full batch at "
+                         "step boundaries instead of lockstep flushing")
+    ap.add_argument("--max-resident", type=int, default=8,
+                    help="rolling-batch capacity per shape bucket "
+                         "(continuous mode)")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="scheduler queue-depth bound before submit() "
+                         "raises QueueBackpressure (continuous mode)")
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="continuous mode: submit one request every N "
+                         "scheduler ticks (staggered open-loop arrivals)")
     ap.add_argument("--capacity", type=int, default=None,
                     help="expert-slot capacity (>= checkpoint count): pads "
                          "the store with masked EMPTY slots and enables "
@@ -1135,6 +1175,34 @@ def main() -> None:
           f"mesh={dict(engine.mesh.shape) if engine.mesh else None}")
     if engine.elastic:
         print(engine.membership_line())
+    if args.continuous:
+        from repro.serving import ContinuousScheduler
+
+        sched = ContinuousScheduler(
+            engine, max_resident=args.max_resident,
+            max_queue_depth=args.max_queue,
+        )
+        t0 = time.time()
+        handles = []
+        for r in range(args.requests):
+            key = jax.random.PRNGKey(r)
+            text = np.asarray(jax.random.normal(
+                key, (args.batch, dit_cfg.text_len, dit_cfg.text_dim)
+            ))
+            handles.append(sched.submit(key, text))
+            for _ in range(max(args.arrival_every, 0)):
+                sched.step()
+        sched.run_until_idle()
+        outs = [jax.block_until_ready(h.result()) for h in handles]
+        dt = time.time() - t0
+        n = sum(o.shape[0] for o in outs)
+        print(f"continuous {len(handles)} requests in "
+              f"{sched.step_count} ticks: {n} imgs in {dt:.2f}s "
+              f"({n / dt:.1f} img/s) traces={engine.stats['traces']}")
+        print(sched.line())
+        if engine.elastic:
+            print(engine.membership_line())
+        return
     if args.coalesce:
         t0 = time.time()
         handles = []

@@ -329,6 +329,26 @@ def serve_batch_spec(mesh: Mesh, shape: tuple[int, ...]) -> P:
     )
 
 
+def rolling_state_shardings(
+    mesh: Mesh, shape: tuple[int, ...]
+) -> tuple[NamedSharding, NamedSharding]:
+    """Shardings for a rolling batch's ``(latent, row-state)`` buffers.
+
+    The continuous scheduler (``repro.serving``) carries four
+    ``(B_cap, ...)``-leading buffers across ticks: the latent ``x``
+    shards like any request batch (leading dim over "data",
+    :func:`serve_batch_spec`); the per-row scalar state — ``t_idx``,
+    ``slot_idx``, ``slot_w`` — replicates, exactly like the
+    ``DispatchPlan`` arrays it feeds: O(B·k) ints/floats that every
+    shard needs whole to build its per-step plan, so splitting them
+    would buy nothing and cost a collective inside the step.
+
+    Returns ``(latent_sharding, row_state_sharding)``.
+    """
+    lat = NamedSharding(mesh, serve_batch_spec(mesh, shape))
+    return lat, NamedSharding(mesh, P())
+
+
 def dit_batch_specs(mesh: Mesh, batch: dict) -> dict:
     dp = data_axes(mesh)
     dpa = dp if len(dp) > 1 else dp[0]

@@ -1,0 +1,24 @@
+"""Continuous batching over the serving engine (rolling mixed-timestep
+scheduler, admission control, shape bucketing, latency observability).
+
+``python -m repro.serving`` runs a deterministic self-check smoke
+(staggered rolling vs sequential ``generate``, asserted bitwise).
+"""
+
+from repro.serving.batch import RollingBatch
+from repro.serving.metrics import LatencyRecorder, RequestTiming, percentile
+from repro.serving.scheduler import (
+    AdmissionError,
+    ContinuousScheduler,
+    QueueBackpressure,
+)
+
+__all__ = [
+    "AdmissionError",
+    "ContinuousScheduler",
+    "LatencyRecorder",
+    "QueueBackpressure",
+    "RequestTiming",
+    "RollingBatch",
+    "percentile",
+]

@@ -1,0 +1,500 @@
+"""Continuous batching: rolling scheduler parity, admission, liveness.
+
+Covers the `repro.serving` subsystem end to end:
+  (a) bitwise parity — N staggered requests through the rolling
+      mixed-timestep scheduler resolve bit-identically to sequential
+      per-request ``generate()`` on a twin engine (step-fused, 8-expert
+      top-2 CFG), with genuinely mixed timesteps observed mid-flight;
+  (b) admission control — bounded residency, FIFO queueing with
+      head-of-line blocking, QueueBackpressure at queue-depth, outright
+      rejection of unschedulable requests, the QUEUED → RESIDENT → DONE
+      state machine;
+  (c) retrace budget — one trace per bucket shape across request churn
+      AND elastic membership changes (epoch-keyed buckets share the
+      compiled step), with in-flight requests pinned to their
+      admission-time snapshot bit-exactly;
+  (d) flush re-queue order regression — a partially-failed ``flush()``
+      re-queues in global submission order, not group order;
+  (e) RT304 scheduler liveness — ``check_scheduler_liveness`` /
+      ``EngineSanitizer.check_scheduler`` raise ``StarvationHazard`` on
+      a starved queue head and stay quiet on a healthy one;
+  (f) latency observability — percentile math, ``stats`` publication,
+      the scheduler summary line;
+  (g) kernel layer — per-row ``(B,)`` dt is bitwise identical to the
+      scalar dt on both the reference and Pallas-interpret paths;
+  (h) dispatch helpers — ``routed_slots`` and ``slot_coef_rows`` match
+      their lockstep counterparts bitwise.
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import (
+    EngineSanitizer,
+    StarvationHazard,
+    assert_no_retrace,
+    check_scheduler_liveness,
+)
+from repro.core import (
+    SamplerConfig,
+    make_dispatch_plan,
+    routed_slots,
+    slot_coef,
+    slot_coef_rows,
+)
+from repro.kernels import ops
+from repro.launch.serve import ServingEngine
+from repro.launch.sharded_parity import toy_ensemble
+from repro.serving import (
+    AdmissionError,
+    ContinuousScheduler,
+    QueueBackpressure,
+    percentile,
+)
+
+KEY = jax.random.PRNGKey(0)
+LATENT = (4, 4, 2)
+TEXT_TAIL = (5, 6)
+SAMPLER = SamplerConfig(num_steps=6, cfg_scale=3.0,
+                        strategy="topk", top_k=2)
+
+EXPERTS, PARAMS, ROUTER_FN, _ = toy_ensemble(8)
+
+
+def _engine(k=8, **kw):
+    return ServingEngine(
+        experts=EXPERTS[:k], expert_params=PARAMS[:k],
+        router_fn=ROUTER_FN, latent_shape=LATENT, sampler=SAMPLER, **kw,
+    )
+
+
+def _req_inputs(i, bs):
+    key = jax.random.PRNGKey(100 + i)
+    text = jax.random.normal(
+        jax.random.fold_in(key, 1), (bs,) + TEXT_TAIL, jnp.float32
+    )
+    return key, text
+
+
+def _fake_clock():
+    c = itertools.count()
+    return lambda: float(next(c))
+
+
+# --- (a) bitwise parity ------------------------------------------------------
+
+
+def test_rolling_staggered_bitwise_equals_generate():
+    """Staggered arrivals through the rolling batch == sequential
+    generate(), bitwise, with mixed timesteps genuinely observed."""
+    eng = _engine()
+    sched = ContinuousScheduler(eng, max_resident=4)
+    specs = [(0, 1), (1, 2), (2, 1), (4, 1), (5, 2), (8, 1)]
+    handles, inputs = [], []
+    mixed_seen = False
+    tick = 0
+    for arrive, bs in specs:
+        while tick < arrive:
+            sched.step()
+            tick += 1
+        key, text = _req_inputs(len(handles), bs)
+        handles.append(sched.submit(key, text))
+        inputs.append((key, text, bs))
+    while sched.queue_depth or sched.num_resident:
+        sched.step()
+        for bucket in sched._buckets.values():
+            t_host = bucket.t_idx_host()
+            live = {
+                int(t_host[i]) for i, r in enumerate(bucket.rows)
+                if r is not None and t_host[i] < bucket.num_steps
+            }
+            if len(live) >= 2:
+                mixed_seen = True
+    assert mixed_seen, "rolling batch never actually mixed timesteps"
+
+    twin = _engine()
+    for h, (key, text, bs) in zip(handles, inputs):
+        assert h.state == "DONE" and h.done
+        want = np.asarray(twin.generate(key, text, bs))
+        got = np.asarray(h.result())
+        assert got.shape == (bs,) + LATENT
+        assert np.array_equal(got, want), \
+            f"max |diff| = {np.abs(got - want).max():.3e}"
+
+
+@pytest.mark.parametrize("spt", [2, 4])
+def test_rolling_multi_step_ticks_bitwise(spt):
+    """steps_per_tick > 1 (one launch scans several fused steps) stays
+    bitwise equal to sequential generate() under staggered arrivals —
+    including spt=4 with num_steps=6, where requests finish mid-tick
+    and must freeze at the sentinel inside the launch."""
+    eng = _engine()
+    sched = ContinuousScheduler(eng, max_resident=4, steps_per_tick=spt)
+    handles, inputs = [], []
+    for i, bs in enumerate([1, 2, 1, 1]):
+        key, text = _req_inputs(i, bs)
+        handles.append(sched.submit(key, text))
+        inputs.append((key, text, bs))
+        sched.step()
+    sched.run_until_idle()
+    assert eng.stats["traces"] == 1
+
+    twin = _engine()
+    for h, (key, text, bs) in zip(handles, inputs):
+        assert h.state == "DONE"
+        want = np.asarray(twin.generate(key, text, bs))
+        got = np.asarray(h.result())
+        assert np.array_equal(got, want), \
+            f"spt={spt}: max |diff| = {np.abs(got - want).max():.3e}"
+
+
+def test_rolling_no_text_and_plan_refresh_parity():
+    """Unconditioned requests + R>1 plan reuse: each row carries its own
+    refresh phase and still matches generate() bitwise."""
+    cfg = SamplerConfig(num_steps=8, cfg_scale=3.0, strategy="topk",
+                        top_k=2, plan_refresh_every=3)
+    eng = ServingEngine(experts=EXPERTS, expert_params=PARAMS,
+                        router_fn=ROUTER_FN, latent_shape=LATENT,
+                        sampler=cfg)
+    sched = ContinuousScheduler(eng, max_resident=3)
+    handles = []
+    for i in range(4):
+        handles.append(
+            sched.submit(jax.random.PRNGKey(40 + i), batch_size=1))
+        sched.step()
+    sched.run_until_idle()
+    twin = ServingEngine(experts=EXPERTS, expert_params=PARAMS,
+                         router_fn=ROUTER_FN, latent_shape=LATENT,
+                         sampler=cfg)
+    for i, h in enumerate(handles):
+        want = np.asarray(twin.generate(jax.random.PRNGKey(40 + i),
+                                        None, 1))
+        assert np.array_equal(np.asarray(h.result()), want)
+
+
+# --- (b) admission control ---------------------------------------------------
+
+
+def test_admission_residency_and_backpressure():
+    eng = _engine()
+    sched = ContinuousScheduler(eng, max_resident=2, max_queue_depth=3)
+
+    # unschedulable: wider than any bucket — rejected at submit.
+    with pytest.raises(AdmissionError, match="max_resident"):
+        sched.submit(jax.random.PRNGKey(1), batch_size=3)
+
+    handles = [sched.submit(jax.random.PRNGKey(10 + i), batch_size=1)
+               for i in range(2)]
+    assert all(h.state == "QUEUED" for h in handles)
+    sched.step()
+    assert all(h.state == "RESIDENT" for h in handles)
+    assert sched.num_resident == 2
+
+    # bucket full: further requests queue (depth-bounded)...
+    queued = [sched.submit(jax.random.PRNGKey(20 + i), batch_size=1)
+              for i in range(3)]
+    sched.step()
+    assert all(h.state == "QUEUED" for h in queued)
+    assert sched.queue_depth == 3
+
+    # ...and the queue itself backpressures past max_queue_depth.
+    with pytest.raises(QueueBackpressure):
+        sched.submit(jax.random.PRNGKey(30), batch_size=1)
+
+    sched.run_until_idle()
+    for h in handles + queued:
+        assert h.state == "DONE"
+        assert np.isfinite(np.asarray(h.result())).all()
+    assert sched.queue_depth == 0 and sched.num_resident == 0
+
+
+def test_admission_is_fifo_by_submission():
+    """With a 1-row bucket every request runs alone; completion order
+    must follow submission (seq) order."""
+    eng = _engine()
+    sched = ContinuousScheduler(eng, max_resident=1)
+    order = []
+    handles = [sched.submit(jax.random.PRNGKey(50 + i), batch_size=1)
+               for i in range(3)]
+    seen = set()
+    while sched.queue_depth or sched.num_resident:
+        sched.step()
+        for h in handles:
+            if h.done and h.seq not in seen:
+                seen.add(h.seq)
+                order.append(h.seq)
+    assert order == sorted(order)
+
+
+# --- (c) retrace budget + elastic snapshots ----------------------------------
+
+
+def test_rolling_one_trace_per_bucket_across_churn():
+    eng = _engine()
+    sched = ContinuousScheduler(eng, max_resident=4)
+    with assert_no_retrace(eng, budget=1):     # first contact compiles once
+        handles = []
+        for i in range(5):                     # churn: joins and leaves
+            key, text = _req_inputs(60 + i, 1)
+            handles.append(sched.submit(key, text))
+            sched.step()
+            sched.step()
+        sched.run_until_idle()
+    assert all(h.done for h in handles)
+    # a second bucket shape (no text) compiles exactly once more.
+    with assert_no_retrace(eng, budget=1):
+        sched.submit(jax.random.PRNGKey(70), batch_size=1)
+        sched.run_until_idle()
+
+
+def test_rolling_elastic_epoch_snapshot_bitwise():
+    """Mid-flight eviction: the resident request finishes against its
+    admission-time membership; a post-eviction request routes over the
+    survivors — both bitwise vs twin engines, with zero extra traces
+    for the new epoch's bucket."""
+    k1, t1 = _req_inputs(80, 1)
+    k2, t2 = _req_inputs(81, 1)
+
+    eng = ServingEngine(experts=EXPERTS[:6], expert_params=PARAMS[:6],
+                        router_fn=ROUTER_FN, latent_shape=LATENT,
+                        sampler=SAMPLER, capacity=8)
+    sched = ContinuousScheduler(eng, max_resident=2)
+    h1 = sched.submit(k1, t1)
+    sched.step()
+    sched.step()
+    assert h1.state == "RESIDENT"
+    eng.evict_expert(0)                         # epoch bump mid-flight
+    h2 = sched.submit(k2, t2)
+    with assert_no_retrace(eng, budget=0):      # new epoch, same trace
+        sched.run_until_idle()
+    assert h1.state == "DONE" and h2.state == "DONE"
+
+    twin_old = ServingEngine(
+        experts=EXPERTS[:6], expert_params=PARAMS[:6],
+        router_fn=ROUTER_FN, latent_shape=LATENT, sampler=SAMPLER,
+        capacity=8)
+    assert np.array_equal(np.asarray(h1.result()),
+                          np.asarray(twin_old.generate(k1, t1, 1)))
+    twin_new = ServingEngine(
+        experts=EXPERTS[:6], expert_params=PARAMS[:6],
+        router_fn=ROUTER_FN, latent_shape=LATENT, sampler=SAMPLER,
+        capacity=8)
+    twin_new.evict_expert(0)
+    assert np.array_equal(np.asarray(h2.result()),
+                          np.asarray(twin_new.generate(k2, t2, 1)))
+
+
+def test_scheduler_failed_bucket_requeues_in_seq_order(monkeypatch):
+    eng = _engine()
+    sched = ContinuousScheduler(eng, max_resident=4)
+    handles = [sched.submit(*_req_inputs(90 + i, 1)) for i in range(3)]
+    boom = RuntimeError("poisoned step")
+    monkeypatch.setattr(
+        ContinuousScheduler, "_advance",
+        lambda self, bucket: (_ for _ in ()).throw(boom))
+    sched.step()                               # admit + fail the bucket
+    assert [r.seq for r in sched._queue] == sorted(h.seq for h in handles)
+    assert all(h.state == "QUEUED" and h.requeues == 1 for h in handles)
+    monkeypatch.undo()
+    sched.run_until_idle()
+    assert all(h.state == "DONE" for h in handles)
+
+
+def test_scheduler_requeue_budget_marks_failed(monkeypatch):
+    eng = _engine(max_request_requeues=0)
+    sched = ContinuousScheduler(eng, max_resident=2)
+    h = sched.submit(*_req_inputs(95, 1))
+    boom = RuntimeError("poisoned step")
+    monkeypatch.setattr(
+        ContinuousScheduler, "_advance",
+        lambda self, bucket: (_ for _ in ()).throw(boom))
+    sched.step()
+    assert h.state == "FAILED"
+    with pytest.raises(RuntimeError, match="poisoned step"):
+        h.result()
+    assert eng.stats["failed_requests"] == 1
+
+
+# --- (d) flush re-queue order regression -------------------------------------
+
+
+def test_flush_requeues_in_submission_order(monkeypatch):
+    """A partially-failed flush() must re-queue by global submission
+    order (seq), not by dispatch-group iteration order: A and C share a
+    text group, B sits between them in a second group — the re-queued
+    queue must read [A, B, C], not [A, C, B]."""
+    eng = _engine()
+    ka, ta = _req_inputs(0, 1)
+    kc, tc = _req_inputs(2, 1)
+    a = eng.submit(ka, ta)
+    b = eng.submit(jax.random.PRNGKey(201), None, batch_size=1)
+    c = eng.submit(kc, tc)
+    assert [a.seq, b.seq, c.seq] == sorted([a.seq, b.seq, c.seq])
+    monkeypatch.setattr(
+        ServingEngine, "_dispatch_group",
+        lambda self, *args: (_ for _ in ()).throw(RuntimeError("boom")))
+    assert eng.flush() == 0
+    assert [r.seq for r in eng._queue] == [a.seq, b.seq, c.seq]
+    assert [r for r in eng._queue] == [a, b, c]
+    monkeypatch.undo()
+    assert eng.flush() == 2                    # both groups dispatch
+    for h in (a, b, c):
+        assert h.state == "DONE"
+        assert np.isfinite(np.asarray(h.result())).all()
+
+
+# --- (e) RT304 scheduler liveness --------------------------------------------
+
+
+def test_rt304_starvation_detected_and_healthy_pass():
+    eng = _engine()
+    sched = ContinuousScheduler(eng, max_resident=2)
+    san = EngineSanitizer(eng, starvation_bound=3)
+
+    # healthy: nothing queued — liveness is quiet at any bound.
+    sched.submit(*_req_inputs(300, 1))
+    sched.step()
+    san.check_scheduler(sched)
+    check_scheduler_liveness(sched, 0)
+
+    # starve the head: fill the bucket, queue a third, tick past bound.
+    sched.submit(*_req_inputs(301, 1))
+    starved = sched.submit(*_req_inputs(302, 1))
+    for _ in range(4):
+        sched.step()
+    assert starved.state == "QUEUED"
+    assert sched.max_pending_wait_steps() >= 4
+    with pytest.raises(StarvationHazard, match="RT304"):
+        check_scheduler_liveness(sched, 3)
+    with pytest.raises(StarvationHazard, match="RT304"):
+        san.check_scheduler(sched)
+    # a generous bound (the default 2*num_steps) still passes — the
+    # queue drains normally.
+    EngineSanitizer(eng).check_scheduler(sched)
+    sched.run_until_idle()
+    assert starved.state == "DONE"
+
+
+def test_rt304_registered_for_explain():
+    from repro.analysis.rules import find_rule, rule_classes
+
+    assert any(r.id == "RT304" for r in rule_classes())
+    assert find_rule("scheduler-starvation").id == "RT304"
+
+
+# --- (f) latency observability -----------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    vals = [float(v) for v in range(1, 101)]
+    assert percentile(vals, 50) == 50.0
+    assert percentile(vals, 95) == 95.0
+    assert percentile(vals, 99) == 99.0
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([7.0], 99) == 7.0
+    assert percentile([], 50) == 0.0
+    assert percentile([3.0, 1.0, 2.0], 50) == 2.0   # order-insensitive
+
+
+def test_stats_publish_latency_percentiles():
+    eng = _engine()
+    sched = ContinuousScheduler(eng, max_resident=2, clock=_fake_clock())
+    for i in range(4):
+        sched.submit(*_req_inputs(400 + i, 1))
+        sched.step()
+    sched.run_until_idle()
+    s = eng.stats
+    for key in ("latency_p50_s", "latency_p95_s", "latency_p99_s",
+                "queue_wait_p50_s", "queue_wait_p95_s",
+                "latency_p50_steps", "queue_wait_p50_steps",
+                "throughput_img_s", "completed_requests",
+                "scheduler_steps"):
+        assert key in s, key
+    assert s["completed_requests"] == 4.0
+    assert s["latency_p50_s"] <= s["latency_p95_s"] <= s["latency_p99_s"]
+    assert s["queue_wait_p50_steps"] <= s["queue_wait_p95_steps"]
+    # e2e includes queue wait, and every request ran num_steps ticks.
+    assert s["latency_p50_steps"] >= SAMPLER.num_steps
+    assert s["throughput_img_s"] > 0.0
+    line = sched.line()
+    assert "p50" in line and "p95" in line and "img/s" in line
+
+
+# --- (g) kernel layer: per-row dt --------------------------------------------
+
+
+def _step_operands(seed=5, K=3, g=2, B=4):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    preds = jax.random.normal(ks[0], (K, g * B) + LATENT)
+    x = jax.random.normal(ks[1], (B,) + LATENT)
+    w = jax.nn.softmax(jax.random.normal(ks[2], (g * B, K)), axis=-1)
+    coef = jax.random.normal(ks[3], (5, K, g * B)) * 0.5 + 1.0
+    return preds, x, w, coef
+
+
+@pytest.mark.parametrize("force_pallas", ["0", "1"])
+def test_fused_step_per_row_dt_bitwise(monkeypatch, force_pallas):
+    """(B,) dt with equal entries == scalar dt, bitwise, on the
+    reference path and the Pallas-interpret path."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", force_pallas)
+    preds, x, w, coef = _step_operands()
+    kw = dict(g=2, cfg_scale=3.0)
+    a = ops.fused_step(preds, x, w, coef, 0.125, **kw)
+    b = ops.fused_step(preds, x, w, coef,
+                       jnp.full((x.shape[0],), 0.125), **kw)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("force_pallas", ["0", "1"])
+def test_fused_step_mixed_dt_rows_match_scalar_runs(monkeypatch,
+                                                    force_pallas):
+    """Row r of a mixed-dt launch == row r of a scalar-dt launch with
+    that row's dt: the per-row dt path is exactly row-sliced."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", force_pallas)
+    preds, x, w, coef = _step_operands(seed=6)
+    B = x.shape[0]
+    dts = jnp.array([0.1, 0.25, 0.05, 0.4])
+    kw = dict(g=2, cfg_scale=3.0)
+    mixed = np.asarray(ops.fused_step(preds, x, w, coef, dts, **kw))
+    for r in range(B):
+        ref = np.asarray(
+            ops.fused_step(preds, x, w, coef, float(dts[r]), **kw))
+        assert np.array_equal(mixed[r], ref[r]), f"row {r}"
+
+
+# --- (h) dispatch helpers ----------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_routed_slots_matches_plan(k):
+    w = jax.nn.softmax(jax.random.normal(KEY, (5, 8)), axis=-1)
+    valid = jnp.array([True, True, False, True, True, True, False, True])
+    for v in (None, valid):
+        ww = w * valid[None] if v is not None else w
+        plan = make_dispatch_plan(ww, k, valid=v)
+        idx, sw = routed_slots(ww, k, valid=v)
+        assert np.array_equal(np.asarray(idx), np.asarray(plan.slot_idx))
+        assert np.array_equal(np.asarray(sw), np.asarray(plan.slot_w))
+
+
+def test_slot_coef_rows_uniform_matches_slot_coef():
+    tab = jax.random.normal(KEY, (5, 8))
+    idx_all = jax.random.randint(jax.random.PRNGKey(2), (6, 2), 0, 8)
+    uniform = slot_coef(tab, idx_all)
+    rows = slot_coef_rows(jnp.broadcast_to(tab, (6, 5, 8)), idx_all)
+    assert np.array_equal(np.asarray(uniform), np.asarray(rows))
+
+
+def test_slot_coef_rows_gathers_per_row_tables():
+    tabs = jax.random.normal(KEY, (3, 5, 4))
+    idx_all = jnp.array([[0, 1], [2, 3], [1, 0]])
+    out = np.asarray(slot_coef_rows(tabs, idx_all))
+    t = np.asarray(tabs)
+    for r in range(3):
+        for j in range(2):
+            assert np.array_equal(out[:, j, r], t[r, :, idx_all[r, j]])
