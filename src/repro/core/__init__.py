@@ -54,6 +54,7 @@ from repro.core.dispatch import (
     ExpertExecutor,
     GatheredExecutor,
     GroupedExecutor,
+    RaggedExecutor,
     full_dispatch_plan,
     make_dispatch_plan,
     make_executor,

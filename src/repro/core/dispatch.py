@@ -63,7 +63,7 @@ Array = jax.Array
 
 #: valid ``SamplerConfig.dispatch`` values (``auto`` resolves per engine
 #: mode and expert-set shape, see ``resolve_dispatch``).
-DISPATCH_BACKENDS = ("auto", "gathered", "grouped", "dense")
+DISPATCH_BACKENDS = ("auto", "gathered", "grouped", "ragged", "dense")
 
 
 # ---------------------------------------------------------------------------
@@ -567,6 +567,90 @@ class GroupedExecutor(_FusedVelocity):
 
 
 # ---------------------------------------------------------------------------
+# RaggedExecutor — one-kernel ragged grouped GEMM (pair-major)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RaggedExecutor(_FusedVelocity):
+    """Pair-major ragged execution: all experts' segments in one pass.
+
+    Walks the same expert-sorted segment layout as the grouped backend,
+    but at *pair* granularity instead of row granularity: the ``g``
+    guidance replicas of a (sample, slot) assignment share the latent,
+    the timestep and the routed expert (``tile_plan`` repeats slots per
+    branch), so the sorted ``N = g·B·k`` rows regroup into ``P = B·k``
+    pairs of ``g`` replicas each.  The executor hands the
+    ``ragged_apply_fn`` one representative latent per pair plus the
+    per-pair expert ids derived from ``segment_offsets`` (via the
+    plan's sort), and the apply runs every dense layer as ONE ragged
+    grouped GEMM over all resident experts
+    (``kernels.ops.ragged_expert_matmul`` →
+    ``kernels.ragged_gemm.ragged_gemm`` on TPU):
+
+    * no per-expert ``lax.switch`` branches, no power-of-two bucket
+      padding — work scales with actual assignments, and empty segments
+      / dead validity slots cost zero kernel tiles;
+    * weights resolve per row *tile* from the raw stacked leaves
+      (``store.ragged_view()``) — quantized stores contract on int8/fp8
+      operands with the dequant scale fused into the GEMM epilogue,
+      never materializing full-precision copies;
+    * the conditioning-independent prefix of the network computes once
+      per pair and broadcasts to the replicas (the grouped backend's
+      black-box ``apply_fn`` contract cannot see that structure).
+
+    Dense float32 stores are bitwise-identical to the grouped backend;
+    quantized stores match within the store's quantization error.
+    Membership (``valid``) stays traced data: hot add/evict reaches
+    this executor as new plan/store *values* under the same trace.
+    """
+
+    ragged_apply_fn: Callable[..., Array]
+    store: ExpertParamStore
+    conv: ConversionConfig
+    name: str = "ragged"
+
+    def predictions(self, plan, x, tb, cond_g, g, tab):
+        b = x.shape[0]
+        k = plan.slots_per_sample
+        x_all = _tile(x, g)
+        t_all = _tile(tb, g)
+        cond_all = _flatten_groups(cond_g, g)
+        p = tile_plan(plan, g)
+        n = p.num_assignments                              # g·B·k
+        npair = n // g                                     # B·k
+
+        # Pair view of the sorted assignments: sorted row r is replica
+        # ``gidx`` of pair ``pair`` (sample-major pair ids, slot minor).
+        sample_ids = p.sort_order // k                     # (N,) in [0, g·B)
+        gidx = sample_ids // b                             # guidance branch
+        base = sample_ids % b                              # sample in [0, B)
+        slot = p.sort_order % k
+        pair = base * k + slot                             # (N,) pair id
+        # pg_pos[q, j] = sorted position of pair q's replica j — exists
+        # and is unique because tile_plan repeats each slot per branch.
+        pg_pos = jnp.zeros((npair, g), jnp.int32).at[pair, gidx].set(
+            jnp.arange(n, dtype=jnp.int32)
+        )
+        rep = pg_pos[:, 0]                                 # representative
+        row_e = p.slot_idx.reshape(-1)[p.sort_order]       # (N,) expert/row
+        pe = row_e[rep]                                    # (P,) expert/pair
+
+        xs = x_all[sample_ids][rep]                        # (P, *latent)
+        ts = t_all[sample_ids][rep]                        # (P,)
+        cs = {key: v[sample_ids][pg_pos] for key, v in cond_all.items()}
+
+        view = self.store.ragged_view()
+        out = self.ragged_apply_fn(view, xs, ts, cs, pe, g)  # (P·g, ...)
+        out = out.reshape((npair, g) + out.shape[1:])
+        preds_sorted = out[pair, gidx]                     # (N, *latent)
+        preds_flat = preds_sorted[p.unsort_order]
+        preds = preds_flat.reshape((g * b, k) + preds_flat.shape[1:])
+        preds = jnp.moveaxis(preds, 1, 0)                  # (k, g·B, ...)
+        return preds, p.slot_w, p.slot_idx
+
+
+# ---------------------------------------------------------------------------
 # DenseExecutor — heterogeneous apply_fn fallback
 # ---------------------------------------------------------------------------
 
@@ -618,6 +702,7 @@ class DenseExecutor(_FusedVelocity):
 
 def resolve_dispatch(
     dispatch: str, mode: str, stackable: bool, uniform: bool = False,
+    ragged_ok: bool = False,
 ) -> str:
     """Map a ``SamplerConfig.dispatch`` request to a concrete backend.
 
@@ -630,17 +715,23 @@ def resolve_dispatch(
         an ``ExpertParamStore``).
       uniform: the plan is batch-uniform (§3.3 threshold router) — every
         sample routes to the same expert(s).
+      ragged_ok: the expert set publishes a shared ``ragged_apply_fn``
+        (``ExpertSpec``) so the one-kernel ragged GEMM backend can run.
 
-    ``auto`` prefers the **grouped** backend when the grouping
-    preconditions hold (params stack, per-sample routing): grouped is
-    1.22× faster than gathered on the tracked 8-expert top-2
-    configuration (``BENCH_sampler.json`` ``grouped`` section) and its
-    per-step forwards are bounded by *resident* experts rather than
-    ``B·k`` lanes.  Batch-uniform plans fall back to gathered, whose
-    scalar-gather path runs exactly one forward with none of the bucket
-    machinery, and non-stackable expert sets fall back to dense.  The
-    gathered backend stays reachable explicitly; explicit ``gathered``/
-    ``grouped`` raise a clear error when the expert set cannot stack,
+    ``auto`` prefers the **ragged** backend whenever the expert set can
+    run it (params stack, per-sample routing, a published
+    ``ragged_apply_fn``): one ragged grouped GEMM per dense layer
+    replaces the grouped backend's per-expert ``lax.switch`` branches
+    and power-of-two bucket padding, is bitwise-identical to grouped
+    for dense float32 stores, and measures ≥1.15× grouped img/s on the
+    tracked configuration (``BENCH_sampler.json`` ``ragged`` section).
+    Expert sets without a ragged apply keep the previous preference
+    order: grouped (1.22× faster than gathered on the same tracked
+    config) when params stack and routing is per-sample; batch-uniform
+    plans fall back to gathered, whose scalar-gather path runs exactly
+    one forward with none of the bucket machinery; non-stackable expert
+    sets fall back to dense.  Explicit ``gathered``/``grouped``/
+    ``ragged`` raise a clear error when their preconditions don't hold,
     instead of silently degrading.
     """
     if dispatch not in DISPATCH_BACKENDS:
@@ -649,7 +740,7 @@ def resolve_dispatch(
             f"expected one of {DISPATCH_BACKENDS}"
         )
     if mode == "dense":
-        if dispatch in ("gathered", "grouped"):
+        if dispatch in ("gathered", "grouped", "ragged"):
             raise ValueError(
                 f"dispatch={dispatch!r} requires routed execution "
                 f"(strategy in top1/topk/threshold with a routable expert "
@@ -659,12 +750,20 @@ def resolve_dispatch(
     if dispatch == "auto":
         if not stackable:
             return "dense"
-        return "gathered" if uniform else "grouped"
-    if dispatch in ("gathered", "grouped") and not stackable:
+        if uniform:
+            return "gathered"
+        return "ragged" if ragged_ok else "grouped"
+    if dispatch in ("gathered", "grouped", "ragged") and not stackable:
         raise ValueError(
             f"dispatch={dispatch!r} needs a shared apply_fn with stackable "
             f"params (see models.dit.stack_expert_params); heterogeneous "
             f"expert sets must use dispatch='dense'"
+        )
+    if dispatch == "ragged" and not ragged_ok:
+        raise ValueError(
+            "dispatch='ragged' needs a shared ragged_apply_fn on every "
+            "ExpertSpec (see models.dit.make_ragged_expert_apply) and "
+            "per-sample routing; this expert set does not publish one"
         )
     return dispatch
 
@@ -676,15 +775,17 @@ def make_executor(
     params: Sequence,
     stacked_params,
     conv: ConversionConfig,
+    ragged_apply_fn: Callable[..., Array] | None = None,
 ) -> ExpertExecutor:
     """Instantiate the executor for a resolved backend name.
 
     ``stacked_params`` may be a raw stacked pytree (the pre-store calling
     convention, wrapped into a bit-identical ``DenseStore``) or any
     ``ExpertParamStore`` (e.g. a ``QuantizedStore`` for int8/fp8 expert
-    weights).
+    weights).  ``ragged_apply_fn`` is the shared pair-major forward
+    required by the ``ragged`` backend (``ExpertSpec.ragged_apply_fn``).
     """
-    if backend in ("gathered", "grouped"):
+    if backend in ("gathered", "grouped", "ragged"):
         store = as_store(stacked_params)
         if store is None:
             raise ValueError(
@@ -693,6 +794,13 @@ def make_executor(
             )
         if backend == "gathered":
             return GatheredExecutor(apply_fns[0], store, conv)
+        if backend == "ragged":
+            if ragged_apply_fn is None:
+                raise ValueError(
+                    "dispatch='ragged' needs a shared ragged_apply_fn "
+                    "(see models.dit.make_ragged_expert_apply)"
+                )
+            return RaggedExecutor(ragged_apply_fn, store, conv)
         return GroupedExecutor(apply_fns[0], store, conv)
     if backend == "dense":
         if params is None:

@@ -40,6 +40,11 @@ class ExpertSpec:
     schedule: str                       # 'cosine' | 'linear'
     apply_fn: Callable[..., Array]      # (params, x_t, t, **cond) -> pred
     cluster_id: int = -1
+    #: optional pair-major ragged forward (``models.dit.
+    #: make_ragged_expert_apply`` signature) — publishing one makes the
+    #: expert set eligible for the ``dispatch='ragged'`` one-kernel
+    #: grouped-GEMM backend; ``None`` keeps the executor choice as before.
+    ragged_apply_fn: Callable[..., Array] | None = None
 
     def get_schedule(self) -> Schedule:
         return get_schedule(self.schedule)

@@ -91,6 +91,45 @@ def _tree_nbytes(tree: Any) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
+@dataclasses.dataclass(frozen=True)
+class QuantLeaf:
+    """One quantized stacked leaf plus its per-expert scales, un-expanded.
+
+    The ragged backend's raw-leaf currency: ``q`` is the ``(K, ...)``
+    int8/fp8 storage array and ``scale`` its ``(K,)`` float32 symmetric
+    scales — exactly what ``kernels.ops.ragged_expert_matmul`` feeds the
+    fused-dequant Pallas kernel, so quantized weights reach the MXU
+    without ever materializing a full-precision copy.  Deliberately NOT
+    a registered pytree: views are built inside a trace and consumed in
+    place; tree transforms over a view must treat ``QuantLeaf`` as
+    atomic (slice ``q``, keep ``scale``) rather than descending into it.
+    """
+
+    q: Any
+    scale: Any
+    compute_dtype: str = "float32"
+
+
+def dequant_leaf(leaf, dtype=None):
+    """Expand a view leaf to compute precision (float32 multiply).
+
+    Raw array leaves (dense stores) pass through untouched.
+    ``QuantLeaf``s expand with the exact ``hetero_fuse_dequant`` oracle
+    arithmetic — ``q.astype(f32) · scale`` broadcast over trailing dims,
+    then a cast — so a dequantized view leaf is bitwise identical to the
+    same leaf resolved through ``QuantizedStore.expert``/``gather``.
+    Only for leaves that are cheap to expand (embeddings, biases,
+    modulation tables); matmul weights should stay quantized through
+    ``kernels.ops.ragged_expert_matmul`` instead.
+    """
+    if not isinstance(leaf, QuantLeaf):
+        return leaf
+    out = leaf.q.astype(jnp.float32) * leaf.scale.astype(jnp.float32).reshape(
+        leaf.scale.shape + (1,) * (leaf.q.ndim - 1)
+    )
+    return out.astype(jnp.dtype(dtype or leaf.compute_dtype))
+
+
 class ExpertParamStore:
     """Base for stacked-expert parameter stores.
 
@@ -131,6 +170,20 @@ class ExpertParamStore:
         Off-hot-path only (tests, checkpoint export): on the routed path
         executors must go through ``gather``/``expert`` so quantized
         stores never expand the whole stack to full precision.
+        """
+        raise NotImplementedError
+
+    def ragged_view(self):
+        """Raw stacked leaves for the ragged one-kernel GEMM backend.
+
+        Returns a pytree matching the param structure whose leaves are
+        either plain ``(K, ...)`` arrays (dense storage) or
+        :class:`QuantLeaf` bundles of the un-expanded int8/fp8 bytes and
+        their ``(K,)`` scales.  Nothing dequantizes here — the ragged
+        executor hands weight leaves to
+        ``kernels.ops.ragged_expert_matmul``, which fuses the scale
+        multiply into the GEMM epilogue; that is the "expose raw
+        quantized leaves + scales without materialization" seam.
         """
         raise NotImplementedError
 
@@ -253,6 +306,9 @@ class DenseStore(ExpertParamStore):
         if dtype is None:
             return self.stacked
         return jax.tree.map(lambda s: s.astype(dtype), self.stacked)
+
+    def ragged_view(self):
+        return self.stacked
 
     def logical_axes(self) -> "DenseStore":
         return DenseStore(
@@ -397,6 +453,12 @@ class QuantizedStore(ExpertParamStore):
         if dtype is not None:
             out = jax.tree.map(lambda x: x.astype(dtype), out)
         return out
+
+    def ragged_view(self):
+        return jax.tree.map(
+            lambda q, s: QuantLeaf(q, s, self.compute_dtype),
+            self.qvals, self.scales,
+        )
 
     def logical_axes(self) -> "QuantizedStore":
         return QuantizedStore(

@@ -409,8 +409,18 @@ def _sample_fused(
     # Pluggable expert-dispatch backend (core.dispatch): the executor owns
     # HOW routed forwards run; the plan built per step owns WHICH experts
     # run; CFG orchestration below is shared across all backends.
+    # Ragged eligibility: every expert must publish the SAME pair-major
+    # ragged forward (ExpertSpec.ragged_apply_fn) — the one-kernel backend
+    # gathers weights per (sample, slot) pair, so a single shared forward
+    # is a structural requirement, mirroring the homogeneous-apply_fn rule.
+    ragged_fn = getattr(experts[0], "ragged_apply_fn", None)
+    ragged_ok = (
+        mode == "routed" and not uniform and ragged_fn is not None
+        and all(getattr(e, "ragged_apply_fn", None) is ragged_fn
+                for e in experts)
+    )
     backend = resolve_dispatch(
-        config.dispatch, mode, stacked is not None, uniform,
+        config.dispatch, mode, stacked is not None, uniform, ragged_ok,
     )
     executor = make_executor(
         backend,
@@ -418,6 +428,7 @@ def _sample_fused(
         params=params,
         stacked_params=stacked,
         conv=conv,
+        ragged_apply_fn=ragged_fn if ragged_ok else None,
     )
 
     x = init_noise if init_noise is not None \
@@ -845,13 +856,18 @@ def sample_ensemble_step(
     # arrive as jit arguments and are unaffected.
     stacked = jax.tree.map(jax.lax.optimization_barrier, stacked)
     valid = getattr(stacked, "valid", None)
-    backend = resolve_dispatch(config.dispatch, mode, True, False)
+    ragged_fn = getattr(experts[0], "ragged_apply_fn", None)
+    ragged_ok = ragged_fn is not None and all(
+        getattr(e, "ragged_apply_fn", None) is ragged_fn for e in experts
+    )
+    backend = resolve_dispatch(config.dispatch, mode, True, False, ragged_ok)
     executor = make_executor(
         backend,
         apply_fns=[e.apply_fn for e in experts],
         params=params,
         stacked_params=stacked,
         conv=conv,
+        ragged_apply_fn=ragged_fn if ragged_ok else None,
     )
 
     S = config.num_steps

@@ -24,6 +24,7 @@ from repro.kernels.hetero_fuse import hetero_fuse as _hetero_fuse
 from repro.kernels.hetero_fuse import hetero_fuse_coeffs as _hetero_fuse_coeffs
 from repro.kernels.hetero_fuse import hetero_fuse_dequant as _hetero_fuse_dequant
 from repro.kernels.hetero_fuse import hetero_fuse_step as _hetero_fuse_step
+from repro.kernels.ragged_gemm import ragged_gemm as _ragged_gemm
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 Array = jax.Array
@@ -239,6 +240,124 @@ def dequant_params(
     else:
         out = _ref.ref_hetero_fuse_dequant(qf, scale, out_dtype=out_dtype)
     return out.reshape((rows,) + trailing)
+
+
+#: max rows per ragged-GEMM tile — whole per-group row blocks halve down
+#: to at most this many rows so tiles stay VMEM-friendly.
+_RAGGED_BLOCK_M = 256
+
+
+def ragged_block_m(m: int) -> int | None:
+    """Row-tile size for a ragged GEMM whose row groups are ``m`` wide.
+
+    Every tile must be single-expert, so the block must divide the
+    per-group row count exactly; groups narrower than the 8-row TPU
+    sublane (or with an odd factor that cannot halve under the cap)
+    return ``None`` — the wrapper then takes the dense-math fallback.
+    """
+    if m <= 0 or m % 8:
+        return None
+    bm = m
+    while bm > _RAGGED_BLOCK_M:
+        if bm % 2:
+            return None
+        bm //= 2
+    return bm
+
+
+def ragged_expert_matmul(
+    x: Array,                 # (P, ..., D) per-group activations
+    w: Array,                 # (K, D, F) stacked expert weights (or quant)
+    expert_ids: Array,        # (P,) int32 expert per row group
+    *,
+    bias: Array | None = None,       # (K, F) stacked bias, optional
+    w_scale: Array | None = None,    # (K,) per-expert scales (quant only)
+) -> Array:
+    """Grouped expert dense: ``y[p] = x[p] @ w[expert_ids[p]] (+ bias)``.
+
+    The executor-facing ragged GEMM seam (``dispatch='ragged'``): ``x``
+    carries ``P`` expert-sorted row groups (one per routed sample×slot
+    pair, each ``m = prod(middle dims)`` rows wide), and every group
+    contracts against its own expert's stacked leaf — all experts in
+    one op, empty segments costing nothing.
+
+    On the Pallas path the groups flatten to ``(P·m, D)`` tile-aligned
+    rows for :func:`repro.kernels.ragged_gemm.ragged_gemm` (output lanes
+    pad via the shared ``_tile_pad`` policy and slice back); quantized
+    weights (int8 / fp8, with ``w_scale``) keep their storage dtype all
+    the way to the MXU — activations quantize per row symmetrically to
+    the same storage format and the kernel fuses the
+    ``x_scale·w_scale`` dequant epilogue.  Off-TPU (and for row groups
+    too narrow to tile) the same contraction runs as dense jnp math:
+    small groups take one all-experts GEMM plus a column select, wide
+    groups a per-group gathered einsum; quantized leaves dequantize
+    with the exact ``hetero_fuse_dequant`` float32 multiply first, so
+    the fallback is bitwise-consistent with the grouped backend's
+    store-dequant path.  Output is float32 ``(P, ..., F)``.
+    """
+    p = x.shape[0]
+    d = x.shape[-1]
+    mids = x.shape[1:-1]
+    m = 1
+    for s in mids:
+        m *= s
+    kx, dw, f = w.shape
+    is_int8 = w.dtype == jnp.int8
+    is_fp8 = w.dtype == jnp.float8_e4m3fn
+    quantized = is_int8 or is_fp8
+    if quantized and w_scale is None:
+        raise ValueError("quantized ragged_expert_matmul needs w_scale")
+    expert_ids = expert_ids.astype(jnp.int32)
+
+    bm = ragged_block_m(m)
+    if use_pallas() and bm is not None:
+        xf = x.reshape(p * m, d)
+        fp, bf = _tile_pad(f)
+        wp = jnp.pad(w, ((0, 0), (0, 0), (0, fp - f))) if fp != f else w
+        tile_e = jnp.repeat(expert_ids, m // bm)
+        if quantized:
+            x32 = xf.astype(jnp.float32)
+            qmax = 127.0 if is_int8 else 448.0
+            xs = jnp.maximum(jnp.max(jnp.abs(x32), axis=1), 1e-12) / qmax
+            xq = x32 / xs[:, None]
+            if is_int8:
+                xq = jnp.clip(jnp.round(xq), -127, 127).astype(jnp.int8)
+            else:
+                xq = xq.astype(jnp.float8_e4m3fn)
+            y = _ragged_gemm(xq, wp, tile_e, xs, w_scale,
+                             block_m=bm, block_f=bf, interpret=_interpret())
+        else:
+            y = _ragged_gemm(xf, wp, tile_e, None, None,
+                             block_m=bm, block_f=bf, interpret=_interpret())
+        y = y[:, :f].reshape((p,) + mids + (f,))
+    else:
+        if quantized:
+            wd = w.astype(jnp.float32) * w_scale.astype(jnp.float32).reshape(
+                (kx,) + (1,) * (w.ndim - 1)
+            )
+        else:
+            wd = w
+        mtot = p * m
+        if m <= 4:
+            # few rows per group: one GEMM against every expert's leaf,
+            # then select each group's expert column block.
+            y_all = x.reshape(mtot, d) @ jnp.moveaxis(wd, 0, 1).reshape(
+                d, kx * f
+            )
+            y_all = y_all.reshape(x.shape[:-1] + (kx, f))
+            e = expert_ids.reshape((p,) + (1,) * (x.ndim - 1))
+            y = jnp.take_along_axis(
+                y_all,
+                jnp.broadcast_to(e[..., None], y_all.shape[:-2] + (1, f)),
+                axis=-2,
+            )[..., 0, :]
+        else:
+            y = jnp.einsum("p...d,pdf->p...f", x, wd[expert_ids])
+    if bias is not None:
+        y = y + bias[expert_ids].reshape(
+            (p,) + (1,) * (x.ndim - 2) + (-1,)
+        )
+    return y
 
 
 def fused_convert_and_fuse(

@@ -1,0 +1,167 @@
+"""Ragged grouped expert GEMM with fused dequant (ROADMAP perf item 1).
+
+One Pallas launch runs the block-diagonal matmul of every resident
+expert's contiguous row segment against that expert's stacked weight
+leaf — the Megablocks-style grouped-GEMM economy, applied to the
+``DispatchPlan``'s expert-sorted row layout:
+
+* the grid iterates over ``(row-tile, out-tile)`` pairs of the *actual*
+  row count, so an expert with an empty segment (or a dead validity
+  slot, which routing never selects) contributes **zero grid steps** —
+  there is no per-expert branch, no power-of-two bucket padding;
+* each row tile is single-expert by construction (the ``ops`` wrapper
+  derives tiles from the plan's pair-major segments) and its expert id
+  is scalar-prefetched, so the tile's weight block DMA reads the stacked
+  leaf ``w[e]`` directly — no gather, no materialized per-row weights;
+* quantized stores skip materialization entirely: int8 operands contract
+  on the MXU with ``preferred_element_type=int32`` (fp8 with float32
+  accumulation) and the ``hetero_fuse_dequant`` scale multiply is folded
+  into the epilogue — ``acc · x_scale[row] · w_scale[e]`` — so
+  quantization buys compute, not just resident bytes.
+
+Tile geometry (``block_m`` rows × ``block_f`` output lanes, full-depth
+contraction) is decided by the ``ops.ragged_expert_matmul`` wrapper from
+the shared ``_tile_pad`` policy; this module never hard-codes lane
+arithmetic.  ``debug=True`` adds a per-grid-step tile counter output so
+tests can *measure* that empty segments cost zero tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _dense_body(e_ref, x_ref, w_ref, o_ref, *cnt):
+    del e_ref                       # expert id consumed by the index map
+    o_ref[...] = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if cnt:
+        cnt[0][...] = jnp.ones_like(cnt[0])
+
+
+def _quant_body(acc_dtype, e_ref, ws_ref, x_ref, xs_ref, w_ref, o_ref,
+                *cnt):
+    i = pl.program_id(0)
+    acc = jax.lax.dot_general(
+        x_ref[...], w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+    e = e_ref[i]
+    o_ref[...] = (
+        acc.astype(jnp.float32)
+        * xs_ref[...].astype(jnp.float32)
+    ) * ws_ref[e].astype(jnp.float32)
+    if cnt:
+        cnt[0][...] = jnp.ones_like(cnt[0])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_f", "interpret", "debug"),
+)
+def ragged_gemm(
+    x: Array,                 # (M, D) expert-sorted rows (f32/bf16 or q)
+    w: Array,                 # (K, D, F) stacked expert weights
+    tile_experts: Array,      # (M // block_m,) int32 expert id per row tile
+    x_scale: Array | None = None,   # (M,) per-row act scales (quant only)
+    w_scale: Array | None = None,   # (K,) per-expert weight scales
+    *,
+    block_m: int,
+    block_f: int,
+    interpret: bool = False,
+    debug: bool = False,
+):
+    """One-launch ragged grouped GEMM: ``y[r] = x[r] @ w[e(r)]``.
+
+    Rows arrive expert-sorted and tile-aligned (every ``block_m`` row
+    tile belongs to one expert — ``tile_experts[i]``); the grid is
+    ``(M/block_m, F/block_f)`` so work scales with actual rows, never
+    with the expert count.  Dense operands contract in float32.  int8
+    operands contract as int8×int8→int32 and fp8 as fp8×fp8→f32 (MXU
+    native), then the fused dequant epilogue applies
+    ``x_scale[row] · w_scale[expert]``.  Output is float32 ``(M, F)``.
+
+    ``debug=True`` returns ``(y, tiles)`` where ``tiles`` is an
+    ``(M/block_m, F/block_f)`` int32 map with a 1 per executed grid
+    step — the runtime proof that empty segments cost zero tiles.
+    """
+    m, d = x.shape
+    k_cap, dw, f = w.shape
+    if dw != d:
+        raise ValueError(f"contraction mismatch: x depth {d}, w depth {dw}")
+    if m % block_m or f % block_f:
+        raise ValueError(
+            f"rows/lanes must be tile-aligned: ({m}, {f}) vs "
+            f"block ({block_m}, {block_f})"
+        )
+    gm, gf = m // block_m, f // block_f
+    if tile_experts.shape != (gm,):
+        raise ValueError(
+            f"tile_experts must be ({gm},), got {tile_experts.shape}"
+        )
+    is_int8 = w.dtype == jnp.int8
+    is_fp8 = w.dtype == jnp.float8_e4m3fn
+    quantized = is_int8 or is_fp8
+
+    out_shape = [jax.ShapeDtypeStruct((m, f), jnp.float32)]
+    out_specs = [
+        pl.BlockSpec((block_m, block_f), lambda i, j, *pf: (i, j))
+    ]
+    if debug:
+        out_shape.append(jax.ShapeDtypeStruct((gm, gf), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1), lambda i, j, *pf: (i, j)))
+
+    tile_experts = tile_experts.astype(jnp.int32)
+    if quantized:
+        if x.dtype != w.dtype:
+            raise ValueError(
+                f"quantized ragged GEMM needs matching operand storage "
+                f"dtypes, got x={x.dtype} w={w.dtype}"
+            )
+        if x_scale is None or w_scale is None:
+            raise ValueError("quantized ragged GEMM needs x_scale + w_scale")
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(gm, gf),
+            in_specs=[
+                pl.BlockSpec((block_m, d), lambda i, j, e, s: (i, 0)),
+                pl.BlockSpec((block_m, 1), lambda i, j, e, s: (i, 0)),
+                pl.BlockSpec((1, d, block_f),
+                             lambda i, j, e, s: (e[i], 0, j)),
+            ],
+            out_specs=out_specs,
+        )
+        body = functools.partial(
+            _quant_body, jnp.int32 if is_int8 else jnp.float32
+        )
+        out = pl.pallas_call(
+            body, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(tile_experts, w_scale.astype(jnp.float32),
+          x, x_scale.astype(jnp.float32).reshape(m, 1), w)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(gm, gf),
+            in_specs=[
+                pl.BlockSpec((block_m, d), lambda i, j, e: (i, 0)),
+                pl.BlockSpec((1, d, block_f), lambda i, j, e: (e[i], 0, j)),
+            ],
+            out_specs=out_specs,
+        )
+        out = pl.pallas_call(
+            _dense_body, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(tile_experts, x, w)
+    return tuple(out) if debug else out[0]

@@ -156,6 +156,45 @@ def ref_hetero_fuse_step(
     return x_t - u * jnp.asarray(dt, jnp.float32).reshape(-1, 1)
 
 
+def ref_ragged_gemm(
+    x: Array,                 # (M, D) expert-sorted rows
+    w: Array,                 # (K, D, F) stacked expert weights
+    tile_experts: Array,      # (M // block_m,) int32 expert id per row tile
+    x_scale: Array | None = None,   # (M,) per-row activation scales
+    w_scale: Array | None = None,   # (K,) per-expert weight scales
+) -> Array:
+    """Oracle for the ragged grouped expert GEMM with fused dequant.
+
+    ``tile_experts`` carries one expert id per ``block_m`` row tile; the
+    oracle recovers the per-row expert map by even division (the kernel
+    wrapper guarantees tile-aligned single-expert row groups).  Dense
+    operands contract in float32.  Quantized operands mirror the
+    kernel's MXU contract exactly: int8×int8 accumulates in int32 (bit-
+    exact integers) and fp8×fp8 in float32, then the dequant epilogue
+    applies ``x_scale[row] · w_scale[expert]`` in float32 — the same
+    multiply order as the kernel, so the int8 path is bitwise
+    comparable.  Output is float32 ``(M, F)``.
+    """
+    m = x.shape[0]
+    gm = tile_experts.shape[0]
+    bm = m // gm
+    row_e = jnp.repeat(tile_experts.astype(jnp.int32), bm)
+    wr = w[row_e]                                          # (M, D, F)
+    if w.dtype == jnp.int8:
+        acc = jnp.einsum(
+            "md,mdf->mf", x.astype(jnp.int32), wr.astype(jnp.int32)
+        )
+    else:
+        acc = jnp.einsum(
+            "md,mdf->mf", x.astype(jnp.float32), wr.astype(jnp.float32),
+        )
+    out = acc.astype(jnp.float32)
+    if x_scale is not None and w_scale is not None:
+        out = (out * x_scale.astype(jnp.float32)[:, None]) \
+            * w_scale.astype(jnp.float32)[row_e][:, None]
+    return out
+
+
 def ref_hetero_fuse_coeffs(
     preds: Array,        # (K, B, T) native predictions of the routed slots
     x_t: Array,          # (B, T)

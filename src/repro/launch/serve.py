@@ -255,6 +255,14 @@ class ServingEngine:
     #: per-slot startup health (elastic): lets ``from_checkpoint_dir``
     #: mark quarantined-at-load slots; defaults to all-ACTIVE.
     initial_health: list | None = None
+    #: opt-in dispatch-padding observability: wraps the shared expert
+    #: forwards with a ``jax.debug.callback`` row counter so
+    #: ``stats['padded_model_rows']`` tracks rows the backend *executed*
+    #: (grouped: power-of-two bucket padding included; ragged: exactly
+    #: the routed rows) against the ``routed_model_rows`` the plans
+    #: asked for — read via :meth:`padding_stats`.  Off by default: the
+    #: callback forces host sync points on the hot path.
+    track_padding: bool = False
 
     def __post_init__(self) -> None:
         self._compiled: dict = {}
@@ -267,8 +275,12 @@ class ServingEngine:
                       "plan_refreshes": 0,
                       "experts_added": 0, "experts_evicted": 0,
                       "quarantined_checkpoints": 0, "degraded_steps": 0,
-                      "request_requeues": 0, "failed_requests": 0}
+                      "request_requeues": 0, "failed_requests": 0,
+                      "padded_model_rows": 0, "routed_model_rows": 0,
+                      "model_steps": 0}
         self.quarantine: list[dict] = []
+        if self.track_padding:
+            self._instrument_row_counting()
         self.elastic = self.capacity is not None
         self.homogeneous = len(self.experts) <= 1 or (
             all(e.apply_fn is self.experts[0].apply_fn for e in self.experts)
@@ -362,6 +374,96 @@ class ServingEngine:
                 store, self.mesh, logical_axes=store.logical_axes(),
             ),
         )
+
+    # -- dispatch-padding observability -------------------------------------
+
+    def _instrument_row_counting(self) -> None:
+        """Wrap the shared expert forwards with runtime row counters.
+
+        One wrapper per forward kind, shared by every spec — the
+        homogeneity check (and ragged eligibility) compares functions by
+        identity, so per-spec closures would silently force the dense
+        engine.  ``jax.debug.callback`` fires only in branches that
+        execute, which is the point: the grouped trace holds every
+        power-of-two bucket branch, and trace-time counting would tally
+        padding that never runs.
+        """
+        if not self.experts:
+            return
+        if any(e.apply_fn is not self.experts[0].apply_fn
+               for e in self.experts):
+            raise ValueError(
+                "track_padding=True needs a homogeneous ensemble (one "
+                "shared apply_fn): heterogeneous sets run the dense "
+                "executor, which has no dispatch padding to observe"
+            )
+
+        def _bump(rows):
+            self.stats["padded_model_rows"] += int(rows)
+
+        base_apply = self.experts[0].apply_fn
+
+        def counted_apply(params, x, t, **cond):
+            jax.debug.callback(_bump, x.shape[0])
+            return base_apply(params, x, t, **cond)
+
+        base_ragged = getattr(self.experts[0], "ragged_apply_fn", None)
+        counted_ragged = None
+        if base_ragged is not None:
+            def counted_ragged(view, x_p, t_p, cond, pe, g):
+                jax.debug.callback(_bump, x_p.shape[0] * g)
+                return base_ragged(view, x_p, t_p, cond, pe, g)
+
+        self.experts = [
+            dataclasses.replace(e, apply_fn=counted_apply,
+                                ragged_apply_fn=counted_ragged)
+            for e in self.experts
+        ]
+
+    def _count_routed_rows(self, batch_size: int, has_text: bool) -> None:
+        """Deterministic per-dispatch routed-row demand: ``B·k·g·S`` —
+        the rows the plans ask for, before any backend padding."""
+        if not self.track_padding:
+            return
+        k_cap = max(len(self.experts), 1)
+        k_slots = 1 if self.sampler.strategy in ("top1", "threshold") \
+            else min(self.sampler.top_k, k_cap)
+        g = 2 if (has_text and self.sampler.cfg_scale != 1.0) else 1
+        steps = self.sampler.num_steps
+        self.stats["routed_model_rows"] += batch_size * k_slots * g * steps
+        self.stats["model_steps"] += steps
+
+    def padding_stats(self) -> dict:
+        """Flush pending row-count callbacks and derive per-step padding
+        figures into ``stats`` (requires ``track_padding=True``).
+
+        ``padded_rows_per_step`` is the runtime-executed row count per
+        sampling step; ``padding_overhead`` is executed/routed − 1 (the
+        grouped backend's bucket padding tax; 0.0 under ``ragged``).
+        """
+        if not self.track_padding:
+            raise ValueError(
+                "padding stats need ServingEngine(track_padding=True) — "
+                "row counting instruments the expert forwards at "
+                "construction time"
+            )
+        jax.effects_barrier()                  # callbacks may be in flight
+        steps = max(self.stats["model_steps"], 1)
+        routed = max(self.stats["routed_model_rows"], 1)
+        self.stats["padded_rows_per_step"] = (
+            self.stats["padded_model_rows"] / steps
+        )
+        self.stats["routed_rows_per_step"] = (
+            self.stats["routed_model_rows"] / steps
+        )
+        self.stats["padding_overhead"] = (
+            self.stats["padded_model_rows"] / routed - 1.0
+        )
+        return {
+            k: self.stats[k]
+            for k in ("padded_rows_per_step", "routed_rows_per_step",
+                      "padding_overhead")
+        }
 
     # -- elastic membership -------------------------------------------------
 
@@ -635,6 +737,7 @@ class ServingEngine:
         cond_cache_size: int = 64,
         capacity: int | None = None,
         on_bad_checkpoint: str = "raise",
+        track_padding: bool = False,
     ) -> "ServingEngine":
         """Assemble an engine from a directory of expert checkpoints.
 
@@ -667,6 +770,13 @@ class ServingEngine:
                 f"got {on_bad_checkpoint!r}"
             )
         apply_fn = D.make_expert_apply(dit_cfg)
+        # One shared pair-major ragged forward per ensemble: publishing it
+        # on every ExpertSpec makes dispatch='auto' pick the one-kernel
+        # ragged grouped-GEMM backend (class-conditional configs keep the
+        # grouped backend — the ragged forward is text/uncond only).
+        ragged_fn = None
+        if not dit_cfg.num_classes:
+            ragged_fn = D.make_ragged_expert_apply(dit_cfg)
         paths = glob.glob(os.path.join(ckpt_dir, "expert*.npz"))
         if not paths:
             raise FileNotFoundError(f"no expert*.npz under {ckpt_dir}")
@@ -735,6 +845,7 @@ class ServingEngine:
                     schedule=meta["schedule"],
                     apply_fn=apply_fn,
                     cluster_id=cid,
+                    ragged_apply_fn=ragged_fn,
                 ))
                 params.append(p)
                 health.append("ACTIVE")
@@ -744,6 +855,7 @@ class ServingEngine:
                 experts.append(ExpertSpec(
                     name=f"<quarantined:{cid}>", objective="fm",
                     schedule="linear", apply_fn=apply_fn, cluster_id=cid,
+                    ragged_apply_fn=ragged_fn,
                 ))
                 params.append(jax.tree.map(jnp.zeros_like, loaded[0][2]))
                 health.append("EMPTY")
@@ -767,6 +879,7 @@ class ServingEngine:
             cond_cache_size=cond_cache_size,
             capacity=capacity,
             initial_health=health if capacity is not None else None,
+            track_padding=track_padding,
         )
         if quarantined:
             eng.quarantine.extend(quarantined)
@@ -928,6 +1041,7 @@ class ServingEngine:
         else:
             batch_text_emb = jnp.zeros((0,), jnp.float32)   # static filler
         self._count_plan_refreshes()
+        self._count_routed_rows(batch_size, has_text)
         return self._run_compiled(fn, key, noise, batch_text_emb)
 
     # -- cross-request batching queue ---------------------------------------
@@ -1061,6 +1175,7 @@ class ServingEngine:
             text = jnp.zeros((0,), jnp.float32)             # static filler
         fn = self._get_compiled(total + pad, has_text)
         self._count_plan_refreshes()
+        self._count_routed_rows(total + pad, has_text)
         out = self._run_compiled(fn, reqs[0].key, noise, text,
                                  membership=reqs[0]._membership)
         self.stats["merged_batches"] += 1
@@ -1090,10 +1205,13 @@ def main() -> None:
     ap.add_argument("--engine", default="auto",
                     choices=("auto", "routed", "dense", "reference"))
     ap.add_argument("--dispatch", default="auto",
-                    choices=("auto", "gathered", "grouped", "dense"),
+                    choices=("auto", "gathered", "grouped", "ragged",
+                             "dense"),
                     help="expert-dispatch executor backend "
-                         "(core.dispatch): per-sample gather+vmap vs "
-                         "sort-based grouped segment execution")
+                         "(core.dispatch): per-sample gather+vmap, "
+                         "sort-based grouped segment execution, or the "
+                         "one-kernel ragged grouped GEMM (pair-major, "
+                         "zero bucket padding)")
     ap.add_argument("--param-dtype", default="native",
                     choices=("native", "fp32", "bf16", "int8", "fp8"),
                     help="stacked expert-param storage "
@@ -1147,6 +1265,11 @@ def main() -> None:
                     help="'skip' quarantines corrupt/truncated/mismatched "
                          "expert checkpoints and serves the rest in "
                          "degraded mode instead of refusing to start")
+    ap.add_argument("--track-padding", action="store_true",
+                    help="instrument the expert forwards with a runtime "
+                         "row counter and print padded vs routed rows "
+                         "per step after serving (grouped bucket-padding "
+                         "tax; 0.0 under --dispatch ragged)")
     args = ap.parse_args()
 
     dit_cfg = dit_b2()
@@ -1168,6 +1291,7 @@ def main() -> None:
         cond_cache_size=args.cond_cache,
         capacity=args.capacity,
         on_bad_checkpoint=args.on_bad_checkpoint,
+        track_padding=args.track_padding,
     )
     print(f"loaded {len(engine.experts)} experts "
           f"({[e.objective for e in engine.experts]}) "
@@ -1247,6 +1371,11 @@ def main() -> None:
           f"cond_misses={engine.stats['cond_cache_misses']} "
           f"plan_refreshes={engine.stats['plan_refreshes']} "
           f"(R={args.plan_refresh}, {args.steps} steps/request)")
+    if args.track_padding:
+        ps = engine.padding_stats()
+        print(f"padding: padded_rows/step={ps['padded_rows_per_step']:.2f} "
+              f"routed_rows/step={ps['routed_rows_per_step']:.2f} "
+              f"overhead={ps['padding_overhead']:.3f}")
     if engine.elastic:
         print(engine.membership_line())
 

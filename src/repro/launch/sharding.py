@@ -306,11 +306,15 @@ def dispatch_plan_sharding(mesh: Mesh) -> NamedSharding:
     Routing metadata (per-sample slot indices/weights, the expert-sorted
     assignment order, per-expert segment offsets) replicates across the
     mesh: every shard needs the full plan to slice its resident experts'
-    groups (grouped backend) or gather its param slices (gathered
-    backend), and the arrays are O(B·k) ints — replication costs nothing
-    next to the latents.  Constraining them explicitly keeps GSPMD from
-    threading a sharded batch axis into the executor's per-expert
-    branches, which would force collectives inside every bucket branch.
+    groups (grouped backend), gather its param slices (gathered backend),
+    or build the pair-major per-row expert ids that drive the one-kernel
+    ragged GEMM's weight gathers (ragged backend — the per-tile expert
+    ids are derived from the plan's sort order, so the plan must be
+    whole on every shard), and the arrays are O(B·k) ints — replication
+    costs nothing next to the latents.  Constraining them explicitly
+    keeps GSPMD from threading a sharded batch axis into the executor's
+    per-expert branches, which would force collectives inside every
+    bucket branch (grouped) or every weight gather (ragged).
     """
     return NamedSharding(mesh, P())
 

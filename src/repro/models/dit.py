@@ -31,9 +31,12 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.config import DiTConfig
-from repro.core.param_store import DenseStore, ExpertParamStore
+from repro.core.param_store import (
+    DenseStore, ExpertParamStore, QuantLeaf, dequant_leaf,
+)
 from repro.core.param_store import EXPERT_AXIS as EXPERT_AXIS  # re-export
 from repro.core.schedules import to_ddpm_timestep
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -357,6 +360,207 @@ def gather_expert_params(stacked, expert_idx: Array):
     store = stacked if isinstance(stacked, ExpertParamStore) \
         else DenseStore.from_stacked(stacked)
     return store.gather(expert_idx)
+
+
+# ---------------------------------------------------------------------------
+# Ragged pair-major apply (dispatch='ragged')
+# ---------------------------------------------------------------------------
+
+
+def _ragged_dense(leaf: dict, x: Array, pe: Array) -> Array:
+    """Per-pair expert dense through the one-kernel ragged GEMM.
+
+    ``leaf`` is a ``{"w": ..., "b"?: ...}`` node of a store's
+    ``ragged_view()``: weights stay raw (``QuantLeaf`` keeps int8/fp8
+    bytes + scales all the way into the kernel's fused-dequant
+    epilogue); the bias — tiny — expands through ``dequant_leaf``.
+    """
+    w = leaf["w"]
+    if isinstance(w, QuantLeaf):
+        wq, ws = w.q, w.scale
+    else:
+        wq, ws = w, None
+    b = leaf.get("b")
+    bias = None if b is None else dequant_leaf(b)
+    return ops.ragged_expert_matmul(x, wq, pe, bias=bias, w_scale=ws)
+
+
+def _layer_view(tree, layer: int):
+    """Slice layer ``layer`` from stacked ``(K, L, ...)`` view leaves.
+
+    ``QuantLeaf``s slice their bytes and keep their per-expert scales
+    (quantization is per-expert per-leaf, so every layer of a leaf
+    shares the same ``(K,)`` scale vector).
+    """
+    def f(a):
+        if isinstance(a, QuantLeaf):
+            return QuantLeaf(a.q[:, layer], a.scale, a.compute_dtype)
+        return a[:, layer]
+
+    return jax.tree.map(f, tree)
+
+
+def make_ragged_expert_apply(cfg: DiTConfig):
+    """Pair-major ragged forward, matching ``ExpertSpec.ragged_apply_fn``.
+
+    The grouped executor treats ``apply_fn`` as a black box, so it must
+    run every guidance replica as an independent row; this adapter sees
+    the whole routed step at once and exploits the structure the plan
+    guarantees — the ``g`` CFG replicas of a (sample, slot) pair share
+    the latent, the timestep AND the routed expert:
+
+    * every dense layer runs as ONE ragged grouped GEMM over all
+      resident experts' row groups (``kernels.ops.ragged_expert_matmul``
+      walking the plan-derived per-pair expert ids) — no per-expert
+      ``lax.switch`` branches and no power-of-two bucket padding;
+    * the conditioning-independent prefix (patch/pos embed, timestep
+      path, AdaLN-Single modulations, the layer-0 self-attention, which
+      precedes the first cross-attention) computes once per *pair* and
+      broadcasts to the replicas — conditioning first touches the
+      stream at layer-0 cross-attention;
+    * quantized stores never materialize: weight leaves reach the GEMM
+      as raw int8/fp8 bytes + scales (``QuantLeaf``) and contract on
+      quantized operands with int32/f32 accumulation.
+
+    Signature::
+
+        ragged_apply_fn(view, x_p, t_p, cond_pg, expert_ids, g)
+
+    ``view`` = ``ExpertParamStore.ragged_view()``; ``x_p`` ``(P, H, W,
+    C)`` one latent per routed pair; ``t_p`` ``(P,)``; ``cond_pg``
+    leaves ``(P, g, ...)`` (``text_emb``/``drop_mask`` follow
+    ``dit.apply`` semantics exactly — absent text uses the learned null
+    embedding, ``drop_mask`` rows substitute it per replica); returns
+    ``(P·g, H, W, C)`` float32, pair-major (replicas of a pair
+    adjacent).  Bitwise-identical to the grouped executor for dense
+    float32 params.
+    """
+    if cfg.num_classes:
+        raise ValueError(
+            "ragged apply serves expert prediction only; the router head "
+            "(num_classes > 0) goes through the dense apply"
+        )
+
+    def ragged_apply(view, x_p, t_p, cond, pe, g):
+        p_pairs = x_p.shape[0]
+        d = cfg.d_model
+        hd = d // cfg.num_heads
+        ps = cfg.patch_size
+
+        def pd(leaf, x):
+            return _ragged_dense(leaf, x, pe)
+
+        xp = patchify(x_p.astype(cfg.activation_dtype), ps)
+        h_r = pd(view["patch_embed"], xp)                  # (P, T, d)
+        h_r = h_r + dequant_leaf(view["pos_embed"]["emb"])[pe].astype(
+            h_r.dtype
+        )
+
+        # Timestep path — replicas share t, so one row per pair.
+        idx = to_ddpm_timestep(t_p, cfg.num_timesteps)
+        feat = dequant_leaf(view["t_embed"]["table"])[pe, idx]
+        ht = jax.nn.silu(pd(view["t_embed"]["mlp1"], feat))
+        tau = pd(view["t_embed"]["mlp2"], ht)              # (P, d)
+
+        if cfg.adaln_single:
+            hm = jax.nn.silu(pd(view["adaln_single"]["mlp1"], tau))
+            c = pd(view["adaln_single"]["mlp2"], hm).reshape(
+                p_pairs, 1, 6, d
+            )
+            mods = jnp.broadcast_to(c, (p_pairs, cfg.num_layers, 6, d))
+            mods = mods + dequant_leaf(
+                view["adaln_single"]["block_embed"]
+            )[pe].astype(mods.dtype)
+            mods = jnp.moveaxis(mods, 1, 0)                # (L, P, 6, d)
+        else:
+            mods = jnp.stack([
+                pd(_layer_view(view["adaln_per_block"], l),
+                   jax.nn.silu(tau)).reshape(p_pairs, 6, d)
+                for l in range(cfg.num_layers)
+            ])                                             # (L, P, 6, d)
+
+        def self_attn(bp, h, mod):
+            # h: (P, T, d) prefix or (P, g, T, d) expanded; mod (P, 6, d)
+            nb = h.ndim - 2
+            g_msa, b_msa, a_msa = mod[:, 0], mod[:, 1], mod[:, 2]
+            ex = (slice(None),) + (None,) * (nb - 1)
+            hn = L.layernorm({}, h) * (1.0 + g_msa[ex + (None,)]) \
+                + b_msa[ex + (None,)]
+            t_tok = hn.shape[-2]
+            q = pd(bp["attn"]["wq"], hn).reshape(
+                -1, t_tok, cfg.num_heads, hd)
+            k = pd(bp["attn"]["wk"], hn).reshape(
+                -1, t_tok, cfg.num_heads, hd)
+            v = pd(bp["attn"]["wv"], hn).reshape(
+                -1, t_tok, cfg.num_heads, hd)
+            pos = jnp.arange(t_tok)
+            att = L.chunked_attention(
+                q, k, v, q_positions=pos, kv_positions=pos, causal=False,
+                chunk_size=cfg.attn_chunk,
+            )
+            att = pd(bp["attn"]["wo"], att.reshape(h.shape))
+            return h + a_msa[ex + (None,)] * att
+
+        # Prefix: layer-0 self-attention on the per-pair representative —
+        # exact because cross-attention (the first conditioning-dependent
+        # op) runs AFTER self-attention within a block (Eqs. 17→18).
+        h_r = self_attn(_layer_view(view["blocks"], 0), h_r, mods[0])
+        # Expand to the replicas: pure broadcast, no recompute.
+        h = jnp.broadcast_to(h_r[:, None], (p_pairs, g) + h_r.shape[1:])
+
+        if cfg.use_text:
+            nulle = dequant_leaf(view["null_text_embed"]["emb"])[pe]
+            text_emb = cond.get("text_emb")
+            if text_emb is None:
+                text_emb = jnp.broadcast_to(
+                    nulle[:, None], (p_pairs, g) + nulle.shape[1:]
+                )
+            else:
+                drop = cond.get("drop_mask")
+                if drop is not None:
+                    text_emb = jnp.where(
+                        drop[..., None, None], nulle[:, None], text_emb
+                    )
+            text = pd(view["text_proj"],
+                      text_emb.astype(cfg.activation_dtype))
+            t_txt = text.shape[-2]
+
+        for layer in range(cfg.num_layers):
+            bp = _layer_view(view["blocks"], layer)
+            mod = mods[layer]
+            g_mlp, b_mlp, a_mlp = mod[:, 3], mod[:, 4], mod[:, 5]
+            if layer > 0:
+                h = self_attn(bp, h, mod)                  # Eq. 17
+            if cfg.use_text:                               # Eq. 18
+                cp = _layer_view(view["cross_attn"], layer)
+                t_tok = h.shape[-2]
+                hn = L.layernorm({}, h)
+                q = pd(cp["wq"], hn).reshape(-1, t_tok, cfg.num_heads, hd)
+                k = pd(cp["wk"], text).reshape(
+                    -1, t_txt, cfg.num_heads, hd)
+                v = pd(cp["wv"], text).reshape(
+                    -1, t_txt, cfg.num_heads, hd)
+                att = L.chunked_attention(
+                    q, k, v, q_positions=jnp.arange(t_tok),
+                    kv_positions=jnp.arange(t_txt), causal=False,
+                    chunk_size=cfg.attn_chunk,
+                )
+                h = h + pd(cp["wo"], att.reshape(h.shape))
+            hn = L.layernorm({}, h) * (1.0 + g_mlp[:, None, None]) \
+                + b_mlp[:, None, None]                     # Eq. 19
+            hmid = jax.nn.gelu(pd(bp["mlp"]["w1"], hn))
+            h = h + a_mlp[:, None, None] * pd(bp["mlp"]["w2"], hmid)
+
+        mod = pd(view["final_layer"]["mod"], jax.nn.silu(tau))
+        shift, scale = jnp.split(mod, 2, axis=-1)
+        h = L.layernorm({}, h) * (1.0 + scale[:, None, None]) \
+            + shift[:, None, None]
+        out = pd(view["final_layer"]["out"], h)
+        out = out.reshape((p_pairs * g,) + out.shape[2:])
+        return unpatchify(out, ps, cfg.latent_size,
+                          cfg.latent_channels).astype(jnp.float32)
+
+    return ragged_apply
 
 
 def make_expert_apply(cfg: DiTConfig):

@@ -273,13 +273,17 @@ def test_resolve_dispatch_rules():
     # gathered stays reachable explicitly
     assert resolve_dispatch("gathered", "routed", True) == "gathered"
     assert resolve_dispatch("grouped", "routed", True) == "grouped"
-    with pytest.raises(ValueError, match="unknown dispatch"):
+    # ragged is a real backend now (tests/test_ragged_gemm.py) but needs a
+    # published ragged_apply_fn; without one it must fail loudly.
+    with pytest.raises(ValueError, match="ragged_apply_fn"):
         resolve_dispatch("ragged", "routed", True)
+    with pytest.raises(ValueError, match="unknown dispatch"):
+        resolve_dispatch("raggedy", "routed", True)
     with pytest.raises(ValueError, match="stackable"):
         resolve_dispatch("grouped", "routed", False)
     with pytest.raises(ValueError, match="routed execution"):
         resolve_dispatch("grouped", "dense", True)
-    with pytest.raises(ValueError, match="unknown executor"):
+    with pytest.raises(ValueError, match="ExpertParamStore"):
         make_executor("ragged", apply_fns=[None], params=[None],
                       stacked_params=None, conv=None)
     with pytest.raises(ValueError, match="ExpertParamStore"):
