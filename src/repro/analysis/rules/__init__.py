@@ -18,6 +18,7 @@ from repro.analysis.rules.control_flow import (
     UnthreadedPRNGKey,
 )
 from repro.analysis.rules.host_sync import HostSyncInTraced, ImplicitHostSync
+from repro.analysis.rules.retry import UnboundedRetryLoop
 
 #: AST rules, in reporting order.
 ALL_RULES: list[type[Rule]] = [
@@ -27,6 +28,7 @@ ALL_RULES: list[type[Rule]] = [
     UnhashableConfigField,  # JX104
     UnregisteredCarryDataclass,  # JX105
     UnthreadedPRNGKey,      # JX106
+    UnboundedRetryLoop,     # RT305
 ]
 
 

@@ -1,0 +1,137 @@
+"""Unbounded-retry rule (RT305).
+
+The serving stack's failure handling is built on *bounded* retries:
+failed dispatch groups re-queue at most ``max_request_requeues`` times,
+failed buckets re-admit after an exponential-backoff window, canary
+probes back off between attempts.  A retry loop WITHOUT a bound or a
+backoff turns one persistent fault into a livelock — the scheduler
+looks busy (throughput counters move) while the same poisoned work
+re-dispatches forever.  This rule makes that shape un-mergeable:
+
+* a constant-condition ``while`` (``while True:`` / ``while 1:``)
+  whose body calls into the dispatch/flush/step surface and never
+  references a bound-ish identifier (cap / budget / backoff / deadline
+  / attempt / retries / …);
+* a ``<handle>.requeues += 1`` bump inside a function that never
+  *compares* a requeue count against anything (the cap consult that
+  turns a re-queue into a terminal FAILED).
+
+Runs in the same CI gate as the other AST rules (RT301–RT304 are
+runtime sanitizers; RT305 is their static sibling and shares the RT3xx
+"runtime serving contract" range).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astlint import (
+    Finding,
+    ModuleContext,
+    Rule,
+    call_tail,
+    referenced_names,
+)
+
+#: call tails that dispatch serving work — retrying these needs a bound.
+_DISPATCH_TAILS = frozenset({
+    "flush", "dispatch", "_dispatch_group", "generate", "step",
+    "advance", "submit", "probe", "retry", "launch", "send",
+})
+
+#: identifier fragments that signal SOME bound/backoff is consulted.
+_BOUND_HINTS = (
+    "max", "cap", "budget", "bound", "backoff", "deadline", "attempt",
+    "retries", "requeue", "limit", "timeout", "expire",
+)
+
+
+def _is_constant_true(test: ast.AST) -> bool:
+    return isinstance(test, ast.Constant) and bool(test.value)
+
+
+def _names_hint_bound(names: set[str]) -> bool:
+    return any(h in n.lower() for n in names for h in _BOUND_HINTS)
+
+
+class UnboundedRetryLoop(Rule):
+    id = "RT305"
+    slug = "unbounded-retry"
+    title = "retry loop without a bound or backoff"
+    hazard = (
+        "Re-dispatching failed work without a cap or a backoff window "
+        "turns one persistent fault into a livelock: the loop burns "
+        "compute re-running the same poisoned dispatch while liveness "
+        "metrics look healthy.  Every retry path must either consult a "
+        "bound (max_request_requeues, an attempt cap, a deadline) or "
+        "wait out a growing backoff before re-admission — the serving "
+        "stack's _fail_bucket/flush re-queue machinery does both; new "
+        "code should route failures through it rather than hand-rolling "
+        "a while-True around the dispatch surface."
+    )
+    bad = ("while True:\n"
+           "    try:\n"
+           "        engine.flush()      # retries forever on poison\n"
+           "    except Exception:\n"
+           "        continue")
+    good = ("for attempt in range(max_attempts):   # bounded\n"
+            "    try:\n"
+            "        engine.flush()\n"
+            "        break\n"
+            "    except Exception:\n"
+            "        time.sleep(backoff * 2 ** attempt)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        yield from self._unbounded_whiles(ctx)
+        yield from self._uncapped_requeues(ctx)
+
+    def _unbounded_whiles(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.While) \
+                    or not _is_constant_true(node.test):
+                continue
+            tails = {
+                call_tail(n) for n in ast.walk(node)
+                if isinstance(n, ast.Call)
+            }
+            dispatching = tails & _DISPATCH_TAILS
+            if not dispatching:
+                continue
+            if _names_hint_bound(referenced_names(node)):
+                continue
+            yield self.finding(
+                ctx, node,
+                f"`while True` around "
+                f"{'/'.join(sorted(dispatching))}(...) with no bound or "
+                f"backoff in the loop — a persistent fault livelocks "
+                f"here; cap the attempts or consult a backoff window",
+            )
+
+    def _uncapped_requeues(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            bumps = [
+                n for n in ast.walk(fn)
+                if isinstance(n, ast.AugAssign)
+                and isinstance(n.target, ast.Attribute)
+                and n.target.attr == "requeues"
+            ]
+            if not bumps:
+                continue
+            compares_cap = any(
+                isinstance(n, ast.Compare)
+                and "requeues" in " ".join(referenced_names(n)).lower()
+                for n in ast.walk(fn)
+            )
+            if compares_cap:
+                continue
+            for bump in bumps:
+                yield self.finding(
+                    ctx, bump,
+                    f"`{ast.unparse(bump.target)} += ...` in "
+                    f"{fn.name}() without comparing the requeue count "
+                    f"against a cap — the request re-queues forever "
+                    f"instead of going terminal FAILED",
+                )

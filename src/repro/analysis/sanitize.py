@@ -289,7 +289,7 @@ class EngineSanitizer:
 
     _CHECKED = ("generate", "flush")
     _MEMBERSHIP = ("add_expert", "evict_expert", "retire_expert",
-                   "quarantine_expert")
+                   "quarantine_expert", "trip_expert", "restore_expert")
 
     def __init__(self, engine, *, trace_budget: int | None = None,
                  check_numerics: bool = True,

@@ -50,6 +50,8 @@ __all__ = [
     "scramble_checkpoint",
     "poison_checkpoint_nonfinite",
     "mismatch_checkpoint_shapes",
+    "poison_expert_runtime",
+    "heal_expert_runtime",
     "FlushFaultInjector",
     "main",
 ]
@@ -118,6 +120,47 @@ def mismatch_checkpoint_shapes(path: str) -> str:
         )
 
     return _rewrite_npz(path, mutate)
+
+
+# --- runtime store corruption (silent bit-rot on a resident expert) ---------
+
+
+def poison_expert_runtime(engine, slot: int):
+    """NaN-fill one resident expert's float leaves *in the live store*.
+
+    Models silent runtime corruption: the checkpoint passed every
+    load-time check, then device memory went bad.  Deliberately bypasses
+    ``add_expert`` validation and does NOT bump the membership epoch —
+    from the engine's point of view nothing happened, which is exactly
+    the fault class the circuit breaker must catch from non-finite
+    *outputs*.  Returns the clean host-side params pytree so the fault
+    can later be healed with :func:`heal_expert_runtime`.
+    """
+    import jax
+
+    store = engine.param_store
+    clean = jax.tree.map(np.array, store.expert(slot))
+
+    def nanify(p):
+        # host-side leaf rewrite (clean is already a host pytree)
+        p = np.asarray(p)  # lint: allow-host-sync
+        if np.issubdtype(p.dtype, np.floating):
+            return np.full_like(p, np.nan)
+        return p
+
+    poisoned = jax.tree.map(nanify, clean)
+    engine.param_store = engine._put_store(store.set_expert(slot, poisoned))
+    return clean
+
+
+def heal_expert_runtime(engine, slot: int, clean_params) -> None:
+    """Write clean params back into slot ``slot`` (inverse of
+    :func:`poison_expert_runtime`).  Leaves the validity mask and health
+    state untouched — if the breaker put the slot in PROBATION, the next
+    passing canary probe is what restores it to service."""
+    engine.param_store = engine._put_store(
+        engine.param_store.set_expert(slot, clean_params)
+    )
 
 
 # --- flush-failure injection ------------------------------------------------

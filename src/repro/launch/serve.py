@@ -122,6 +122,11 @@ from repro.launch.sharding import (
 )
 from repro.models import dit as D
 from repro.models.config import DiTConfig, dit_b2, router_b2
+from repro.serving.resilience import (
+    DeadlineExceeded,
+    RequestFailed,
+    RequestTimeout,
+)
 from repro.training import load_checkpoint
 
 #: ``expert7.npz`` / ``expert_07.npz`` → checkpoint index 7 (ordering
@@ -136,10 +141,14 @@ _EXPERT_IDX_RE = re.compile(r"expert[_-]?(\d+)")
 #: admitted under it, then transitions to ``EVICTED``;
 #: ``QUARANTINED`` — masked because its artifact/params failed integrity
 #: checks (recorded in ``ServingEngine.quarantine``);
+#: ``PROBATION`` — masked by the circuit breaker (``trip_expert``:
+#: rolling fault score crossed the trip threshold); canary probes on a
+#: backoff schedule move it back to ``ACTIVE`` via ``restore_expert``
+#: (see ``repro.serving.resilience``);
 #: ``EVICTED`` — masked by ``evict_expert``; the slot is reusable by
 #: ``add_expert``.
 EXPERT_HEALTH_STATES = ("EMPTY", "ACTIVE", "DRAINING", "QUARANTINED",
-                        "EVICTED")
+                        "PROBATION", "EVICTED")
 
 
 def _validate_expert_params(params, template, path: str) -> None:
@@ -178,12 +187,16 @@ def _validate_expert_params(params, template, path: str) -> None:
 class PendingRequest:
     """Handle returned by ``ServingEngine.submit``; resolved by ``flush``.
 
-    ``state`` walks QUEUED → DONE, or QUEUED → FAILED once the request's
-    dispatch group exhausted its automatic re-queues — ``result()`` then
-    re-raises the carried dispatch error instead of hanging the caller.
-    On an elastic engine the request also snapshots the membership it was
-    admitted under (store + coefficient tables + cluster map, all
-    immutable), so later evictions/hot-adds cannot change its output.
+    ``state`` walks QUEUED → DONE, or to one of two terminal failure
+    states: FAILED once the request's dispatch group exhausted its
+    automatic re-queues, or DEADLINE_EXCEEDED once its
+    ``deadline_s``/``max_steps`` lifetime bound expired — ``result()``
+    then raises the named error (``RequestFailed`` / ``DeadlineExceeded``,
+    both carrying the request id and requeue count) instead of hanging
+    the caller.  On an elastic engine the request also snapshots the
+    membership it was admitted under (store + coefficient tables +
+    cluster map, all immutable), so later evictions/hot-adds cannot
+    change its output.
     """
 
     key: jax.Array
@@ -199,12 +212,51 @@ class PendingRequest:
     #: deterministic FIFO key re-queues and the continuous scheduler
     #: order by.  -1 until assigned by ``submit`` (or the scheduler).
     seq: int = -1
+    #: lifetime bounds (``repro.serving.resilience``): wall-clock
+    #: seconds from submit, and scheduler ticks from submit.  None = no
+    #: bound.  ``flush()`` enforces ``deadline_s`` only (it has no tick
+    #: granularity); the resilient scheduler enforces both at tick
+    #: boundaries.
+    deadline_s: float | None = None
+    max_steps: int | None = None
+    submit_t: float | None = None
 
-    def result(self) -> jnp.ndarray:
+    def result(self, timeout: float | None = None) -> jnp.ndarray:
+        """Resolved latents, or the request's named terminal error.
+
+        ``timeout`` (seconds) bounds how long to wait for a concurrent
+        driver (another thread ticking the scheduler / flushing the
+        engine) to resolve this handle; expiry raises
+        :class:`~repro.serving.resilience.RequestTimeout` instead of
+        blocking forever on a lost request.  ``timeout=None`` keeps the
+        classic non-blocking behavior (raise immediately if unresolved);
+        ``timeout=0`` is an explicit instant poll.
+        """
+        if timeout is not None:
+            give_up = time.monotonic() + timeout
+            while not self.done and self.state not in (
+                "FAILED", "DEADLINE_EXCEEDED"
+            ):
+                if time.monotonic() >= give_up:
+                    raise RequestTimeout(
+                        f"request seq={self.seq} still {self.state} "
+                        f"after {timeout}s ({self.requeues} requeue(s))",
+                        seq=self.seq, requeues=self.requeues,
+                    )
+                time.sleep(min(0.005, max(timeout, 1e-4)))
+        if self.state == "DEADLINE_EXCEEDED":
+            if isinstance(self.error, DeadlineExceeded):
+                raise self.error
+            raise DeadlineExceeded(
+                f"request seq={self.seq} exceeded its deadline "
+                f"({self.requeues} requeue(s))",
+                seq=self.seq, requeues=self.requeues,
+            )
         if self.state == "FAILED":
-            raise RuntimeError(
-                f"request failed after {self.requeues} dispatch "
-                f"attempt(s): {self.error!r}"
+            raise RequestFailed(
+                f"request seq={self.seq} failed after {self.requeues} "
+                f"dispatch attempt(s): {self.error!r}",
+                seq=self.seq, requeues=self.requeues,
             ) from self.error
         if not self.done:
             raise RuntimeError(
@@ -277,7 +329,10 @@ class ServingEngine:
                       "quarantined_checkpoints": 0, "degraded_steps": 0,
                       "request_requeues": 0, "failed_requests": 0,
                       "padded_model_rows": 0, "routed_model_rows": 0,
-                      "model_steps": 0}
+                      "model_steps": 0,
+                      "deadline_exceeded": 0, "watchdog_trips": 0,
+                      "breaker_trips": 0, "breaker_probes": 0,
+                      "breaker_restores": 0, "journal_snapshots": 0}
         self.quarantine: list[dict] = []
         if self.track_padding:
             self._instrument_row_counting()
@@ -681,6 +736,46 @@ class ServingEngine:
         self.stats["quarantined_checkpoints"] += 1
         return e
 
+    def trip_expert(self, e: int, reason: str = "") -> int:
+        """Circuit-breaker trip: mask slot ``e`` as ``PROBATION``.
+
+        Exactly the ``quarantine_expert`` masking path (validity-bit
+        flip + epoch bump through ``_mask_slot`` — capacity-stable
+        shapes, never a retrace), but the slot stays owned by the
+        breaker: canary probes (``serving.resilience``) move it back to
+        ``ACTIVE`` via :meth:`restore_expert` on a finite pass."""
+        self._require_elastic("trip_expert")
+        self._mask_slot(e, "PROBATION")
+        self.quarantine.append(
+            {"path": self.experts[e].name,
+             "reason": reason or "breaker trip", "slot": e}
+        )
+        self.stats["breaker_trips"] += 1
+        return e
+
+    def restore_expert(self, e: int) -> int:
+        """Un-mask a ``PROBATION``/``QUARANTINED`` slot back to
+        ``ACTIVE`` (validity-bit flip + epoch bump — no retrace).  The
+        breaker calls this after a passing canary probe; operators can
+        call it directly after re-validating a quarantined slot."""
+        self._require_elastic("restore_expert")
+        if not (0 <= e < len(self.experts)):
+            raise IndexError(
+                f"expert slot {e} out of range [0, {len(self.experts)})"
+            )
+        if self.expert_health[e] not in ("PROBATION", "QUARANTINED"):
+            raise ValueError(
+                f"slot {e} is {self.expert_health[e]}; only PROBATION/"
+                f"QUARANTINED slots can be restored"
+            )
+        store = self.param_store.with_valid(
+            self.param_store.valid_mask().at[e].set(True)
+        )
+        self.param_store = self._put_store(store)
+        self.expert_health[e] = "ACTIVE"
+        self.membership_epoch += 1
+        return e
+
     def _note_degraded(self, store, steps: int | None = None) -> None:
         """Count degraded-mode steps: serving with fewer live experts
         than the routing width wants (k slots renormalize over the
@@ -704,13 +799,31 @@ class ServingEngine:
         the quarantine counters round-trip through it — tested)."""
         s = self.stats
         cap = self.capacity if self.elastic else len(self.experts)
+        probation = sum(h == "PROBATION" for h in self.expert_health)
         return (f"membership: live={self.num_live_experts}/{cap} "
                 f"added={s['experts_added']} "
                 f"evicted={s['experts_evicted']} "
                 f"quarantined={s['quarantined_checkpoints']} "
                 f"degraded_steps={s['degraded_steps']} "
                 f"requeues={s['request_requeues']} "
-                f"failed={s['failed_requests']}")
+                f"failed={s['failed_requests']} "
+                f"probation={probation} "
+                f"trips={s['breaker_trips']} "
+                f"probes={s['breaker_probes']} "
+                f"restores={s['breaker_restores']} "
+                f"deadline_exceeded={s['deadline_exceeded']}")
+
+    def restore(self, journal_dir: str, **kwargs):
+        """Crash recovery: rebuild a resilient scheduler from a request
+        journal written by a previous process and re-admit its in-flight
+        requests at their last snapshot (bitwise-identical continuation —
+        see ``repro.serving.resilience.ResilientScheduler.restore`` for
+        the exact semantics and membership-verification rules).  The
+        engine must be assembled from the same checkpoints/membership
+        the journal was written under.  Returns the scheduler."""
+        from repro.serving.resilience import ResilientScheduler
+
+        return ResilientScheduler.restore(self, journal_dir, **kwargs)
 
     @property
     def stacked_params(self):
@@ -1056,13 +1169,17 @@ class ServingEngine:
 
     def submit(
         self, key, text_emb: jnp.ndarray | None = None,
-        batch_size: int | None = None,
+        batch_size: int | None = None, *,
+        deadline_s: float | None = None,
     ) -> PendingRequest:
         """Enqueue a request; returns a handle resolved by ``flush()``.
 
         Noise is derived from the request's own key at flush time, so a
         coalesced request produces the same samples it would have produced
-        through ``generate`` with that key.
+        through ``generate`` with that key.  ``deadline_s`` bounds the
+        request's wall-clock lifetime: a request still queued past it is
+        moved to DEADLINE_EXCEEDED at the next ``flush()`` instead of
+        dispatching stale work (``result()`` raises the named error).
         """
         if batch_size is None:
             batch_size = text_emb.shape[0] if text_emb is not None else 1
@@ -1074,7 +1191,9 @@ class ServingEngine:
         req = PendingRequest(key=key, text_emb=self._cached_cond(text_emb),
                              batch_size=batch_size,
                              _membership=self._membership(),
-                             seq=self._next_seq())
+                             seq=self._next_seq(),
+                             deadline_s=deadline_s,
+                             submit_t=time.monotonic())
         self._queue.append(req)
         self.stats["requests"] += 1
         return req
@@ -1105,6 +1224,22 @@ class ServingEngine:
         """
         if not self._queue:
             return 0
+        now = time.monotonic()
+        live = []
+        for req in self._queue:
+            if (req.deadline_s is not None and req.submit_t is not None
+                    and now - req.submit_t >= req.deadline_s):
+                req.state = "DEADLINE_EXCEEDED"
+                req.error = DeadlineExceeded(
+                    f"request seq={req.seq} exceeded deadline_s="
+                    f"{req.deadline_s} before dispatch "
+                    f"({req.requeues} requeue(s))",
+                    seq=req.seq, requeues=req.requeues,
+                )
+                self.stats["deadline_exceeded"] += 1
+            else:
+                live.append(req)
+        self._queue = live
         groups: dict[tuple, list[PendingRequest]] = {}
         for req in self._queue:
             sig = (req.text_emb is not None,
@@ -1255,6 +1390,19 @@ def main() -> None:
     ap.add_argument("--arrival-every", type=int, default=2,
                     help="continuous mode: submit one request every N "
                          "scheduler ticks (staggered open-loop arrivals)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline in seconds "
+                         "(expired requests land in DEADLINE_EXCEEDED "
+                         "and result() raises the named error)")
+    ap.add_argument("--tick-budget", type=float, default=None,
+                    help="continuous mode: wall-clock watchdog budget "
+                         "per bucket launch; a slower tick fails only "
+                         "that bucket with bounded-backoff retry")
+    ap.add_argument("--journal-dir", default=None,
+                    help="continuous mode: write the crash-recovery "
+                         "request journal (submit/admit/tick/resolve "
+                         "records + row-state snapshots) here; recover "
+                         "with ServingEngine.restore(journal_dir)")
     ap.add_argument("--capacity", type=int, default=None,
                     help="expert-slot capacity (>= checkpoint count): pads "
                          "the store with masked EMPTY slots and enables "
@@ -1300,12 +1448,25 @@ def main() -> None:
     if engine.elastic:
         print(engine.membership_line())
     if args.continuous:
-        from repro.serving import ContinuousScheduler
-
-        sched = ContinuousScheduler(
-            engine, max_resident=args.max_resident,
-            max_queue_depth=args.max_queue,
+        from repro.serving import (
+            ContinuousScheduler, ResiliencePolicy, ResilientScheduler,
         )
+
+        resilient = (args.deadline_s is not None
+                     or args.tick_budget is not None
+                     or args.journal_dir is not None)
+        if resilient:
+            sched = ResilientScheduler(
+                engine, max_resident=args.max_resident,
+                max_queue_depth=args.max_queue,
+                policy=ResiliencePolicy(tick_budget_s=args.tick_budget),
+                journal_dir=args.journal_dir,
+            )
+        else:
+            sched = ContinuousScheduler(
+                engine, max_resident=args.max_resident,
+                max_queue_depth=args.max_queue,
+            )
         t0 = time.time()
         handles = []
         for r in range(args.requests):
@@ -1313,7 +1474,12 @@ def main() -> None:
             text = np.asarray(jax.random.normal(
                 key, (args.batch, dit_cfg.text_len, dit_cfg.text_dim)
             ))
-            handles.append(sched.submit(key, text))
+            if resilient:
+                handles.append(
+                    sched.submit(key, text, deadline_s=args.deadline_s)
+                )
+            else:
+                handles.append(sched.submit(key, text))
             for _ in range(max(args.arrival_every, 0)):
                 sched.step()
         sched.run_until_idle()

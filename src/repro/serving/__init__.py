@@ -1,5 +1,8 @@
 """Continuous batching over the serving engine (rolling mixed-timestep
-scheduler, admission control, shape bucketing, latency observability).
+scheduler, admission control, shape bucketing, latency observability),
+plus the serving resilience layer (request deadlines, step watchdogs,
+expert circuit breakers, crash-recoverable request journal — see
+``docs/resilience.md``).
 
 ``python -m repro.serving`` runs a deterministic self-check smoke
 (staggered rolling vs sequential ``generate``, asserted bitwise).
@@ -7,6 +10,18 @@ scheduler, admission control, shape bucketing, latency observability).
 
 from repro.serving.batch import RollingBatch
 from repro.serving.metrics import LatencyRecorder, RequestTiming, percentile
+from repro.serving.resilience import (
+    CircuitBreaker,
+    DeadlineExceeded,
+    JournalRestoreError,
+    RequestError,
+    RequestFailed,
+    RequestJournal,
+    RequestTimeout,
+    ResiliencePolicy,
+    ResilientScheduler,
+    TickBudgetExceeded,
+)
 from repro.serving.scheduler import (
     AdmissionError,
     ContinuousScheduler,
@@ -15,10 +30,20 @@ from repro.serving.scheduler import (
 
 __all__ = [
     "AdmissionError",
+    "CircuitBreaker",
     "ContinuousScheduler",
+    "DeadlineExceeded",
+    "JournalRestoreError",
     "LatencyRecorder",
     "QueueBackpressure",
+    "RequestError",
+    "RequestFailed",
+    "RequestJournal",
+    "RequestTimeout",
     "RequestTiming",
+    "ResiliencePolicy",
+    "ResilientScheduler",
     "RollingBatch",
+    "TickBudgetExceeded",
     "percentile",
 ]

@@ -56,6 +56,16 @@ def _scatter_text(text, idx, emb):
 
 
 @jax.jit
+def _scatter_restore(x, t_idx, slot_idx, slot_w, idx, xv, tv, siv, swv):
+    return (
+        x.at[idx].set(xv),
+        t_idx.at[idx].set(tv),
+        slot_idx.at[idx].set(siv),
+        slot_w.at[idx].set(swv),
+    )
+
+
+@jax.jit
 def _scatter_t(t_idx, idx, value):
     return t_idx.at[idx].set(value)
 
@@ -134,6 +144,10 @@ class RollingBatch:
         """Resident requests, oldest (lowest seq) first."""
         return [self._by_seq[s] for s in sorted(self._order)]
 
+    def rows_of(self, seq: int) -> list[int]:
+        """The ordered rows a resident request occupies (sample order)."""
+        return list(self._rows_of[seq])
+
     # -- admission / release ------------------------------------------------
 
     def admit(self, req, noise: jax.Array) -> list[int]:
@@ -166,6 +180,62 @@ class RollingBatch:
         self._order.append(req.seq)
         self._by_seq[req.seq] = req
         return rows
+
+    def admit_restored(
+        self, req, x, t_idx, slot_idx, slot_w,
+    ) -> list[int]:
+        """Re-admit a request at a journal-snapshot row state.
+
+        The crash-recovery path (``serving.resilience.RequestJournal``):
+        instead of fresh key-derived noise at ``t=0``, the request's rows
+        are written back exactly as the snapshot captured them — latent,
+        step index, and routing slots — so the compiled step resumes the
+        *identical* trajectory (``sample_ensemble_step`` refreshes
+        routing on each row's own ``t_idx`` phase; everything else is a
+        pure function of this row state).  Conditioning rows re-scatter
+        from the request handle as on first admission.
+        """
+        free = [i for i, r in enumerate(self.rows) if r is None]
+        if len(free) < req.batch_size:
+            raise RuntimeError(
+                f"bucket has {len(free)} free rows < batch_size "
+                f"{req.batch_size} (restore admission should gate this)"
+            )
+        rows = free[: req.batch_size]
+        idx = jnp.asarray(rows, jnp.int32)
+        t_np = np.asarray(t_idx, np.int32)
+        self.x, self.t_idx, self.slot_idx, self.slot_w = _scatter_restore(
+            self.x, self.t_idx, self.slot_idx, self.slot_w, idx,
+            jnp.asarray(x, jnp.float32), jnp.asarray(t_np),
+            jnp.asarray(slot_idx, jnp.int32),
+            jnp.asarray(slot_w, jnp.float32),
+        )
+        self.t_host[rows] = t_np
+        if self.text is not None:
+            self.text = _scatter_text(
+                self.text, idx, jnp.asarray(req.text_emb, jnp.float32)
+            )
+        for i in rows:
+            self.rows[i] = req
+        self._rows_of[req.seq] = rows
+        self._order.append(req.seq)
+        self._by_seq[req.seq] = req
+        return rows
+
+    def row_state(self, seq: int) -> dict:
+        """Host snapshot of one resident request's row state (the
+        journal's latent-snapshot payload).  Materializes the request's
+        rows of ``x``/``slot_idx``/``slot_w`` (a device→host read — the
+        snapshot cadence pays this, never the per-tick event path) and
+        reads ``t`` from the host mirror."""
+        rows = self._rows_of[seq]
+        idx = jnp.asarray(rows, jnp.int32)
+        return {
+            "x": np.asarray(_take_rows(self.x, idx)),
+            "t": self.t_host[rows].copy(),
+            "slot_idx": np.asarray(_take_rows(self.slot_idx, idx)),
+            "slot_w": np.asarray(_take_rows(self.slot_w, idx)),
+        }
 
     def release(self, req, *, finished: bool = False) -> list[int]:
         """Free ``req``'s rows (failure path or post-resolution).

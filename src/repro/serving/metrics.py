@@ -33,15 +33,17 @@ class RequestTiming:
     admit_step: int | None = None
 
 
-def percentile(values: list[float], q: float) -> float:
+def percentile(values: list[float], q: float) -> float | None:
     """Nearest-rank percentile: smallest value covering ``q``% of samples.
 
     ``rank = ceil(q/100 · n)`` (1-indexed) over the sorted values.
     Deterministic, interpolation-free, and exact for test assertions.
-    Returns 0.0 on an empty series.
+    An empty series has no percentiles: returns None (never a made-up
+    0.0 that would read as "zero latency" in ``engine.stats``); a
+    single-sample series returns that sample for every ``q``.
     """
     if not values:
-        return 0.0
+        return None
     s = sorted(values)
     rank = max(1, -(-int(q * len(s)) // 100))  # ceil(q*n/100), >= 1
     return s[min(rank, len(s)) - 1]
@@ -109,22 +111,26 @@ class LatencyRecorder:
         return self.images / span
 
     def snapshot(self) -> dict:
-        """Flat summary dict (merged into ``ServingEngine.stats``)."""
+        """Flat summary dict (merged into ``ServingEngine.stats``).
+
+        Percentile keys are OMITTED while their series is empty —
+        publishing a placeholder would poison ``engine.stats`` with
+        fake zero-latency figures that dashboards/benches can't tell
+        from real ones (regression-tested in tests/test_resilience.py).
+        """
         out = {
             "completed_requests": float(self.completed),
             "completed_images": float(self.images),
             "throughput_img_s": self.throughput(),
         }
-        for name, series in (
-            ("queue_wait", self.queue_wait_s),
-            ("latency", self.e2e_s),
+        for name, series, unit in (
+            ("queue_wait", self.queue_wait_s, "s"),
+            ("latency", self.e2e_s, "s"),
+            ("queue_wait", self.queue_wait_steps, "steps"),
+            ("latency", self.e2e_steps, "steps"),
         ):
             for q in (50, 95, 99):
-                out[f"{name}_p{q}_s"] = percentile(series, q)
-        for name, series in (
-            ("queue_wait", self.queue_wait_steps),
-            ("latency", self.e2e_steps),
-        ):
-            for q in (50, 95, 99):
-                out[f"{name}_p{q}_steps"] = percentile(series, q)
+                p = percentile(series, q)
+                if p is not None:
+                    out[f"{name}_p{q}_{unit}"] = p
         return out

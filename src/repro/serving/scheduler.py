@@ -39,6 +39,13 @@ Layering:
   steps; each tick folds the percentile snapshot into
   ``engine.stats`` (``latency_p50_s`` …) and :meth:`line` renders the
   one-line summary the serve CLI prints.
+* **resilience hooks** — three overridable no-op seams
+  (:meth:`_admission_blocked`, :meth:`_on_admit`,
+  :meth:`_accept_result`) let ``repro.serving.resilience``'s
+  :class:`~repro.serving.resilience.ResilientScheduler` layer request
+  deadlines, step watchdogs, expert circuit breakers, and a
+  crash-recoverable journal on top of this class without forking the
+  tick loop.
 
 Bitwise parity: a row admitted at tick ``n`` sees exactly the step
 sequence a dedicated ``generate`` call with its key would run (row
@@ -240,18 +247,28 @@ class ContinuousScheduler:
         return max(waits, default=0)
 
     def line(self) -> str:
-        """One-line scheduler summary (the serve CLI prints it)."""
+        """One-line scheduler summary (the serve CLI prints it).
+
+        Percentile fields are absent from the snapshot until the first
+        request resolves (empty-window percentiles are None, not 0.0 —
+        see ``metrics.percentile``), so the line degrades to "-" rather
+        than printing garbage or raising on a cold scheduler."""
         s = self.metrics.snapshot()
+
+        def f(key, scale=1.0, fmt=".0f"):
+            v = s.get(key)
+            return "-" if v is None else format(v * scale, fmt)
+
         return (
             f"scheduler: step={self.step_count} "
             f"resident={self.num_resident}/{self.max_resident} "
             f"queued={len(self._queue)} "
             f"done={self.metrics.completed} "
             f"({s['throughput_img_s']:.1f} img/s) "
-            f"wait p50={s['queue_wait_p50_steps']:.0f} "
-            f"p95={s['queue_wait_p95_steps']:.0f} steps "
-            f"e2e p50={s['latency_p50_s'] * 1e3:.0f} "
-            f"p95={s['latency_p95_s'] * 1e3:.0f} ms"
+            f"wait p50={f('queue_wait_p50_steps')} "
+            f"p95={f('queue_wait_p95_steps')} steps "
+            f"e2e p50={f('latency_p50_s', 1e3)} "
+            f"p95={f('latency_p95_s', 1e3)} ms"
         )
 
     # -- internals ----------------------------------------------------------
@@ -271,7 +288,7 @@ class ContinuousScheduler:
         rest: list = []
         for req in self._queue:
             sig = self._sig(req)
-            if sig in blocked:
+            if sig in blocked or self._admission_blocked(sig):
                 rest.append(req)
                 continue
             bucket = self._buckets.get(sig)
@@ -295,7 +312,25 @@ class ContinuousScheduler:
             # routing slots ceil(S/R) times over its life.
             r = max(1, eng.sampler.plan_refresh_every)
             eng.stats["plan_refreshes"] += -(-eng.sampler.num_steps // r)
+            self._on_admit(req, bucket)
         self._queue = rest
+
+    # -- resilience hooks (no-ops here; ResilientScheduler overrides) -------
+
+    def _admission_blocked(self, sig: tuple) -> bool:
+        """Extra per-bucket admission gate (e.g. retry backoff windows)."""
+        return False
+
+    def _on_admit(self, req, bucket: RollingBatch) -> None:
+        """Called once per admitted request (e.g. journal the admit)."""
+
+    def _accept_result(self, bucket: RollingBatch, req, out, rows) -> bool:
+        """Vet a finished request's latents before it resolves DONE.
+
+        ``rows`` are the bucket rows the request occupied (already
+        released).  Return False to veto: the hook owns the terminal
+        state + bookkeeping and ``_collect`` skips the DONE path."""
+        return True
 
     def _make_bucket(self, sig: tuple, req) -> RollingBatch:
         has_text, tail, _epoch = sig
@@ -451,7 +486,10 @@ class ContinuousScheduler:
             # forces a device sync, so ticks pipeline asynchronously and
             # only result() materialization blocks.
             for req in bucket.finished_requests():
+                rows = bucket.rows_of(req.seq)
                 out = bucket.resolve(req)
+                if not self._accept_result(bucket, req, out, rows):
+                    continue
                 req._result = out
                 req.done = True
                 req.state = "DONE"

@@ -396,7 +396,9 @@ def test_percentile_nearest_rank():
     assert percentile(vals, 99) == 99.0
     assert percentile([7.0], 50) == 7.0
     assert percentile([7.0], 99) == 7.0
-    assert percentile([], 50) == 0.0
+    # an empty window has no percentiles — None, never a fake 0.0
+    assert percentile([], 50) is None
+    assert percentile([], 99) is None
     assert percentile([3.0, 1.0, 2.0], 50) == 2.0   # order-insensitive
 
 

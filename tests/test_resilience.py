@@ -1,0 +1,509 @@
+"""Serving resilience layer: deadlines, watchdog, breakers, journal.
+
+Covers ``repro.serving.resilience`` end to end:
+  (a) deadlines — ``max_steps`` tick bounds and ``deadline_s``
+      wall-clock bounds expire queued AND resident requests into the
+      DEADLINE_EXCEEDED terminal state with a named error carrying the
+      request id + requeue count; also under degraded membership
+      (live < k) and across a mid-flight eviction; the lockstep
+      ``flush()`` path sweeps the same way;
+  (b) result(timeout) — a bounded wait on an in-flight request raises
+      ``RequestTimeout`` instead of blocking forever, and FAILED
+      handles raise ``RequestFailed`` with seq + requeues attached;
+  (c) watchdog + retry backoff — a slow compiled launch trips the
+      wall-clock watchdog, fails only its bucket, and the bucket's
+      signature re-admits behind a deterministic (seeded) exponential
+      backoff window; persistent failures exhaust the requeue cap;
+  (d) circuit breakers — a runtime-poisoned expert's NaN escape is
+      attributed to the routed slots, trips them into PROBATION with
+      ZERO retraces, canary probes auto-restore healed slots, and the
+      arc is visible in ``membership_line()`` + ``engine.stats``;
+  (e) crash-recoverable journal — kill at every step index and restore
+      onto a fresh engine: outputs are bitwise identical to an
+      uninterrupted twin; diverged membership is refused loudly;
+  (f) metrics regressions — empty-window percentiles are None (absent
+      from snapshots/stats, "-" in the summary line), single-sample
+      percentiles are the sample;
+  (g) RT305 — the unbounded-retry lint rule fires on while-True
+      dispatch loops and uncapped requeue bumps, stays quiet on
+      bounded/backoff shapes, and ships in the default rule set.
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import textwrap
+
+from repro.analysis.astlint import lint_source
+from repro.analysis.rules import default_rules
+from repro.analysis.sanitize import assert_no_retrace
+from repro.core import SamplerConfig
+from repro.launch.chaos import (
+    ChaosScheduler,
+    FakeClock,
+    build_engine,
+    run_kill_restore,
+)
+from repro.launch.faults import heal_expert_runtime, poison_expert_runtime
+from repro.launch.serve import ServingEngine
+from repro.launch.sharded_parity import toy_ensemble
+from repro.serving import (
+    DeadlineExceeded,
+    JournalRestoreError,
+    RequestFailed,
+    RequestTimeout,
+    ResiliencePolicy,
+    ResilientScheduler,
+    percentile,
+)
+
+KEY = jax.random.PRNGKey(0)
+LATENT = (4, 4, 2)
+TEXT_TAIL = (5, 6)
+SAMPLER = SamplerConfig(num_steps=6, cfg_scale=3.0,
+                        strategy="topk", top_k=2)
+EXPERTS, PARAMS, ROUTER_FN, _ = toy_ensemble(8)
+
+
+def _engine(k=8, **kw):
+    return ServingEngine(
+        experts=EXPERTS[:k], expert_params=PARAMS[:k],
+        router_fn=ROUTER_FN, latent_shape=LATENT, sampler=SAMPLER, **kw,
+    )
+
+
+def _fake_clock():
+    c = itertools.count()
+    return lambda: float(next(c))
+
+
+def _text(i, bs):
+    key = jax.random.PRNGKey(100 + i)
+    return key, jax.random.normal(
+        jax.random.fold_in(key, 1), (bs,) + TEXT_TAIL, jnp.float32
+    )
+
+
+# --- (a) deadlines -----------------------------------------------------------
+
+
+def test_max_steps_deadline_expires_resident():
+    sched = ResilientScheduler(_engine(), max_resident=2,
+                               clock=_fake_clock())
+    h = sched.submit(KEY, None, 1, max_steps=3)
+    for _ in range(3):
+        sched.step()
+    assert h.state == "RESIDENT"        # max_steps=3 buys 3 full ticks
+    sched.step()                        # expires at the NEXT boundary
+    assert h.state == "DEADLINE_EXCEEDED"
+    with pytest.raises(DeadlineExceeded) as ei:
+        h.result()
+    assert ei.value.seq == h.seq
+    assert ei.value.requeues == 0
+    assert f"seq={h.seq}" in str(ei.value)
+    assert sched.engine.stats["deadline_exceeded"] == 1
+    # its rows were freed: the bucket drains to empty
+    assert sched.num_resident == 0
+
+
+def test_generous_max_steps_resolves():
+    sched = ResilientScheduler(_engine(), max_resident=2,
+                               clock=_fake_clock())
+    h = sched.submit(KEY, None, 1, max_steps=4 * SAMPLER.num_steps)
+    sched.run_until_idle()
+    assert h.state == "DONE"
+    assert np.isfinite(np.asarray(h.result())).all()
+
+
+def test_deadline_s_expires_queued_request():
+    clock = _fake_clock()
+    sched = ResilientScheduler(_engine(), max_resident=1, clock=clock)
+    h0 = sched.submit(KEY, None, 1)                     # hogs the row
+    h1 = sched.submit(jax.random.fold_in(KEY, 1), None, 1,
+                      deadline_s=2.0)                   # starves in queue
+    sched.step()
+    assert h0.state == "RESIDENT" and h1.state == "QUEUED"
+    for _ in range(4):                                  # fake clock marches
+        sched.step()
+    assert h1.state == "DEADLINE_EXCEEDED"
+    with pytest.raises(DeadlineExceeded):
+        h1.result()
+    sched.run_until_idle()
+    assert h0.state == "DONE"           # the resident was never touched
+
+
+def test_deadline_under_degraded_membership():
+    # live (1) < k (2): the engine serves degraded; deadlines must still
+    # fire on schedule rather than hang with the short-handed router.
+    eng = _engine(capacity=8)
+    for e in range(1, 8):
+        eng.evict_expert(e)
+    assert eng.num_live_experts == 1
+    sched = ResilientScheduler(eng, max_resident=2, clock=_fake_clock())
+    h = sched.submit(KEY, None, 1, max_steps=2)
+    hd = sched.submit(jax.random.fold_in(KEY, 1), None, 1)
+    for _ in range(3):
+        sched.step()
+    assert h.state == "DEADLINE_EXCEEDED"
+    sched.run_until_idle()
+    assert hd.state == "DONE"
+    assert np.isfinite(np.asarray(hd.result())).all()
+
+
+def test_deadline_across_midflight_eviction():
+    eng = _engine(capacity=8)
+    sched = ResilientScheduler(eng, max_resident=2, clock=_fake_clock())
+    h = sched.submit(KEY, None, 1, max_steps=3)
+    sched.step()
+    eng.evict_expert(5)                 # epoch bump mid-flight
+    h2 = sched.submit(jax.random.fold_in(KEY, 1), None, 1)
+    for _ in range(3):
+        sched.step()
+    assert h.state == "DEADLINE_EXCEEDED"
+    sched.run_until_idle()
+    assert h2.state == "DONE"
+
+
+def test_lockstep_flush_sweeps_deadline():
+    eng = _engine()
+    h = eng.submit(KEY, None, 1, deadline_s=0.0)
+    live = eng.submit(jax.random.fold_in(KEY, 1), None, 1)
+    eng.flush()
+    assert h.state == "DEADLINE_EXCEEDED"
+    assert live.state == "DONE"
+    with pytest.raises(DeadlineExceeded) as ei:
+        h.result()
+    assert ei.value.seq == h.seq
+    assert eng.stats["deadline_exceeded"] == 1
+
+
+# --- (b) result(timeout) + named terminal errors -----------------------------
+
+
+def test_result_timeout_raises_named_error():
+    sched = ResilientScheduler(_engine(), max_resident=2,
+                               clock=_fake_clock())
+    h = sched.submit(KEY, None, 1)
+    with pytest.raises(RequestTimeout) as ei:
+        h.result(timeout=0.05)          # nobody ticks the scheduler
+    assert ei.value.seq == h.seq
+    assert "QUEUED" in str(ei.value)
+    sched.run_until_idle()
+    assert np.isfinite(np.asarray(h.result(timeout=1.0))).all()
+
+
+def test_failed_carries_seq_and_requeues():
+    eng = build_engine(max_request_requeues=1)
+    sched = ChaosScheduler(eng, max_resident=2, clock=FakeClock(),
+                           fail_ticks=range(1, 40))
+    h = sched.submit(KEY, None, 1)
+    for _ in range(40):
+        sched.step()
+        if h.state == "FAILED":
+            break
+    assert h.state == "FAILED"
+    with pytest.raises(RequestFailed) as ei:
+        h.result()
+    assert ei.value.seq == h.seq
+    assert ei.value.requeues == h.requeues
+    assert h.requeues == eng.max_request_requeues + 1
+    assert "injected dispatch failure" in str(ei.value)
+
+
+# --- (c) watchdog + backoff --------------------------------------------------
+
+
+def test_watchdog_trips_and_request_recovers():
+    eng = build_engine()
+    policy = ResiliencePolicy(tick_budget_s=0.25, seed=0)
+    sched = ChaosScheduler(eng, policy=policy, max_resident=2,
+                           clock=FakeClock(), slow_ticks={1})
+    h = sched.submit(KEY, None, 1)
+    sched.step()                        # slow launch -> watchdog trip
+    assert eng.stats["watchdog_trips"] == 1
+    assert h.state == "QUEUED" and h.requeues == 1
+    sig = sched._sig(h)
+    until, attempt = sched._backoff[sig]
+    assert attempt == 1 and until > sched.step_count
+    # blocked while backing off, admitted after the window passes
+    sched.step()
+    assert h.state == "QUEUED" if sched.step_count < until else True
+    sched.run_until_idle()
+    assert h.state == "DONE"
+    assert np.isfinite(np.asarray(h.result())).all()
+    assert eng.stats["request_requeues"] == 1
+
+
+def test_backoff_schedule_is_seeded_deterministic():
+    def trip_twice(seed):
+        eng = build_engine()
+        policy = ResiliencePolicy(tick_budget_s=0.25, seed=seed)
+        sched = ChaosScheduler(eng, policy=policy, max_resident=2,
+                               clock=FakeClock(), slow_ticks={1, 2, 3, 4})
+        sched.submit(KEY, None, 1)
+        delays = []
+        for _ in range(12):
+            sched.step()
+            for until, attempt in sched._backoff.values():
+                delays.append((sched.step_count, until, attempt))
+        return delays
+
+    assert trip_twice(7) == trip_twice(7)
+    # attempts grow monotonically per signature (exponential, capped)
+    attempts = [a for _, _, a in trip_twice(7)]
+    assert attempts == sorted(attempts)
+
+
+# --- (d) circuit breakers ----------------------------------------------------
+
+
+def test_breaker_trip_probation_restore_no_retrace():
+    eng = build_engine()
+    policy = ResiliencePolicy(probe_base_ticks=1, seed=0)
+    sched = ResilientScheduler(eng, policy=policy, max_resident=2,
+                               clock=_fake_clock())
+    # warm both compiled programs: the rolling uncond bucket and the
+    # batch-1 canary sampler the probes reuse
+    h = sched.submit(KEY, None, 1)
+    sched.run_until_idle()
+    assert h.state == "DONE"
+    assert sched._probe(0) is True
+    tripped_epoch = eng.membership_epoch
+
+    with assert_no_retrace(eng, budget=0):
+        # bucket snapshots pin their creation-time store; drop the warm
+        # bucket so the next admission snapshots the poisoned store
+        sched._buckets.clear()
+        # poison the top-logit slot — the toy router routes it always
+        clean = poison_expert_runtime(eng, 7)
+        h2 = sched.submit(jax.random.fold_in(KEY, 2), None, 2)
+        for _ in range(SAMPLER.num_steps + 1):
+            sched.step()
+        # NaN escaped at resolution -> routed slots tripped, request
+        # requeued under a FRESH (post-trip) membership snapshot
+        assert eng.stats["breaker_trips"] >= 1
+        assert "PROBATION" in eng.expert_health
+        assert eng.expert_health[7] == "PROBATION"
+        assert "probation=" in eng.membership_line()
+        assert eng.membership_epoch > tripped_epoch
+        sched.run_until_idle()
+        assert h2.state == "DONE"
+        assert h2.requeues == 1
+        assert np.isfinite(np.asarray(h2.result())).all()
+        # probes: innocent co-routed slots restore on their first
+        # canary; the poisoned slot keeps failing until healed
+        for _ in range(6):
+            sched.step()
+        assert eng.expert_health[7] == "PROBATION"
+        heal_expert_runtime(eng, 7, clean)
+        for _ in range(40):
+            sched.step()
+            if eng.expert_health[7] == "ACTIVE":
+                break
+        assert eng.expert_health[7] == "ACTIVE"
+        assert 7 not in sched.breaker.probation
+    s = eng.stats
+    assert s["breaker_probes"] >= 1
+    assert s["breaker_restores"] >= 1
+    assert s["degraded_steps"] == 0     # canaries bypass _run_compiled
+    line = eng.membership_line()
+    assert f"trips={s['breaker_trips']}" in line
+    assert f"restores={s['breaker_restores']}" in line
+
+
+def test_breaker_never_trips_last_live_expert():
+    eng = build_engine()
+    for e in range(1, 8):
+        eng.evict_expert(e)
+    sched = ResilientScheduler(eng, max_resident=2, clock=_fake_clock())
+    sched._trip([0])
+    assert eng.expert_health[0] == "ACTIVE"
+    assert eng.num_live_experts == 1
+    assert eng.stats["breaker_trips"] == 0
+
+
+def test_trip_and_restore_expert_engine_api():
+    eng = build_engine()
+    epoch = eng.membership_epoch
+    eng.trip_expert(5, reason="test")
+    assert eng.expert_health[5] == "PROBATION"
+    assert eng.num_live_experts == 7
+    assert eng.membership_epoch == epoch + 1
+    eng.restore_expert(5)
+    assert eng.expert_health[5] == "ACTIVE"
+    assert eng.num_live_experts == 8
+    assert eng.membership_epoch == epoch + 2
+    with pytest.raises(ValueError):
+        eng.restore_expert(0)           # ACTIVE isn't restorable
+
+
+# --- (e) crash-recoverable journal ------------------------------------------
+
+
+@pytest.mark.parametrize("kill_at", [1, 2, 3, 4, 5])
+def test_kill_and_restore_bitwise_parity(kill_at, tmp_path):
+    # run_kill_restore asserts bitwise equality against an
+    # uninterrupted twin internally; a regression raises in there.
+    v = run_kill_restore(0, str(tmp_path / f"k{kill_at}"),
+                         kill_at=kill_at)
+    assert v["bitwise_identical"] and v["requests"] == 3
+
+
+def test_restore_resumes_max_steps_deadline(tmp_path):
+    d = str(tmp_path / "j")
+    eng = build_engine()
+    sched = ResilientScheduler(eng, journal_dir=d, max_resident=2,
+                               clock=_fake_clock())
+    h = sched.submit(KEY, None, 1, max_steps=4)
+    sched.step()
+    sched.step()
+    del sched                           # crash two ticks in
+
+    eng2 = build_engine()
+    sched2 = ResilientScheduler.restore(eng2, d, clock=_fake_clock())
+    assert sched2.step_count == 2
+    restored = {r.seq: r for b in sched2._buckets.values()
+                for r in b.resident_requests()}
+    h2 = restored[h.seq]
+    assert h2.max_steps == 4            # tick budget survives the crash
+    sched2.step()
+    sched2.step()
+    assert h2.state == "RESIDENT"       # ticks 3, 4: still within budget
+    sched2.step()
+    assert h2.state == "DEADLINE_EXCEEDED"
+
+
+def test_restore_refuses_diverged_membership(tmp_path):
+    d = str(tmp_path / "j")
+    eng = build_engine()
+    sched = ResilientScheduler(eng, journal_dir=d, max_resident=2,
+                               clock=_fake_clock())
+    sched.submit(KEY, None, 1)
+    sched.step()
+    del sched
+
+    eng2 = build_engine()
+    eng2.evict_expert(2)                # different live set than journaled
+    with pytest.raises(JournalRestoreError) as ei:
+        ResilientScheduler.restore(eng2, d, clock=_fake_clock())
+    assert "diverged" in str(ei.value)
+
+
+def test_restore_requeues_never_admitted_submit(tmp_path):
+    d = str(tmp_path / "j")
+    eng = build_engine()
+    sched = ResilientScheduler(eng, journal_dir=d, max_resident=1,
+                               clock=_fake_clock())
+    h0 = sched.submit(KEY, None, 1)
+    h1 = sched.submit(jax.random.fold_in(KEY, 1), None, 1)  # starved
+    sched.step()
+    assert h1.state == "QUEUED"
+    del sched
+
+    # uninterrupted twin for the queued request's expected output
+    engt = build_engine()
+    schedt = ResilientScheduler(engt, max_resident=1,
+                                clock=_fake_clock())
+    t0 = schedt.submit(KEY, None, 1)
+    t1 = schedt.submit(jax.random.fold_in(KEY, 1), None, 1)
+    schedt.run_until_idle()
+
+    eng2 = build_engine()
+    sched2 = ResilientScheduler.restore(eng2, d, clock=_fake_clock())
+    assert len(sched2._queue) == 1 and sched2._queue[0].seq == h1.seq
+    restored = {r.seq: r for b in sched2._buckets.values()
+                for r in b.resident_requests()}
+    restored.update({r.seq: r for r in sched2._queue})
+    sched2.run_until_idle()
+    for seq, twin in ((h0.seq, t0), (h1.seq, t1)):
+        assert np.array_equal(np.asarray(restored[seq].result()),
+                              np.asarray(twin.result()))
+
+
+# --- (f) metrics regressions -------------------------------------------------
+
+
+def test_single_sample_percentile_is_the_sample():
+    assert percentile([42.0], 50) == 42.0
+    assert percentile([42.0], 95) == 42.0
+    assert percentile([42.0], 99) == 42.0
+
+
+def test_cold_scheduler_stats_and_line_have_no_garbage():
+    eng = _engine()
+    sched = ResilientScheduler(eng, max_resident=2, clock=_fake_clock())
+    sched.step()                        # tick with zero completions
+    for k in ("latency_p50_s", "latency_p95_s", "queue_wait_p50_steps"):
+        assert k not in eng.stats       # absent, not 0.0
+    line = sched.line()
+    assert "p50=-" in line and "p95=-" in line
+    # once a request resolves, the percentiles appear
+    sched.submit(KEY, None, 1)
+    sched.run_until_idle()
+    assert "latency_p50_s" in eng.stats
+    assert "p50=-" not in sched.line()
+
+
+# --- (g) RT305 ---------------------------------------------------------------
+
+
+def _lint(src):
+    return lint_source("<test>", textwrap.dedent(src), default_rules())
+
+
+def test_rt305_flags_unbounded_dispatch_loop():
+    findings = _lint("""
+        def drive(engine):
+            while True:
+                try:
+                    engine.flush()
+                except Exception:
+                    continue
+    """)
+    assert any(f.rule == "RT305" for f in findings)
+
+
+def test_rt305_flags_uncapped_requeue_bump():
+    findings = _lint("""
+        def fail_bucket(req, queue):
+            req.requeues += 1
+            queue.append(req)
+    """)
+    assert any(f.rule == "RT305" for f in findings)
+
+
+def test_rt305_quiet_on_bounded_shapes():
+    findings = _lint("""
+        def drive(engine, max_attempts):
+            for attempt in range(max_attempts):
+                engine.flush()
+
+        def pump(engine):
+            while True:                   # bounded by the budget consult
+                if engine.attempts >= engine.max_request_requeues:
+                    break
+                engine.step()
+
+        def fail_bucket(req, queue, cap):
+            req.requeues += 1
+            if req.requeues > cap:
+                req.state = "FAILED"
+            else:
+                queue.append(req)
+
+        def batches(it):
+            while True:                   # generator loop, not a retry
+                yield next_batch(it)
+    """)
+    assert [f.rule for f in findings] == []
+
+
+def test_rt305_in_default_ruleset_and_src_clean():
+    from repro.analysis.rules import find_rule
+
+    cls = find_rule("RT305")
+    assert cls is not None and cls.slug == "unbounded-retry"
+    assert any(r.id == "RT305" for r in default_rules())
